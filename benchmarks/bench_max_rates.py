@@ -1,0 +1,56 @@
+"""Paper Tables 3/4: maximum operation + comparison rates.
+
+Measured on CPU (this container) and MODELED for the v5e target from the
+dry-run roofline artifacts (results/dryrun/comet_*.json): rate =
+comparisons_per_step / max(t_compute, t_memory, t_collective).  The paper's
+headline: 2-way 4.29e15 cmp/s SP (17472 K20X nodes), 3-way 5.70e15 cmp/s.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import jax.numpy as jnp
+
+from benchmarks.util import row, time_fn
+from repro.core.mgemm import mgemm_xla
+from repro.core.synthetic import random_integer_vectors
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+DRYRUN = os.path.join(HERE, "..", "results", "dryrun")
+
+
+def main():
+    rows = []
+    # measured single-CPU-core mGEMM comparison rate (1 comparison = 1 min
+    # + 1 add over a vector element pair)
+    V = random_integer_vectors(1024, 768, seed=0)
+    Vj = jnp.asarray(V)
+    t = time_fn(lambda v: mgemm_xla(v.T, v), Vj)
+    comps = 1024 * 768 * 768  # full matrix (measured kernel computes all)
+    rows.append(row("table3/cpu_core_2way", t, f"{comps / t:.3e}_cmp/s"))
+
+    # modeled v5e pod rates from dry-run artifacts
+    for path in sorted(glob.glob(os.path.join(DRYRUN, "comet_*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        terms = r["roofline"]
+        t_bound = max(terms["t_compute"], terms["t_memory"], terms["t_collective"])
+        comps = r.get("elementwise_comparisons", 0)
+        if not comps or t_bound <= 0:
+            continue
+        tag = os.path.basename(path).replace(".json", "")
+        chips = terms["n_devices"]
+        rows.append(
+            row(f"table3_4/v5e_model/{tag}", t_bound,
+                f"{comps / t_bound:.3e}_cmp/s_{chips}chips_"
+                f"bottleneck={terms['bottleneck']}")
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.util import print_rows
+
+    print_rows(main())

@@ -1,0 +1,52 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Prints one line per (arch x shape x mesh) cell with the three terms,
+the dominant bottleneck, MODEL_FLOPS ratio and modeled step time.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+DRYRUN = os.path.join(HERE, "..", "results", "dryrun")
+
+
+def load_cells(pattern: str = "*.json"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN, pattern))):
+        with open(path) as f:
+            cells.append((os.path.basename(path), json.load(f)))
+    return cells
+
+
+def fmt_cell(name, r):
+    t = r["roofline"]
+    ratio = r.get("useful_flops_ratio", 0.0)
+    t_bound = max(t["t_compute"], t["t_memory"], t["t_collective"])
+    frac = t["t_compute"] / t_bound if t_bound else 0.0
+    return (
+        f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:8s} "
+        f"comp={t['t_compute']:.3e} mem={t['t_memory']:.3e} "
+        f"coll={t['t_collective']:.3e} bound={t['bottleneck']:10s} "
+        f"roofline_frac={frac:.3f} useful={ratio:.2f}"
+    )
+
+
+def main():
+    rows = []
+    for name, r in load_cells():
+        if "roofline" not in r:
+            continue
+        print(fmt_cell(name, r))
+        t = r["roofline"]
+        t_bound = max(t["t_compute"], t["t_memory"], t["t_collective"])
+        rows.append((f"roofline/{r['arch']}_{r['shape']}_{r['mesh']}",
+                     t_bound * 1e6,
+                     f"bound={t['bottleneck']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Scaling (Figs 6-10) runs in a
+subprocess with 8 virtual devices; everything else runs on this process's
+single device.  Dry-run-derived rows appear when results/dryrun is populated
+(python -m repro.launch.dryrun --all).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_accel_ratio,
+        bench_kernel,
+        bench_max_rates,
+        bench_normalized,
+        bench_phewas_sample,
+        bench_scaling,
+        roofline_report,
+    )
+    from benchmarks.util import print_rows
+
+    modules = [
+        ("table1", bench_kernel),
+        ("table2", bench_accel_ratio),
+        ("fig6-10", bench_scaling),
+        ("table3-4", bench_max_rates),
+        ("table5", bench_phewas_sample),
+        ("table6", bench_normalized),
+        ("roofline", roofline_report),
+    ]
+    failed = []
+    for name, mod in modules:
+        try:
+            rows = mod.main()
+            if rows:
+                print_rows(rows)
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"FAILED: {failed}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Subprocess scaling harness (Figs 6-10): runs strong/weak scaling sweeps
+over virtual CPU devices and emits JSON.  Invoked by bench_scaling.py so the
+main benchmark process keeps the default single device.
+"""
+import json
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 " + os.environ.get("XLA_FLAGS", "")
+)
+
+import time  # noqa: E402
+
+import numpy as np  # noqa: E402
+
+
+def measure(way, n_f, n_v, n_pv, n_pr=1, n_st=1):
+    from repro.core.threeway import czek3_distributed
+    from repro.core.twoway import CometConfig, czek2_distributed
+    from repro.parallel.mesh import make_comet_mesh
+
+    from repro.core.synthetic import random_integer_vectors
+
+    V = random_integer_vectors(n_f, n_v, seed=0)
+    cfg = CometConfig(n_pv=n_pv, n_pr=n_pr, n_st=n_st)
+    mesh = make_comet_mesh(1, n_pv, n_pr)
+    run = (
+        (lambda: czek2_distributed(V, mesh, cfg))
+        if way == 2
+        else (lambda: czek3_distributed(V, mesh, cfg, stage=0))
+    )
+    out = run()  # warmup/compile
+    t0 = time.perf_counter()
+    out = run()
+    dt = time.perf_counter() - t0
+    n_results = out.num_pairs() if way == 2 else out.num_triples()
+    return {
+        "way": way, "n_f": n_f, "n_v": n_v, "n_pv": n_pv, "n_pr": n_pr,
+        "seconds": dt, "results": n_results,
+        "comparisons": n_results * n_f,
+        "rate": n_results * n_f / dt,
+        "rate_per_rank": n_results * n_f / dt / (n_pv * n_pr),
+    }
+
+
+def main():
+    results = {"strong_2way": [], "strong_3way": [], "weak_2way": [], "weak_3way": []}
+    # Fig 6 analog: strong scaling, fixed problem
+    for n_pv in (1, 2, 4, 8):
+        results["strong_2way"].append(measure(2, 512, 1024, n_pv))
+    for n_pv in (1, 2, 4):
+        results["strong_3way"].append(measure(3, 64, 96, n_pv))
+    # Figs 7-10 analog: weak scaling, fixed per-rank work
+    for n_pv in (1, 2, 4, 8):
+        results["weak_2way"].append(measure(2, 512, 512 * n_pv, n_pv))
+    for n_pv in (1, 2, 4):
+        results["weak_3way"].append(measure(3, 64, 48 * n_pv, n_pv))
+    print(json.dumps(results))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,30 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds per call (blocks on jax outputs)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def row(name: str, seconds: float, derived: str = "") -> tuple[str, float, str]:
+    return (name, seconds * 1e6, derived)
+
+
+def print_rows(rows):
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,1 @@
+from repro.configs.registry import get_config, get_smoke_config, list_archs  # noqa: F401

@@ -1,0 +1,75 @@
+"""The paper's own workload configs — selectable archs like the LM ones.
+
+``comet_2way`` / ``comet_3way`` reproduce the paper's Titan weak-scaling
+per-node shapes (§6.6/§6.7) on v5e pods.  The (n_pf, n_pv, n_pr)
+decomposition follows the paper's tuning rules for the fixed chip counts
+(256 single-pod / 512 multi-pod):
+
+* 2-way (§6.6): n_pr = ceil((n_pv/2 + 1) / l) — we pick n_pr=4 so the ring
+  has ~2x more steps than replicas (load l ~ 8-9 blocks/rank).
+* 3-way (§6.7): n_pr soaks up (n_pv+1)(n_pv+2) slices; it GROWS with scale
+  (the paper ran n_pr ~ 500 at 14880 nodes), keeping l ~ 10-20.
+* metric outputs are bf16 on-device (the paper writes 1-byte metrics in
+  production, §6.8); staging (n_st) bounds the per-stage output exactly as
+  in the paper.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class CometArchConfig:
+    name: str
+    way: int  # 2 or 3
+    n_f: int  # fields per vector
+    n_vp: int  # vectors per pv-rank (weak scaling: fixed per rank)
+    n_pf: int = 1
+    n_pr_single: int = 4  # 256-chip decomposition: n_pv = 256/(n_pf*n_pr)
+    n_pr_multi: int = 4  # 512-chip decomposition
+    n_st: int = 1  # 3-way stages
+    impl: str = "xla"
+    levels: int | None = None  # set -> MXU level-decomposition path
+    out_dtype: str = "bfloat16"
+    ring_dtype: str = "float32"  # int8 -> 4x less ICI wire (exact for ints)
+
+    @property
+    def family(self) -> str:
+        return "comet"
+
+    def decomposition(self, chips: int, multi_pod: bool) -> tuple[int, int, int]:
+        n_pr = self.n_pr_multi if multi_pod else self.n_pr_single
+        n_pv = chips // (self.n_pf * n_pr)
+        return self.n_pf, n_pv, n_pr
+
+
+# Paper §6.6 single-precision case: n_f=10,000, n_vp=12,288 per rank.
+CONFIG_2WAY = CometArchConfig(
+    name="comet_2way", way=2, n_f=10000, n_vp=12288,
+    n_pr_single=4, n_pr_multi=4,
+)
+
+# Paper §6.7: n_f=20,000, n_vp=2,880 per rank, staged.
+# n_st=48 divides n_vp/6=480 (paper rule); pipeline depth 10 per stage.
+CONFIG_3WAY = CometArchConfig(
+    name="comet_3way", way=3, n_f=20000, n_vp=2880,
+    n_pr_single=16, n_pr_multi=32, n_st=48,
+)
+
+# Beyond-paper MXU variants: SNP-style {0,1,2} data via level decomposition.
+# (the 3-way inner GEMM also qualifies: X_j = min(V, v_j) keeps integer
+# levels <= L, so B_j = X_j^T ∘min V decomposes identically.)
+CONFIG_2WAY_MXU = CometArchConfig(
+    name="comet_2way_mxu", way=2, n_f=10000, n_vp=12288,
+    n_pr_single=4, n_pr_multi=4, impl="levels_xla", levels=2,
+)  # int8 ring measured separately as the §Perf A3 variant (--override)
+CONFIG_3WAY_MXU = CometArchConfig(
+    name="comet_3way_mxu", way=3, n_f=20000, n_vp=2880,
+    n_pr_single=16, n_pr_multi=32, n_st=48, impl="levels_xla", levels=2,
+    ring_dtype="int8",
+)
+
+SMOKE_2WAY = CometArchConfig(name="comet_2way-smoke", way=2, n_f=64, n_vp=24,
+                             n_pr_single=1, n_pr_multi=1, out_dtype="float32")
+SMOKE_3WAY = CometArchConfig(name="comet_3way-smoke", way=3, n_f=32, n_vp=12,
+                             n_pr_single=1, n_pr_multi=1, out_dtype="float32")

@@ -1,0 +1,111 @@
+"""Proportional Similarity (Czekanowski) metric definitions — paper §2.
+
+Reference (oracle) implementations of the 2-way and 3-way metrics.  These are
+deliberately simple O(n_f n_v^2) / O(n_f n_v^3) formulations used as the
+ground truth for every optimized path (Pallas kernels, distributed engines).
+
+Conventions
+-----------
+``V`` is the matrix of column vectors, shape ``(n_f, n_v)`` — fields (vector
+elements) down the rows, vectors across the columns, matching the paper's
+``V = [v_1 v_2 ... v_nv]``.
+
+2-way (paper §2.1):
+    c2(vi, vj)  = 2 * n2(vi, vj) / d2(vi, vj)
+    n2(vi, vj)  = sum_q min(v_iq, v_jq)
+    d2(vi, vj)  = sum_q v_iq + sum_q v_jq
+
+3-way (paper §2.2):
+    c3(vi,vj,vk) = (3/2) * n3 / d3
+    n3  = n2(vi,vj) + n2(vi,vk) + n2(vj,vk) - n3'(vi,vj,vk)
+    n3' = sum_q min(v_iq, v_jq, v_kq)
+    d3  = sum_q v_iq + v_jq + v_kq
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "czek2_numerators",
+    "czek2_metric",
+    "czek3_nprime",
+    "czek3_metric",
+    "czek2_from_parts",
+    "czek3_from_parts",
+]
+
+
+def czek2_numerators(V):
+    """All-pairs 2-way numerators: N[i, j] = sum_q min(V[q, i], V[q, j]).
+
+    Returns an (n_v, n_v) symmetric matrix (full, including redundant half).
+    """
+    V = jnp.asarray(V)
+    # (n_f, n_v, 1) vs (n_f, 1, n_v) -> (n_v, n_v)
+    return jnp.minimum(V[:, :, None], V[:, None, :]).sum(axis=0)
+
+
+def czek2_metric(V):
+    """All-pairs 2-way Proportional Similarity matrix c2[i, j]."""
+    V = jnp.asarray(V)
+    n = czek2_numerators(V)
+    s = V.sum(axis=0)  # (n_v,)
+    d = s[:, None] + s[None, :]
+    return 2.0 * n / d
+
+
+def czek2_from_parts(n2, si, sj):
+    """Assemble c2 from numerator(s) and the two row sums (broadcasts)."""
+    return 2.0 * n2 / (si + sj)
+
+
+def czek3_nprime(V):
+    """All-triples n3'[i,j,k] = sum_q min(V[q,i], V[q,j], V[q,k])."""
+    V = jnp.asarray(V)
+    m3 = jnp.minimum(
+        jnp.minimum(V[:, :, None, None], V[:, None, :, None]),
+        V[:, None, None, :],
+    )
+    return m3.sum(axis=0)
+
+
+def czek3_metric(V):
+    """All-triples 3-way Proportional Similarity tensor c3[i,j,k]."""
+    V = jnp.asarray(V)
+    n2 = czek2_numerators(V)
+    np3 = czek3_nprime(V)
+    s = V.sum(axis=0)
+    n3 = n2[:, :, None] + n2[:, None, :] + n2[None, :, :] - np3
+    d3 = s[:, None, None] + s[None, :, None] + s[None, None, :]
+    return 1.5 * n3 / d3
+
+
+def czek3_from_parts(n2_ij, n2_ik, n2_jk, np3, si, sj, sk):
+    """Assemble c3 from pairwise numerators, the 3-way term and row sums."""
+    n3 = n2_ij + n2_ik + n2_jk - np3
+    d3 = si + sj + sk
+    return 1.5 * n3 / d3
+
+
+# ---------------------------------------------------------------------------
+# numpy oracles (used by tests that want to stay outside jit / device memory)
+# ---------------------------------------------------------------------------
+
+def czek2_metric_np(V: np.ndarray) -> np.ndarray:
+    V = np.asarray(V, dtype=np.float64)
+    n = np.minimum(V[:, :, None], V[:, None, :]).sum(axis=0)
+    s = V.sum(axis=0)
+    return 2.0 * n / (s[:, None] + s[None, :])
+
+
+def czek3_metric_np(V: np.ndarray) -> np.ndarray:
+    V = np.asarray(V, dtype=np.float64)
+    n2 = np.minimum(V[:, :, None], V[:, None, :]).sum(axis=0)
+    np3 = np.minimum(
+        np.minimum(V[:, :, None, None], V[:, None, :, None]), V[:, None, None, :]
+    ).sum(axis=0)
+    s = V.sum(axis=0)
+    n3 = n2[:, :, None] + n2[:, None, :] + n2[None, :, :] - np3
+    d3 = s[:, None, None] + s[None, :, None] + s[None, None, :]
+    return 1.5 * n3 / d3

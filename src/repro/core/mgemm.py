@@ -1,0 +1,98 @@
+"""min-product GEMM ("mGEMM") — the paper's core kernel (§3.1).
+
+``mgemm(A, B)[i, j] = sum_q min(A[i, q], B[q, j])`` for A (m, k), B (k, n).
+
+The paper realizes this by patching MAGMA's GEMM stencil (FMA -> fmin+add) on
+NVIDIA GPUs.  On TPU the systolic MXU cannot evaluate ``min``, so the faithful
+path is a VPU (vector-unit) Pallas kernel; see ``repro/kernels/mgemm``.  This
+module provides the implementation registry and the XLA fallback used for CPU
+execution and as a jit-friendly building block inside the distributed engines.
+
+Implementations
+---------------
+``xla``     chunked jnp.minimum broadcast + reduce (runs everywhere; what the
+            distributed engines use on the CPU container).
+``pallas``  Pallas VPU kernel (TPU target; ``interpret=True`` on CPU tests).
+``levels``  beyond-paper MXU path: exact for L-level integer data via
+            level decomposition (see ``repro/kernels/mgemm_levels``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["mgemm", "mgemm_xla", "register_impl", "get_impl", "available_impls"]
+
+_IMPLS: dict[str, Callable] = {}
+
+
+def register_impl(name: str, fn: Callable) -> None:
+    _IMPLS[name] = fn
+
+
+def get_impl(name: str) -> Callable:
+    if name not in _IMPLS:
+        # late import so kernels register themselves without import cycles
+        import repro.kernels.mgemm.ops  # noqa: F401
+        import repro.kernels.mgemm_levels.ops  # noqa: F401
+    return _IMPLS[name]
+
+
+def available_impls() -> list[str]:
+    get_impl("xla")
+    return sorted(_IMPLS)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "out_dtype"))
+def mgemm_xla(A, B, *, chunk: int = 128, out_dtype=jnp.float32):
+    """Chunked XLA min-plus GEMM.
+
+    Memory is bounded by chunking the contraction axis: each step materializes
+    an (m, chunk, n) broadcast-minimum and reduces it.  Accumulation is fp32
+    (or fp64 under x64) regardless of input dtype, like the Pallas kernel.
+    """
+    A = jnp.asarray(A)
+    B = jnp.asarray(B)
+    m, k = A.shape
+    k2, n = B.shape
+    assert k == k2, f"contraction mismatch {A.shape} x {B.shape}"
+    acc_dt = jnp.promote_types(out_dtype, jnp.float32)
+
+    # pad k to a multiple of chunk with +inf-neutral values?  min() with pad
+    # values must not contribute: pad with 0 and subtract nothing — instead we
+    # pad both operands with 0 so min(0, 0) = 0 contributes 0.  (All genomics
+    # inputs are >= 0; for generality pad with the dtype minimum contribution
+    # 0 via masking.)
+    pad = (-k) % chunk
+    if pad:
+        A = jnp.pad(A, ((0, 0), (0, pad)))
+        B = jnp.pad(B, ((0, pad), (0, 0)))
+        k = k + pad
+    nc = k // chunk
+    A3 = A.reshape(m, nc, chunk).transpose(1, 0, 2)  # (nc, m, chunk)
+    B3 = B.reshape(nc, chunk, n)  # (nc, chunk, n)
+
+    def body(acc, ab):
+        a, b = ab  # (m, chunk), (chunk, n)
+        part = jnp.minimum(a[:, :, None], b[None, :, :]).astype(acc_dt).sum(axis=1)
+        return acc + part, None
+
+    acc0 = jnp.zeros((m, n), acc_dt)
+    acc, _ = jax.lax.scan(body, acc0, (A3, B3))
+    return acc.astype(out_dtype)
+
+
+register_impl("xla", mgemm_xla)
+
+
+def mgemm(A, B, *, impl: str = "xla", **kw):
+    """Dispatching entry point. ``impl`` in {'xla', 'pallas', 'levels', ...}."""
+    return get_impl(impl)(A, B, **kw)
+
+
+def mgemm_vt_v(V, *, impl: str = "xla", **kw):
+    """The paper's M = V^T ∘min V for V of shape (n_f, n_v)."""
+    return mgemm(V.T, V, impl=impl, **kw)

@@ -1,0 +1,106 @@
+"""2-way block-circulant schedule — paper §4.1, Figure 2(c), Algorithm 1.
+
+The all-pairs result matrix M (n_v x n_v, symmetric) is tiled into
+``n_pv x n_pv`` blocks by the vector-number decomposition.  A naive
+upper-triangle assignment load-imbalances block rows; the paper instead
+computes the *block-circulant* subset
+
+    step d = 0 .. floor(n_pv / 2):   rank p computes block (p, (p + d) % n_pv)
+
+which covers every unordered block pair exactly once and gives every rank the
+same number of blocks (±1 when n_pv is even: at the final step d = n_pv/2
+only ranks p < n_pv/2 compute, since block (p, p + n_pv/2) and block
+(p + n_pv/2, p) are transposes of each other).
+
+The extra ``n_pr`` axis round-robins ring steps across replicas:
+rank (p_v, p_r) executes step d iff d % n_pr == p_r  (Algorithm 1).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = ["TwoWayPlan", "covered_block_pairs", "global_pairs_of_block"]
+
+
+@dataclass(frozen=True)
+class TwoWayPlan:
+    n_pv: int  # ranks along the vector-number axis
+    n_pr: int  # round-robin replicas per block row
+
+    @property
+    def n_steps(self) -> int:
+        """Ring steps d = 0 .. n_pv // 2 inclusive."""
+        return self.n_pv // 2 + 1
+
+    @property
+    def slots_per_rank(self) -> int:
+        """Upper bound of steps any (p_v, p_r) rank executes (buffer size)."""
+        return math.ceil(self.n_steps / self.n_pr)
+
+    def steps_of_pr(self, p_r: int) -> list[int]:
+        return [d for d in range(self.n_steps) if d % self.n_pr == p_r]
+
+    def is_half_step(self, d: int) -> bool:
+        """Even n_pv final step: only ranks p_v < n_pv/2 compute."""
+        return self.n_pv % 2 == 0 and d == self.n_pv // 2
+
+    def rank_computes(self, p_v: int, p_r: int, d: int) -> bool:
+        if d % self.n_pr != p_r:
+            return False
+        if self.is_half_step(d):
+            return p_v < self.n_pv // 2
+        return True
+
+    def block_of(self, p_v: int, d: int) -> tuple[int, int]:
+        """(row_block, col_block) computed by rank row p_v at step d."""
+        return (p_v, (p_v + d) % self.n_pv)
+
+    # -- verification helpers (tests) ------------------------------------
+
+    def all_computed_blocks(self) -> list[tuple[int, int, int]]:
+        """Every (p_v, d, col_block) actually computed across ranks."""
+        out = []
+        for d in range(self.n_steps):
+            for p_v in range(self.n_pv):
+                if self.is_half_step(d) and p_v >= self.n_pv // 2:
+                    continue
+                out.append((p_v, d, (p_v + d) % self.n_pv))
+        return out
+
+    def work_per_rank(self) -> np.ndarray:
+        """(n_pv, n_pr) block counts — load balance check."""
+        w = np.zeros((self.n_pv, self.n_pr), np.int64)
+        for d in range(self.n_steps):
+            p_r = d % self.n_pr
+            for p_v in range(self.n_pv):
+                if self.is_half_step(d) and p_v >= self.n_pv // 2:
+                    continue
+                w[p_v, p_r] += 1
+        return w
+
+
+def covered_block_pairs(n_pv: int) -> list[tuple[int, int]]:
+    """Unordered block pairs covered by the circulant schedule (w/ diagonal)."""
+    plan = TwoWayPlan(n_pv, 1)
+    return [tuple(sorted((r, c))) for r, _, c in plan.all_computed_blocks()]
+
+
+def global_pairs_of_block(
+    row_block: int, col_block: int, n_vp: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Global (i, j) indices + validity mask for one computed block.
+
+    Returns (I, J, mask) each (n_vp, n_vp); mask excludes the redundant
+    lower-triangle + diagonal of diagonal blocks (i == j never a pair).
+    """
+    li = np.arange(n_vp)
+    I = row_block * n_vp + li[:, None] + np.zeros((1, n_vp), np.int64)
+    J = col_block * n_vp + li[None, :] + np.zeros((n_vp, 1), np.int64)
+    if row_block == col_block:
+        mask = li[:, None] < li[None, :]
+    else:
+        mask = np.ones((n_vp, n_vp), bool)
+    return I, J, mask

@@ -1,0 +1,122 @@
+"""Synthetic vector datasets — paper §5.
+
+Two generator families, mirroring the paper's test design:
+
+1. ``random_integer_vectors`` — every entry a random small integer.  Integer
+   values make fp sums *exact* (order-independent) as long as
+   ``n_f * max_value`` stays below the mantissa limit, which is what lets the
+   paper (and us) demand **bit-for-bit identical results across parallel
+   decompositions** and verify with an exact checksum.
+
+2. ``analytic_window_vectors`` — "randomized placement of entries specifically
+   chosen so that the correctness of every result value can be verified
+   analytically".  Our construction: vector i is the indicator of a circular
+   window of width w starting at offset ``perm[i] * stride`` in [0, n_f).
+   Then  n2(i, j)   = circular overlap of two windows  (closed form)
+         n3'(i,j,k) = circular overlap of three windows (closed form)
+   so every metric value is known without an O(n^2)/O(n^3) reference run.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = [
+    "random_integer_vectors",
+    "AnalyticWindows",
+    "analytic_window_vectors",
+]
+
+
+def random_integer_vectors(
+    n_f: int, n_v: int, *, max_value: int = 15, seed: int = 0, dtype=np.float32
+) -> np.ndarray:
+    """(n_f, n_v) matrix of integers in [0, max_value], fp-exact summable."""
+    # mantissa guard: exact integer accumulation requires n_f * max_value to be
+    # representable exactly: 2^24 for f32, 2^53 for f64.
+    limit = 2 ** (24 if dtype == np.float32 else 53)
+    assert n_f * max_value < limit, "sums would lose exactness"
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, max_value + 1, size=(n_f, n_v)).astype(dtype)
+
+
+def _circ_overlap(starts: np.ndarray, w: int, n_f: int) -> np.ndarray:
+    """Overlap size of circular windows [s, s+w) for every pair of starts.
+
+    starts: (..., 2) int array -> (...) overlap counts.  Requires 2*w <= n_f
+    so each pair of windows overlaps in at most one circular run.
+    """
+    a = starts[..., 0]
+    b = starts[..., 1]
+    d = np.abs(a - b)
+    d = np.minimum(d, n_f - d)  # circular distance
+    return np.maximum(0, w - d)
+
+
+@dataclass(frozen=True)
+class AnalyticWindows:
+    """Parameters of the analytic dataset + closed-form metric values."""
+
+    n_f: int
+    n_v: int
+    width: int
+    starts: np.ndarray  # (n_v,) window start offsets
+    value: float  # constant entry value inside the window
+
+    def n2(self, i, j) -> np.ndarray:
+        s = np.stack([self.starts[np.asarray(i)], self.starts[np.asarray(j)]], -1)
+        return self.value * _circ_overlap(s, self.width, self.n_f)
+
+    def nprime3(self, i, j, k) -> np.ndarray:
+        """Triple overlap: windows are intervals; use pairwise min overlap.
+
+        For circular windows of equal width with 2*w <= n_f, the triple
+        intersection is the min over the three pairwise intersections if the
+        three windows share a common point, else 0.  With equal widths the
+        common-point condition is implied when all three pairwise overlaps are
+        positive and the windows are "aligned"; we compute it exactly from
+        interval arithmetic on the unrolled circle instead of guessing.
+        """
+        i, j, k = (np.asarray(x) for x in (i, j, k))
+        si, sj, sk = self.starts[i], self.starts[j], self.starts[k]
+        w, n = self.width, self.n_f
+        # unroll: a circular window [s, s+w) intersected with others — try all
+        # shifts of +-n for j and k relative to i.
+        best = np.zeros(np.broadcast_shapes(si.shape, sj.shape, sk.shape), np.int64)
+        for dj in (-n, 0, n):
+            for dk in (-n, 0, n):
+                lo = np.maximum(np.maximum(si, sj + dj), sk + dk)
+                hi = np.minimum(np.minimum(si, sj + dj), sk + dk) + w
+                best = np.maximum(best, np.maximum(0, hi - lo))
+        return self.value * best
+
+    def sums(self) -> np.ndarray:
+        return np.full(self.n_v, self.value * self.width)
+
+    def c2(self, i, j) -> np.ndarray:
+        return 2.0 * self.n2(i, j) / (self.value * 2 * self.width)
+
+    def c3(self, i, j, k) -> np.ndarray:
+        n3 = self.n2(i, j) + self.n2(i, k) + self.n2(j, k) - self.nprime3(i, j, k)
+        return 1.5 * n3 / (self.value * 3 * self.width)
+
+
+def analytic_window_vectors(
+    n_f: int,
+    n_v: int,
+    *,
+    width: int | None = None,
+    value: float = 1.0,
+    seed: int = 0,
+    dtype=np.float32,
+) -> tuple[np.ndarray, AnalyticWindows]:
+    """Build the analytic dataset. Returns (V, AnalyticWindows)."""
+    width = width if width is not None else max(1, n_f // 4)
+    assert 2 * width <= n_f, "need 2*w <= n_f for single-run circular overlap"
+    rng = np.random.default_rng(seed)
+    starts = rng.integers(0, n_f, size=n_v)
+    V = np.zeros((n_f, n_v), dtype=dtype)
+    idx = (starts[None, :] + np.arange(width)[:, None]) % n_f  # (w, n_v)
+    V[idx, np.arange(n_v)[None, :]] = value
+    return V, AnalyticWindows(n_f=n_f, n_v=n_v, width=width, starts=starts, value=value)

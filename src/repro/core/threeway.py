@@ -1,0 +1,331 @@
+"""Distributed 3-way Proportional Similarity engine — paper §4.2, Algs 2-3.
+
+SPMD structure per rank (p_v, p_r) on the ("pf", "pv", "pr") mesh, computing
+stage ``s_t`` of the tetrahedral schedule in ``repro.core.plan3``:
+
+  Phase A (diagonal-edge block): 6 slices of the strict tetrahedron
+           a < b < c inside the rank's own block.
+  Phase B (face blocks): ring over dj; for each received block J, 6 slices of
+           the prism {(a in own) x (b < c in J)}.
+  Phase C (volume blocks): doubly-nested ring over (dk, dj) — Algorithm 2's
+           communication pipeline — computing ONE oriented 1/6-slice per
+           block (middle-id rule, ``plan3.vol_slice_rule``).
+
+Each slice runs Algorithm 3's inner pipeline as a *single batched mGEMM*:
+the pipeline axis (length L = n_vp/(6 n_st)) is folded into the GEMM M
+dimension via X[q, (l, t)] = min(left[q, l], pipe[q, j0 + t]), so
+
+    B[t, l, r] = sum_q min(pipe[q, j0+t], left[q, l], right[q, r])
+
+is one (m*L, n_fp) x (n_fp, m) min-plus GEMM — the TPU-friendly realization
+of the paper's "sequence of 2-way operations" that maximizes mGEMM size
+(their stated goal for the staging knob).  Pairwise numerators for the
+metric assembly are two (L, m) sliced mGEMMs + one (m, m) full mGEMM; all
+partials are psummed over "pf" in one fused collective per item.
+
+Round-robin: item sb executes iff sb % n_pr == p_r (lax.cond — compute is
+skipped, not masked).  Phases B/C run under ``lax.fori_loop`` with the ring
+``ppermute`` in the loop body, so the compiled program size is O(1) in n_pv
+(306 items at n_pv=16 compile as two nested loops).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import checksum as ck
+from repro.core.plan3 import ItemKind, ThreeWayPlan, PERMS
+from repro.core.twoway import CometConfig, pad_vectors
+
+__all__ = ["ThreeWayOutput", "czek3_distributed"]
+
+# lookup: (rank_own, rank_J, rank_K) base-3 -> permutation index (plan3.PERMS)
+_PERM_LUT = np.zeros(27, np.int32)
+for _i, _p in enumerate(PERMS):
+    _PERM_LUT[_p[0] * 9 + _p[1] * 3 + _p[2]] = _i
+
+
+def _vol_rule_traced(own, bj, bk):
+    """Traced (slice_axis, slice_idx) — must match plan3.vol_slice_rule."""
+    r_own = (own > bj).astype(jnp.int32) + (own > bk).astype(jnp.int32)
+    r_j = (bj > own).astype(jnp.int32) + (bj > bk).astype(jnp.int32)
+    r_k = 3 - r_own - r_j
+    axis = (r_j == 1) * 1 + (r_k == 1) * 2  # 0 if own is the middle id
+    idx = jnp.asarray(_PERM_LUT)[r_own * 9 + r_j * 3 + r_k]
+    return axis, idx
+
+
+def _item_metrics(
+    pipe, left, right, s_p, s_l, s_r, j0, *, kind: ItemKind, L: int, mgemm, out_dtype
+):
+    """Masked c3 slice (L, m, m) for one work item.
+
+    pipe/left/right: (n_fp, m) field-major blocks; s_*: (m,) row sums
+    (already psummed over pf); j0: traced pipeline offset.
+    """
+    n_fp, m = pipe.shape
+    ps = jax.lax.dynamic_slice(pipe, (0, j0), (n_fp, L))  # (n_fp, L)
+    # batched 3-way term: X[q, l*L + t] = min(left[q,l], ps[q,t])
+    X = jnp.minimum(left[:, :, None], ps[:, None, :]).reshape(n_fp, m * L)
+    B = mgemm(X.T, right).reshape(m, L, right.shape[1]).transpose(1, 0, 2)
+    # pairwise numerators
+    n2_pl = mgemm(ps.T, left)  # (L, m)
+    n2_pr = mgemm(ps.T, right)  # (L, m)
+    n2_lr = mgemm(left.T, right)  # (m, m)
+    B, n2_pl, n2_pr, n2_lr = jax.lax.psum((B, n2_pl, n2_pr, n2_lr), "pf")
+
+    sp = jax.lax.dynamic_slice(s_p, (j0,), (L,))
+    n3 = n2_pl[:, :, None] + n2_pr[:, None, :] + n2_lr[None, :, :] - B
+    d3 = sp[:, None, None] + s_l[None, :, None] + s_r[None, None, :]
+    c3 = 1.5 * n3 / jnp.maximum(d3, 1e-30)
+
+    jg = j0 + jnp.arange(L)  # global-in-block pipeline indices
+    li = jnp.arange(m)
+    if kind == ItemKind.DIAG:
+        mask = (li[None, :, None] < jg[:, None, None]) & (
+            li[None, None, :] > jg[:, None, None]
+        )
+    elif kind == ItemKind.FACE:
+        mask = jnp.broadcast_to(li[None, None, :] > jg[:, None, None], c3.shape)
+    else:
+        mask = jnp.ones(c3.shape, bool)
+    return jnp.where(mask, c3, 0).astype(out_dtype)
+
+
+def _threeway_program(Vl, *, cfg: CometConfig, plan: ThreeWayPlan, stage: int, out_dtype):
+    n_pv, n_pr, n_st = cfg.n_pv, cfg.n_pr, cfg.n_st
+    n_fp, m = Vl.shape
+    assert m % (6 * n_st) == 0, "n_vp must divide 6*n_st"
+    L = m // (6 * n_st)
+    mgemm = cfg.impl_fn()
+    slots = plan.slots_per_rank
+
+    pv = jax.lax.axis_index("pv")
+    pr = jax.lax.axis_index("pr")
+    perm = [((i + 1) % n_pv, i) for i in range(n_pv)]  # receive from upward
+
+    s_own = jax.lax.psum(Vl.astype(jnp.float32).sum(axis=0), "pf")
+    out0 = jnp.zeros((slots, L, m, m), out_dtype)
+
+    def j0_of(idx):
+        return L * (stage + n_st * idx)
+
+    def slot_of(sb):
+        return sb // n_pr + (pr < (sb % n_pr)).astype(sb.dtype if hasattr(sb, "dtype") else jnp.int32)
+
+    def emit(out, sb, execute, thunk):
+        """Conditionally compute a slice and store it at this rank's slot."""
+        def do(o):
+            c3 = thunk()
+            return jax.lax.dynamic_update_slice(
+                o, c3[None], (slot_of(sb), 0, 0, 0)
+            )
+        return jax.lax.cond(execute, do, lambda o: o, out)
+
+    # ---- Phase A: diagonal-edge block, 6 static slices --------------------
+    out = out0
+    for s in range(6):
+        execute = (s % n_pr) == pr
+        out = emit(
+            out,
+            jnp.int32(s),
+            execute,
+            lambda s=s: _item_metrics(
+                Vl, Vl, Vl, s_own, s_own, s_own, j0_of(s),
+                kind=ItemKind.DIAG, L=L, mgemm=mgemm, out_dtype=out_dtype,
+            ),
+        )
+
+    # ---- Phase B: face blocks, ring over dj -------------------------------
+    def face_body(dj, carry):
+        bufj, sbj, out = carry
+        bufj = jax.lax.ppermute(bufj, "pv", perm)
+        sbj = jax.lax.ppermute(sbj, "pv", perm)
+        for s in range(6):  # pipe = right = J; left = own
+            sb = 6 + s * (n_pv - 1) + (dj - 1)
+            execute = (sb % n_pr) == pr
+            out = emit(
+                out,
+                sb,
+                execute,
+                lambda s=s, bufj=bufj, sbj=sbj: _item_metrics(
+                    bufj, Vl, bufj, sbj, s_own, sbj, j0_of(s),
+                    kind=ItemKind.FACE, L=L, mgemm=mgemm, out_dtype=out_dtype,
+                ),
+            )
+        return bufj, sbj, out
+
+    bufj, sbj, out = jax.lax.fori_loop(
+        1, n_pv, face_body, (Vl, s_own, out)
+    ) if n_pv > 1 else (Vl, s_own, out)
+    # realign bufj to own block (it has advanced n_pv - 1 steps)
+    if n_pv > 1:
+        bufj = jax.lax.ppermute(bufj, "pv", perm)
+        sbj = jax.lax.ppermute(sbj, "pv", perm)
+
+    # ---- Phase C: volume blocks, doubly-nested ring (Algorithm 2) ---------
+    sb_base = 6 + 6 * (n_pv - 1)
+
+    def vol_inner(dj, carry):
+        dk, bufk, sbk, bufj, sbj, sb, out = carry
+        bufj = jax.lax.ppermute(bufj, "pv", perm)
+        sbj = jax.lax.ppermute(sbj, "pv", perm)
+        is_item = dj != dk
+        execute = jnp.logical_and(is_item, (sb % n_pr) == pr)
+
+        def thunk(bufk=bufk, sbk=sbk, bufj=bufj, sbj=sbj):
+            bj_id = jnp.remainder(pv + dj, n_pv)
+            bk_id = jnp.remainder(pv + dk, n_pv)
+            axis, idx = _vol_rule_traced(pv, bj_id, bk_id)
+            j0 = L * (stage + n_st * idx)
+            # roles by sliced axis: 0 -> own, 1 -> J, 2 -> K is the pipe
+            pipe, s_p = (
+                jax.lax.switch(
+                    axis,
+                    [
+                        lambda: (Vl, s_own),
+                        lambda: (bufj, sbj),
+                        lambda: (bufk, sbk),
+                    ],
+                )
+            )
+            left, s_l = jax.lax.switch(
+                axis,
+                [lambda: (bufj, sbj), lambda: (Vl, s_own), lambda: (Vl, s_own)],
+            )
+            right, s_r = jax.lax.switch(
+                axis,
+                [lambda: (bufk, sbk), lambda: (bufk, sbk), lambda: (bufj, sbj)],
+            )
+            return _item_metrics(
+                pipe, left, right, s_p, s_l, s_r, j0,
+                kind=ItemKind.VOL, L=L, mgemm=mgemm, out_dtype=out_dtype,
+            )
+
+        out = emit(out, sb, execute, thunk)
+        sb = sb + is_item.astype(sb.dtype)
+        return dk, bufk, sbk, bufj, sbj, sb, out
+
+    def vol_outer(dk, carry):
+        bufk, sbk, bufj, sbj, sb, out = carry
+        bufk = jax.lax.ppermute(bufk, "pv", perm)
+        sbk = jax.lax.ppermute(sbk, "pv", perm)
+        dk_, bufk, sbk, bufj, sbj, sb, out = jax.lax.fori_loop(
+            1, n_pv, vol_inner, (dk, bufk, sbk, bufj, sbj, sb, out)
+        )
+        # realign bufj to own block
+        bufj = jax.lax.ppermute(bufj, "pv", perm)
+        sbj = jax.lax.ppermute(sbj, "pv", perm)
+        return bufk, sbk, bufj, sbj, sb, out
+
+    if n_pv > 1:
+        _, _, _, _, _, out = jax.lax.fori_loop(
+            1, n_pv, vol_outer,
+            (Vl, s_own, bufj, sbj, jnp.int32(sb_base), out),
+        )
+    return out[None, None]
+
+
+@dataclass
+class ThreeWayOutput:
+    blocks: np.ndarray  # (n_pv, n_pr, slots, L, m, m)
+    plan: ThreeWayPlan
+    n_v: int
+    n_vp: int
+    stage: int
+
+    def entries(self):
+        """Yield (i, j, k, value) for every unique computed triple."""
+        n_pv, n_pr = self.plan.n_pv, self.plan.n_pr
+        m = self.n_vp
+        L = self.blocks.shape[3]
+        li = np.arange(m)
+        for p_v in range(n_pv):
+            for p_r in range(n_pr):
+                items = self.plan.items_of(p_v, p_r)
+                assert len(items) <= self.blocks.shape[2]
+                for slot, it in enumerate(items):
+                    own, bj, bk = it.blocks(p_v, n_pv)
+                    lo, _ = self.plan.sixth_bounds(m, it.slice_idx, self.stage)
+                    jg = lo + np.arange(L)
+                    vals = self.blocks[p_v, p_r, slot]  # (L, m, m)
+                    if it.kind == ItemKind.DIAG:
+                        pipe_b = left_b = right_b = own
+                        mask = (li[None, :, None] < jg[:, None, None]) & (
+                            li[None, None, :] > jg[:, None, None]
+                        )
+                    elif it.kind == ItemKind.FACE:
+                        pipe_b, left_b, right_b = bj, own, bj
+                        mask = np.broadcast_to(
+                            li[None, None, :] > jg[:, None, None], vals.shape
+                        )
+                    else:
+                        if it.slice_axis == 0:
+                            pipe_b, left_b, right_b = own, bj, bk
+                        elif it.slice_axis == 1:
+                            pipe_b, left_b, right_b = bj, own, bk
+                        else:
+                            pipe_b, left_b, right_b = bk, own, bj
+                        mask = np.ones(vals.shape, bool)
+                    T, Ll, R = np.meshgrid(jg, li, li, indexing="ij")
+                    gi = pipe_b * m + T
+                    gj = left_b * m + Ll
+                    gk = right_b * m + R
+                    mask = mask & (gi < self.n_v) & (gj < self.n_v) & (gk < self.n_v)
+                    if mask.any():
+                        yield gi[mask], gj[mask], gk[mask], vals[mask]
+
+    def dense(self) -> np.ndarray:
+        out = np.zeros((self.n_v,) * 3, self.blocks.dtype)
+        for I, J, K, V in self.entries():
+            idx = np.sort(np.stack([I, J, K]), axis=0)
+            out[idx[0], idx[1], idx[2]] = V
+        return out
+
+    def checksum(self) -> int:
+        return ck.combine([ck.raw_triples(I, J, K, V) for I, J, K, V in self.entries()])
+
+    def num_triples(self) -> int:
+        return sum(len(I) for I, _, _, _ in self.entries())
+
+
+def czek3_distributed(
+    V: np.ndarray, mesh: Mesh, cfg: CometConfig, stage: int = 0
+) -> ThreeWayOutput:
+    """Compute one stage of the unique 3-way metrics of V's columns."""
+    n_v = V.shape[1]
+    V = np.asarray(V)
+    # Algorithm 3's pipeline geometry needs the per-rank block size to split
+    # into 6 sixths x n_st stages: round n_vp up to a multiple of 6*n_st and
+    # zero-pad.  All pad columns land at the global tail, so global index ==
+    # padded column index and entries() masks them with < n_v.
+    unit = 6 * cfg.n_st
+    n_vp = -(-n_v // cfg.n_pv)
+    n_vp += (-n_vp) % unit
+    fp = (-V.shape[0]) % cfg.n_pf
+    Vp = np.pad(V, ((0, fp), (0, cfg.n_pv * n_vp - n_v)))
+    plan = ThreeWayPlan(cfg.n_pv, cfg.n_pr, cfg.n_st)
+    out_dtype = jnp.dtype(cfg.out_dtype)
+
+    fn = shard_map(
+        partial(_threeway_program, cfg=cfg, plan=plan, stage=stage, out_dtype=out_dtype),
+        mesh=mesh,
+        in_specs=P("pf", "pv"),
+        out_specs=P("pv", "pr", None, None, None, None),
+        check_vma=False,
+    )
+    blocks = jax.jit(fn, static_argnames=())(
+        jnp.asarray(Vp, dtype=jnp.dtype(cfg.ring_dtype))
+    )
+    L = n_vp // (6 * cfg.n_st)
+    blocks = np.asarray(blocks).reshape(
+        cfg.n_pv, cfg.n_pr, plan.slots_per_rank, L, n_vp, n_vp
+    )
+    return ThreeWayOutput(blocks=blocks, plan=plan, n_v=n_v, n_vp=n_vp, stage=stage)

@@ -1,0 +1,174 @@
+"""Distributed 2-way Proportional Similarity engine — paper §4.1, Algorithm 1.
+
+SPMD mapping (shard_map over a ("pf", "pv", "pr") mesh):
+
+* V (n_f, n_v) is sharded over "pf" (vector elements) and "pv" (vector
+  number), replicated over "pr".
+* Ring: at step d, every rank holds block (p_v + d) mod n_pv via
+  ``jax.lax.ppermute`` (the paper's pipelined send/recv; XLA's async
+  collective-permute scheduler overlaps it with the mGEMM, replacing the
+  paper's hand-rolled double buffering).
+* Block-circulant schedule: rank row p_v computes block (p_v, p_v + d);
+  the final step of an even ring is computed by the lower half only.
+* "pr" round-robin: step d executes on ranks with d % n_pr == p_r under
+  ``lax.cond`` (compute genuinely skipped, not masked).
+* "pf" reduction: numerator partials are ``psum`` over "pf"; row-sum
+  denominators are psummed once and ring-carried alongside V.
+
+Bit-exactness contract (paper §5): with integer-valued inputs every
+numerator is an exact fp integer regardless of summation order, so any
+(n_pf, n_pv, n_pr) decomposition produces bit-identical metric values —
+verified by checksum in tests/distributed_harness.py.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+
+from repro.core import checksum as ck
+from repro.core.mgemm import get_impl
+from repro.core.plan2 import TwoWayPlan, global_pairs_of_block
+
+__all__ = ["CometConfig", "TwoWayOutput", "czek2_distributed", "pad_vectors"]
+
+
+@dataclass(frozen=True)
+class CometConfig:
+    """Decomposition + implementation knobs (paper's n_pf / n_pv / n_pr / n_st)."""
+
+    n_pf: int = 1
+    n_pv: int = 1
+    n_pr: int = 1
+    n_st: int = 1  # 3-way staging
+    impl: str = "xla"  # mgemm implementation registry key
+    levels: int = 2  # for impl='levels*'
+    out_dtype: str = "float32"
+    # ring payload dtype (beyond-paper §Perf): int8 quarters the ICI wire
+    # traffic of the V ring — EXACT for integer data with values <= 127
+    # (SNP {0,1,2} codes); metric math still accumulates in fp32.
+    ring_dtype: str = "float32"
+
+    @property
+    def n_ranks(self) -> int:
+        return self.n_pf * self.n_pv * self.n_pr
+
+    def impl_fn(self):
+        fn = get_impl(self.impl)
+        if self.impl.startswith("levels"):
+            return partial(fn, levels=self.levels)
+        return fn
+
+
+def pad_vectors(V: np.ndarray, cfg: CometConfig) -> np.ndarray:
+    """Pad fields to n_pf multiple and vectors to n_pv multiple with zeros.
+
+    Zero padding is inert: pad vectors produce zero numerators and are
+    excluded by index bookkeeping on the host side."""
+    n_f, n_v = V.shape
+    fp = (-n_f) % cfg.n_pf
+    vp = (-n_v) % cfg.n_pv
+    if fp or vp:
+        V = np.pad(V, ((0, fp), (0, vp)))
+    return V
+
+
+@dataclass
+class TwoWayOutput:
+    """Per-rank metric blocks + the metadata to read them."""
+
+    blocks: np.ndarray  # (n_pv, n_pr, slots, m, m)
+    plan: TwoWayPlan
+    n_v: int  # true (unpadded) vector count
+    n_vp: int  # padded block size
+
+    def entries(self):
+        """Yield (i, j, value) for every unique computed pair (i < j)."""
+        n_pv, n_pr = self.plan.n_pv, self.plan.n_pr
+        for p_v in range(n_pv):
+            for p_r in range(n_pr):
+                for d in self.plan.steps_of_pr(p_r):
+                    if not self.plan.rank_computes(p_v, p_r, d):
+                        continue
+                    row, col = self.plan.block_of(p_v, d)
+                    I, J, mask = global_pairs_of_block(row, col, self.n_vp)
+                    mask = mask & (I < self.n_v) & (J < self.n_v)
+                    vals = self.blocks[p_v, p_r, d // n_pr]
+                    yield I[mask], J[mask], vals[mask]
+
+    def dense(self) -> np.ndarray:
+        """(n_v, n_v) symmetric metric matrix (tests / small problems)."""
+        out = np.zeros((self.n_v, self.n_v), self.blocks.dtype)
+        for I, J, V in self.entries():
+            lo, hi = np.minimum(I, J), np.maximum(I, J)
+            out[lo, hi] = V
+            out[hi, lo] = V
+        return out
+
+    def checksum(self) -> int:
+        return ck.combine([ck.raw_pairs(I, J, V) for I, J, V in self.entries()])
+
+    def num_pairs(self) -> int:
+        return sum(len(I) for I, _, _ in self.entries())
+
+
+def _twoway_program(Vl, *, cfg: CometConfig, plan: TwoWayPlan, out_dtype):
+    """Per-device program (inside shard_map). Vl: (n_f/n_pf, n_vp)."""
+    n_pv, n_pr = cfg.n_pv, cfg.n_pr
+    m = Vl.shape[1]
+    mgemm = cfg.impl_fn()
+    s_own = jax.lax.psum(Vl.astype(jnp.float32).sum(axis=0), "pf")  # (m,)
+    pv = jax.lax.axis_index("pv")
+    pr = jax.lax.axis_index("pr")
+    # receive from upward neighbour: src (i+1) -> dst i
+    perm = [((i + 1) % n_pv, i) for i in range(n_pv)]
+    tri = jnp.triu(jnp.ones((m, m), bool), k=1)
+
+    Vr, sr = Vl, s_own
+    out = jnp.zeros((plan.slots_per_rank, m, m), out_dtype)
+    for d in range(plan.n_steps):
+        if d > 0:
+            Vr = jax.lax.ppermute(Vr, "pv", perm)
+            sr = jax.lax.ppermute(sr, "pv", perm)
+        execute = (d % n_pr) == pr
+        if plan.is_half_step(d):
+            execute = jnp.logical_and(execute, pv < n_pv // 2)
+
+        def compute(o, Vr=Vr, sr=sr, d=d):
+            n2 = jax.lax.psum(mgemm(Vl.T, Vr).astype(jnp.float32), "pf")
+            denom = jnp.maximum(s_own[:, None] + sr[None, :], 1e-30)
+            metric = (2.0 * n2 / denom).astype(out_dtype)
+            if d == 0:
+                metric = jnp.where(tri, metric, 0)
+            return o.at[d // n_pr].set(metric)
+
+        out = jax.lax.cond(execute, compute, lambda o: o, out)
+    return out[None, None]  # leading (pv=1, pr=1) device dims
+
+
+def czek2_distributed(V: np.ndarray, mesh: Mesh, cfg: CometConfig) -> TwoWayOutput:
+    """Compute all unique 2-way metrics of V's columns on the mesh."""
+    n_v = V.shape[1]
+    Vp = pad_vectors(np.asarray(V), cfg)
+    n_vp = Vp.shape[1] // cfg.n_pv
+    plan = TwoWayPlan(cfg.n_pv, cfg.n_pr)
+    out_dtype = jnp.dtype(cfg.out_dtype)
+
+    fn = shard_map(
+        partial(_twoway_program, cfg=cfg, plan=plan, out_dtype=out_dtype),
+        mesh=mesh,
+        in_specs=P("pf", "pv"),
+        out_specs=P("pv", "pr", None, None, None),
+        check_vma=False,
+    )
+    blocks = jax.jit(fn)(jnp.asarray(Vp, dtype=jnp.dtype(cfg.ring_dtype)))
+    blocks = np.asarray(blocks).reshape(
+        cfg.n_pv, cfg.n_pr, plan.slots_per_rank, n_vp, n_vp
+    )
+    return TwoWayOutput(blocks=blocks, plan=plan, n_v=n_v, n_vp=n_vp)

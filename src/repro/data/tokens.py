@@ -1,0 +1,98 @@
+"""Synthetic LM token pipeline: deterministic, shard-aware, prefetched.
+
+Every batch is a pure function of (seed, step, shard), so restarts resume
+bit-identically from a checkpointed step with no data-state to persist, and
+each data-parallel host generates only its own slice — the property a real
+distributed loader must have, realized here with a synthetic source.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass
+class SyntheticTokens:
+    vocab_size: int
+    batch: int  # global batch
+    seq_len: int
+    seed: int = 0
+    shard: int = 0  # this host's data shard
+    num_shards: int = 1
+    family: str = "dense"  # encdec/vlm need extra fields
+    d_model: int = 0
+
+    @property
+    def local_batch(self) -> int:
+        assert self.batch % self.num_shards == 0
+        return self.batch // self.num_shards
+
+    def batch_at(self, step: int) -> dict:
+        """Deterministic batch for a global step (this shard's slice)."""
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, self.shard])
+        )
+        B, S = self.local_batch, self.seq_len
+        # zipf-flavored token distribution, avoiding id 0 (pad)
+        z = rng.zipf(1.3, size=(B, S + 1))
+        toks = (z % (self.vocab_size - 1)) + 1
+        out = {
+            "tokens": toks[:, :-1].astype(np.int32),
+            "labels": toks[:, 1:].astype(np.int32),
+        }
+        if self.family == "encdec":
+            out["src_embeds"] = rng.standard_normal(
+                (B, S, self.d_model), dtype=np.float32
+            ) * 0.02
+        if self.family == "vlm":
+            out["embeds"] = rng.standard_normal(
+                (B, S, self.d_model), dtype=np.float32
+            ) * 0.02
+            out.pop("tokens")
+        return out
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+class PrefetchIterator:
+    """Background-thread prefetch (depth-k queue) over a batch source."""
+
+    def __init__(self, source, start_step: int = 0, depth: int = 2):
+        self._source = source
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._step = start_step
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = self._source.batch_at(step)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def __next__(self):
+        step, batch = self._q.get()
+        return step, batch
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2)

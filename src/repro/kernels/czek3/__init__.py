@@ -1,0 +1,2 @@
+from .ops import czek3_step  # noqa: F401
+from .ref import czek3_step_ref  # noqa: F401

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: fused 3-way inner step (paper §3.2, Algorithm 3).
+
+One pipeline step of the 3-way computation:
+
+    B_j[i, k] = sum_q min(own[q, i], x[q], right[q, k])
+
+where ``x = pipe[:, j]`` is the current pipeline column.  The paper
+materializes X_j = min(V, v_j) and then runs a 2-way mGEMM; this kernel fuses
+the X_j construction into the contraction so X_j never touches HBM —
+eliminating one full (n_f x n_vp) HBM write + read per pipeline step
+(recorded as a §Perf memory-term win).
+
+Operands arrive field-major ((n_f, m) blocks), matching how the distributed
+engine stores vector blocks, so the kernel contracts over the *leading* axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 512
+K_CHUNK = 8
+
+
+def _czek3_kernel(own_ref, x_ref, right_ref, o_ref, acc_ref, *, n_k_steps, k_chunk):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    own = own_ref[...]  # (bk, bm)  field-major
+    x = x_ref[...]  # (bk, 1)
+    right = right_ref[...]  # (bk, bn)
+    bk, bm = own.shape
+    bn = right.shape[1]
+    xo = jnp.minimum(own, x)  # fused X_j tile — never written to HBM
+
+    def body(t, acc):
+        a_sub = jax.lax.dynamic_slice(xo, (t * k_chunk, 0), (k_chunk, bm))
+        b_sub = jax.lax.dynamic_slice(right, (t * k_chunk, 0), (k_chunk, bn))
+        m = jnp.minimum(a_sub[:, :, None], b_sub[:, None, :]).astype(jnp.float32)
+        return acc + m.sum(axis=0)
+
+    acc_ref[...] += jax.lax.fori_loop(
+        0, bk // k_chunk, body, jnp.zeros((bm, bn), jnp.float32)
+    )
+
+    @pl.when(pl.program_id(2) == n_k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "k_chunk", "interpret", "out_dtype")
+)
+def czek3_step_pallas(
+    own,
+    x,
+    right,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    k_chunk: int = K_CHUNK,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+):
+    """B[i, k] = sum_q min(own[q, i], x[q], right[q, k]).
+
+    own (n_f, m), x (n_f,) or (n_f, 1), right (n_f, n)."""
+    if x.ndim == 1:
+        x = x[:, None]
+    k, m = own.shape
+    n = right.shape[1]
+    mp, np_, kp = (-m) % bm, (-n) % bn, (-k) % bk
+    if mp or kp:
+        own = jnp.pad(own, ((0, kp), (0, mp)))
+    if kp:
+        x = jnp.pad(x, ((0, kp), (0, 0)))
+    if np_ or kp:
+        right = jnp.pad(right, ((0, kp), (0, np_)))
+    K, M = own.shape
+    N = right.shape[1]
+    n_k_steps = K // bk
+    grid = (M // bm, N // bn, n_k_steps)
+    out = pl.pallas_call(
+        functools.partial(_czek3_kernel, n_k_steps=n_k_steps, k_chunk=k_chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, bm), lambda i, j, t: (t, i)),
+            pl.BlockSpec((bk, 1), lambda i, j, t: (t, 0)),
+            pl.BlockSpec((bk, bn), lambda i, j, t: (t, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, t: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(own, x, right)
+    return out[:m, :n]

@@ -1,0 +1,15 @@
+"""jit'd wrappers for the fused 3-way step kernel."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import czek3_step_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def czek3_step(own, x, right, **kw):
+    kw.setdefault("interpret", not _on_tpu())
+    return czek3_step_pallas(own, x, right, **kw)

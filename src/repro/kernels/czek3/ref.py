@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the fused 3-way inner step."""
+import jax.numpy as jnp
+
+
+def czek3_step_ref(own, x, right, out_dtype=jnp.float32):
+    """B[i, k] = sum_q min(own[q, i], x[q], right[q, k])."""
+    if x.ndim == 2:
+        x = x[:, 0]
+    m3 = jnp.minimum(
+        jnp.minimum(own[:, :, None], x[:, None, None]), right[:, None, :]
+    ).astype(jnp.float32)
+    return m3.sum(axis=0).astype(out_dtype)

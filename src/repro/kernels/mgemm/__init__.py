@@ -1,0 +1,2 @@
+from .ops import czek2_metric, mgemm  # noqa: F401
+from .ref import czek2_metric_ref, mgemm_ref  # noqa: F401

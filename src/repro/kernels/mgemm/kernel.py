@@ -1,0 +1,180 @@
+"""Pallas TPU kernel: blocked min-plus GEMM (the paper's mGEMM, §3.1).
+
+TPU adaptation of the paper's modified-MAGMA GEMM.  The MXU cannot evaluate
+``min`` inside its systolic array, so the contraction runs on the VPU:
+HBM -> VMEM tiles via BlockSpec, fp32 accumulation in a VMEM scratch
+accumulator, K-chunked broadcast-minimum + reduce inside the block.
+
+Grid: (M/bm, N/bn, K/bk), K innermost so the accumulator tile stays resident
+in VMEM across the contraction (standard Pallas matmul pattern).
+
+Default tile (bm, bn, bk) = (128, 128, 512):
+  VMEM working set = A tile 128*512*4 B + B tile 512*128*4 B + acc 128*128*4 B
+                   = 256 KiB + 256 KiB + 64 KiB ≈ 0.6 MiB  « 16 MiB VMEM,
+leaving room for double buffering of the input streams.  The inner k-chunk
+(8) bounds the broadcast intermediate to 128*8*128*4 = 512 KiB of VREG/VMEM
+traffic, aligned to the (8, 128) VPU vector register shape.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 512
+K_CHUNK = 8
+
+
+def _mgemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k_steps: int, k_chunk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]  # (bm, bk)
+    b = b_ref[...]  # (bk, bn)
+    bm, bk = a.shape
+    bn = b.shape[1]
+
+    def body(t, acc):
+        a_sub = jax.lax.dynamic_slice(a, (0, t * k_chunk), (bm, k_chunk))
+        b_sub = jax.lax.dynamic_slice(b, (t * k_chunk, 0), (k_chunk, bn))
+        m = jnp.minimum(a_sub[:, :, None], b_sub[None, :, :]).astype(jnp.float32)
+        return acc + m.sum(axis=1)
+
+    acc_ref[...] += jax.lax.fori_loop(
+        0, bk // k_chunk, body, jnp.zeros((bm, bn), jnp.float32)
+    )
+
+    @pl.when(pl.program_id(2) == n_k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _metric_kernel(a_ref, b_ref, sa_ref, sb_ref, o_ref, acc_ref, *, n_k_steps, k_chunk):
+    """mGEMM with fused Czekanowski epilogue: o = 2*acc / (sa_i + sb_j).
+
+    Saves an HBM round-trip of the numerator matrix (bandwidth win recorded in
+    EXPERIMENTS.md §Perf)."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    bm, bk = a.shape
+    bn = b.shape[1]
+
+    def body(t, acc):
+        a_sub = jax.lax.dynamic_slice(a, (0, t * k_chunk), (bm, k_chunk))
+        b_sub = jax.lax.dynamic_slice(b, (t * k_chunk, 0), (k_chunk, bn))
+        m = jnp.minimum(a_sub[:, :, None], b_sub[None, :, :]).astype(jnp.float32)
+        return acc + m.sum(axis=1)
+
+    acc_ref[...] += jax.lax.fori_loop(
+        0, bk // k_chunk, body, jnp.zeros((bm, bn), jnp.float32)
+    )
+
+    @pl.when(pl.program_id(2) == n_k_steps - 1)
+    def _flush():
+        sa = sa_ref[...]  # (bm, 1)
+        sb = sb_ref[...]  # (1, bn)
+        o_ref[...] = (2.0 * acc_ref[...] / (sa + sb)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bn", "bk", "k_chunk", "interpret", "out_dtype"),
+)
+def mgemm_pallas(
+    A,
+    B,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    k_chunk: int = K_CHUNK,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+):
+    """out[i, j] = sum_k min(A[i, k], B[k, j]).  A (m, k), B (k, n)."""
+    m, k = A.shape
+    k2, n = B.shape
+    assert k == k2
+    # pad every dim to its block multiple; k pads with zeros on both operands
+    # => min(0, 0) = 0 contributes nothing.
+    mp, np_, kp = (-m) % bm, (-n) % bn, (-k) % bk
+    if mp or kp:
+        A = jnp.pad(A, ((0, mp), (0, kp)))
+    if np_ or kp:
+        B = jnp.pad(B, ((0, kp), (0, np_)))
+    M, K = A.shape
+    N = B.shape[1]
+    n_k_steps = K // bk
+    grid = (M // bm, N // bn, n_k_steps)
+    out = pl.pallas_call(
+        functools.partial(_mgemm_kernel, n_k_steps=n_k_steps, k_chunk=k_chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, t: (i, t)),
+            pl.BlockSpec((bk, bn), lambda i, j, t: (t, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, t: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(A, B)
+    return out[:m, :n]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bn", "bk", "k_chunk", "interpret", "out_dtype"),
+)
+def czek2_metric_pallas(
+    A,
+    B,
+    sa,
+    sb,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    k_chunk: int = K_CHUNK,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+):
+    """Fused 2-way metric: out[i,j] = 2*sum_k min(A[i,k],B[k,j]) / (sa_i+sb_j)."""
+    m, k = A.shape
+    n = B.shape[1]
+    mp, np_, kp = (-m) % bm, (-n) % bn, (-k) % bk
+    if mp or kp:
+        A = jnp.pad(A, ((0, mp), (0, kp)))
+    if np_ or kp:
+        B = jnp.pad(B, ((0, kp), (0, np_)))
+    # pad sums with 1 to avoid 0/0 in the padded epilogue region
+    sa = jnp.pad(jnp.asarray(sa, jnp.float32), (0, mp), constant_values=1.0)[:, None]
+    sb = jnp.pad(jnp.asarray(sb, jnp.float32), (0, np_), constant_values=1.0)[None, :]
+    M, K = A.shape
+    N = B.shape[1]
+    n_k_steps = K // bk
+    grid = (M // bm, N // bn, n_k_steps)
+    out = pl.pallas_call(
+        functools.partial(_metric_kernel, n_k_steps=n_k_steps, k_chunk=k_chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, t: (i, t)),
+            pl.BlockSpec((bk, bn), lambda i, j, t: (t, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, t: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, t: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, t: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(A, B, sa, sb)
+    return out[:m, :n]

@@ -1,0 +1,26 @@
+"""jit'd public wrappers for the mGEMM Pallas kernel + impl registration."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.mgemm import register_impl
+
+from .kernel import czek2_metric_pallas, mgemm_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def mgemm(A, B, **kw):
+    """Pallas mGEMM; interprets automatically off-TPU (kernel-body-on-CPU)."""
+    kw.setdefault("interpret", not _on_tpu())
+    return mgemm_pallas(A, B, **kw)
+
+
+def czek2_metric(A, B, sa, sb, **kw):
+    kw.setdefault("interpret", not _on_tpu())
+    return czek2_metric_pallas(A, B, sa, sb, **kw)
+
+
+register_impl("pallas", mgemm)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the mGEMM kernel."""
+import jax.numpy as jnp
+
+
+def mgemm_ref(A, B, out_dtype=jnp.float32):
+    """out[i, j] = sum_k min(A[i, k], B[k, j]) — dense broadcast (small only)."""
+    m = jnp.minimum(A[:, :, None], B[None, :, :]).astype(jnp.float32)
+    return m.sum(axis=1).astype(out_dtype)
+
+
+def czek2_metric_ref(A, B, sa, sb, out_dtype=jnp.float32):
+    n = mgemm_ref(A, B, jnp.float32)
+    return (2.0 * n / (sa[:, None] + sb[None, :])).astype(out_dtype)

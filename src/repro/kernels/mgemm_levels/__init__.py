@@ -1,0 +1,2 @@
+from .ops import mgemm_levels, mgemm_levels_xla  # noqa: F401
+from .ref import mgemm_levels_ref  # noqa: F401

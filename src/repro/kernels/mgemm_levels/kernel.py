@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: level-decomposition mGEMM on the MXU (beyond-paper).
+
+For inputs quantized to integer levels {0, 1, ..., L}:
+
+    min(a, b) = sum_{t=1}^{L} 1[a >= t] * 1[b >= t]
+
+so the min-plus contraction equals a sum of L *ordinary* GEMMs of 0/1
+indicator matrices — which the 128x128 MXU executes at bf16 peak
+(197 TFLOP/s on v5e) instead of the ~1 TOP/s VPU rate of the faithful
+kernel.  Exact for integer data with values <= L (SNP allele counts are
+{0,1,2}; the paper's companion CCC work uses 2-3 bit codes).  This is the
+TPU-native generalization of the paper's §2.3 observation that the binary
+(Sorenson) case maps to fast bit arithmetic.
+
+Indicator construction happens in VMEM per tile (on the VPU, overlapped by
+the MXU matmuls), so HBM traffic is identical to a plain GEMM of the raw
+operands.
+
+Cost: L * 2*M*N*K MXU FLOPs; for L <= 4 a ~25-50x win over the VPU kernel on
+the compute roofline term (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BM = 256
+DEFAULT_BN = 256
+DEFAULT_BK = 512
+
+
+def _levels_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k_steps: int, levels: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    acc = jnp.zeros_like(acc_ref)
+    for t in range(1, levels + 1):  # static unroll: L MXU matmuls per tile
+        at = (a >= t).astype(jnp.bfloat16)
+        bt = (b >= t).astype(jnp.bfloat16)
+        acc += jnp.dot(at, bt, preferred_element_type=jnp.float32)
+    acc_ref[...] += acc
+
+    @pl.when(pl.program_id(2) == n_k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("levels", "bm", "bn", "bk", "interpret", "out_dtype")
+)
+def mgemm_levels_pallas(
+    A,
+    B,
+    *,
+    levels: int,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+):
+    """Exact min-plus GEMM for integer-valued A, B in [0, levels]."""
+    m, k = A.shape
+    k2, n = B.shape
+    assert k == k2
+    mp, np_, kp = (-m) % bm, (-n) % bn, (-k) % bk
+    if mp or kp:
+        A = jnp.pad(A, ((0, mp), (0, kp)))  # pad 0 -> indicator 0 -> no contribution
+    if np_ or kp:
+        B = jnp.pad(B, ((0, kp), (0, np_)))
+    M, K = A.shape
+    N = B.shape[1]
+    n_k_steps = K // bk
+    grid = (M // bm, N // bn, n_k_steps)
+    out = pl.pallas_call(
+        functools.partial(_levels_kernel, n_k_steps=n_k_steps, levels=levels),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, t: (i, t)),
+            pl.BlockSpec((bk, bn), lambda i, j, t: (t, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, t: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(A, B)
+    return out[:m, :n]

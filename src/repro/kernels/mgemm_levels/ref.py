@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the level-decomposition mGEMM."""
+import jax.numpy as jnp
+
+
+def mgemm_levels_ref(A, B, *, levels: int, out_dtype=jnp.float32):
+    """sum_t 1[A>=t] @ 1[B>=t] — exact min-plus GEMM for ints in [0, levels]."""
+    acc = jnp.zeros((A.shape[0], B.shape[1]), jnp.float32)
+    for t in range(1, levels + 1):
+        acc += (A >= t).astype(jnp.float32) @ (B >= t).astype(jnp.float32)
+    return acc.astype(out_dtype)

@@ -1,0 +1,55 @@
+"""Training launcher.
+
+    python -m repro.launch.train --arch qwen1.5-0.5b --smoke --steps 50
+
+``--smoke`` selects the reduced config (CPU-runnable); without it the exact
+assigned config is used (pod-scale — pair with a real TPU mesh).  Supports
+restart (picks up the latest checkpoint), elastic mesh reshape, and the
+straggler watchdog.
+"""
+import argparse
+import json
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from repro.configs.registry import get_config, get_smoke_config
+    from repro.models.common import param_count
+    from repro.models import api
+    from repro.optim.adamw import AdamWConfig
+    from repro.optim.schedule import warmup_cosine
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    tcfg = TrainerConfig(
+        steps=args.steps, ckpt_every=args.ckpt_every, log_every=args.log_every,
+        ckpt_dir=args.ckpt_dir, seed=args.seed, batch=args.batch,
+        seq_len=args.seq_len,
+    )
+    opt = AdamWConfig(lr=args.lr, schedule=warmup_cosine(args.steps // 10, args.steps))
+    trainer = Trainer(cfg, tcfg, opt)
+    state = trainer.resume_or_init()
+    n = param_count(state.params)
+    print(f"arch={cfg.name} params={n / 1e6:.1f}M resume_step={state.step}")
+    state = trainer.train(state)
+    for h in trainer.history:
+        print(json.dumps(h))
+    print(f"done @ step {state.step}; stragglers={len(trainer.watchdog.events)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

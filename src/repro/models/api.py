@@ -1,0 +1,73 @@
+"""Family-dispatching model API used by smoke tests, the trainer, the
+serving engine, and the dry-run."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as encdec_mod
+from repro.models import transformer as tf_mod
+from repro.models.common import ModelConfig
+
+
+def init_model(cfg: ModelConfig, key):
+    if cfg.family == "encdec":
+        return encdec_mod.init_encdec(cfg, key)
+    return tf_mod.init_lm(cfg, key)
+
+
+def model_forward(cfg: ModelConfig, params, batch):
+    if cfg.family == "encdec":
+        return encdec_mod.encdec_forward(cfg, params, batch["src_embeds"], batch["tokens"])
+    return tf_mod.lm_forward(
+        cfg, params, batch.get("tokens"), embeds=batch.get("embeds")
+    )
+
+
+def model_loss(cfg: ModelConfig, params, batch):
+    if cfg.family == "encdec":
+        return encdec_mod.encdec_loss(cfg, params, batch)
+    return tf_mod.lm_loss(cfg, params, batch)
+
+
+def init_cache(cfg: ModelConfig, params, batch_size: int, max_len: int, src_embeds=None):
+    if cfg.family == "encdec":
+        return encdec_mod.init_encdec_cache(cfg, params, src_embeds, batch_size, max_len)
+    return tf_mod.init_decode_cache(cfg, batch_size, max_len)
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, cache_index):
+    if cfg.family == "encdec":
+        return encdec_mod.encdec_decode_step(cfg, params, cache, tokens, cache_index)
+    return tf_mod.lm_decode_step(cfg, params, cache, tokens, cache_index)
+
+
+def param_sharding_rules(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return encdec_param_rules(cfg)
+    return tf_mod.param_sharding_rules(cfg)
+
+
+def encdec_param_rules(cfg: ModelConfig):
+    from jax.sharding import PartitionSpec as P
+
+    F = ("pod", "data")  # FSDP axes (filtered to the active mesh)
+    attn = {
+        "wq": P(None, F, "model"),
+        "wk": P(None, F, "model"),
+        "wv": P(None, F, "model"),
+        "wo": P(None, "model", F),
+    }
+    mlp = {"wi": P(None, F, "model"), "wg": P(None, F, "model"),
+           "wo": P(None, "model", F)}
+    return {
+        "embed": P("model", F),
+        "enc_layers": {"ln1": P(None), "attn": attn, "ln2": P(None), "mlp": mlp},
+        "enc_ln": P(None),
+        "dec_layers": {
+            "ln1": P(None), "attn": attn, "lnx": P(None), "xattn": attn,
+            "ln2": P(None), "mlp": mlp,
+        },
+        "final_ln": P(None),
+        "lm_head": P(F, "model"),
+    }

@@ -1,0 +1,208 @@
+"""GQA attention: train/prefill (chunked online-softmax) + decode (KV cache).
+
+Sharding strategy (see DESIGN.md §4): projections constrain the *flat*
+feature dims (B, S, H*hd) — always divisible by the model axis for the
+assigned archs even when head counts (12, 24) or KV head counts (2, 8) are
+not.  For the attention math itself, KV heads are repeated to the full query
+head count so every intermediate carries one flat head dim that divides the
+model axis (q-head parallelism; the repeat is fused by XLA).  The KV cache
+shards its sequence axis over "model", so decode attention reduces over a
+sharded T with two small collectives per layer instead of all-gathering the
+cache.
+
+Long sequences use a doubly-chunked (query x key) online-softmax scan — the
+flash-attention recurrence in pure JAX — bounding live buffers to
+(B, Hq, Cq, Ck) tiles so 32k prefill fits HBM.  Causally-dead chunk pairs
+are masked, not skipped (static shapes); the roofline accounts for the 2x
+and §Perf discusses the Pallas grid-pruned alternative.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init
+from repro.models.rope import apply_rope
+from repro.parallel.sharding import DATA_AXES, shard
+
+CHUNK_Q = 1024
+CHUNK_K = 1024
+_NEG = -1e30
+
+
+def init_attention(cfg: ModelConfig, key, *, cross: bool = False):
+    hd = cfg.hd
+    kq, kk, kv, ko, kb = jax.random.split(key, 5)
+    p = {
+        "wq": dense_init(kq, (cfg.d_model, cfg.n_heads * hd), cfg.pdt),
+        "wk": dense_init(kk, (cfg.d_model, cfg.n_kv_heads * hd), cfg.pdt),
+        "wv": dense_init(kv, (cfg.d_model, cfg.n_kv_heads * hd), cfg.pdt),
+        "wo": dense_init(ko, (cfg.n_heads * hd, cfg.d_model), cfg.pdt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), cfg.pdt)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), cfg.pdt)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), cfg.pdt)
+    return p
+
+
+def _repeat_kv(x, n_rep: int):
+    """(B, T, Hkv, hd) -> (B, T, Hkv*n_rep, hd) — flat q-head layout."""
+    if n_rep == 1:
+        return x
+    b, t, h, d = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, t, h, n_rep, d)).reshape(
+        b, t, h * n_rep, d
+    )
+
+
+def _dense_attend(q, k, v, *, causal: bool, q_offset, kv_len=None):
+    """q (B,S,Hq,hd), k/v (B,T,Hq,hd) (kv already repeated)."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    s = shard(s, DATA_AXES, "model", None, None)
+    T = k.shape[1]
+    t_idx = jnp.arange(T)
+    if causal:
+        qpos = q_offset + jnp.arange(q.shape[1])
+        s = jnp.where(t_idx[None, None, None, :] <= qpos[None, None, :, None],
+                      s, _NEG)
+    if kv_len is not None:  # mask unwritten cache slots
+        s = jnp.where(t_idx[None, None, None, :] < kv_len, s, _NEG)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bthd->bshd", w.astype(v.dtype), v)
+
+
+def _flash_attend(q, k, v, *, causal: bool, q_offset=0, cq=CHUNK_Q, ck=CHUNK_K,
+                  p_bf16: bool = False):
+    """Doubly-chunked online-softmax. q (B,S,Hq,hd), k/v (B,T,Hq,hd)."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    cq = min(cq, S)
+    ck = min(ck, T)
+    assert S % cq == 0 and T % ck == 0, (S, cq, T, ck)
+    nq, nk = S // cq, T // ck
+    scale = hd**-0.5
+    # keep the streamed K/V/Q stacks in their compute dtype (bf16); upcasts
+    # happen per-tile inside the scan so no O(S)/O(T) fp32 buffer exists
+    qc = jnp.moveaxis(q.reshape(B, nq, cq, H, hd), 1, 0)
+    kc = jnp.moveaxis(k.reshape(B, nk, ck, H, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nk, ck, H, hd), 1, 0)
+
+    def q_step(_, qi_q):
+        qi, qblk = qi_q  # qblk (B, cq, H, hd)
+        qblk = qblk.astype(jnp.float32) * scale
+
+        def kv_step(carry, ki_kv):
+            m, l, acc = carry
+            ki, kblk, vblk = ki_kv
+            s = jnp.einsum("bshd,bthd->bhst", qblk,
+                           kblk.astype(jnp.float32))  # (B,H,cq,ck)
+            s = shard(s, DATA_AXES, "model", None, None)
+            if causal:
+                qpos = q_offset + qi * cq + jnp.arange(cq)
+                tpos = ki * ck + jnp.arange(ck)
+                s = jnp.where(
+                    tpos[None, None, None, :] <= qpos[None, None, :, None], s, _NEG
+                )
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            if p_bf16:
+                # halve the dominant tile traffic; error < 0.4% per chunk,
+                # accumulator stays fp32
+                p = p.astype(jnp.bfloat16)
+                pv = jnp.einsum("bhst,bthd->bhsd", p,
+                                vblk.astype(jnp.bfloat16)).astype(jnp.float32)
+            else:
+                pv = jnp.einsum("bhst,bthd->bhsd", p, vblk.astype(jnp.float32))
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, cq), _NEG, jnp.float32)
+        l0 = jnp.zeros((B, H, cq), jnp.float32)
+        a0 = jnp.zeros((B, H, cq, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), kc, vc)
+        )
+        o = acc / jnp.maximum(l[..., None], 1e-30)  # (B,H,cq,hd)
+        return None, jnp.moveaxis(o, 1, 2)  # (B,cq,H,hd)
+
+    _, o = jax.lax.scan(q_step, None, (jnp.arange(nq), qc))
+    return jnp.moveaxis(o, 0, 1).reshape(B, S, H, hd)
+
+
+def attention(
+    cfg: ModelConfig,
+    p,
+    x,
+    *,
+    cos_sin=None,
+    kv_src=None,  # encoder states for cross-attention
+    cache=None,  # {"k": (B,T,Hkv,hd), "v": ...} or None
+    cache_index=None,  # scalar: #tokens already in cache
+    causal: bool = True,
+    flash_threshold: int = 2048,
+):
+    """Returns (output (B,S,D), new_cache)."""
+    hd = cfg.hd
+    B, S, _ = x.shape
+    src = x if kv_src is None else kv_src
+    cdt = cfg.cdt
+
+    q = x @ p["wq"].astype(cdt)
+    k = src @ p["wk"].astype(cdt)
+    v = src @ p["wv"].astype(cdt)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cdt)
+        k = k + p["bk"].astype(cdt)
+        v = v + p["bv"].astype(cdt)
+    q = shard(q, DATA_AXES, None, "model")
+    k = shard(k, DATA_AXES, None, "model")
+    v = shard(v, DATA_AXES, None, "model")
+
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, -1, cfg.n_kv_heads, hd)
+    v = v.reshape(B, -1, cfg.n_kv_heads, hd)
+    if cos_sin is not None and kv_src is None:
+        cos, sin = cos_sin
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    elif cos_sin is not None:
+        q = apply_rope(q, *cos_sin)
+
+    kv_len = None
+    new_cache = None
+    if cache is not None:
+        ck_, cv_ = cache["k"], cache["v"]
+        k = jax.lax.dynamic_update_slice(ck_, k.astype(ck_.dtype), (0, cache_index, 0, 0))
+        v = jax.lax.dynamic_update_slice(cv_, v.astype(cv_.dtype), (0, cache_index, 0, 0))
+        k = shard(k, DATA_AXES, "model", None, None)
+        v = shard(v, DATA_AXES, "model", None, None)
+        new_cache = {"k": k, "v": v}
+        kv_len = cache_index + S
+
+    G = cfg.n_heads // cfg.n_kv_heads
+    kq = _repeat_kv(k, G)
+    vq = _repeat_kv(v, G)
+    q_offset = 0 if cache_index is None else cache_index
+    T = kq.shape[1]
+    if S > 1 and max(S, T) > flash_threshold and (causal or cache is None):
+        # train + long prefill (encoder/cross included): chunked online
+        # softmax; with a cache, causal masking also hides the unwritten
+        # tail (t > q_offset + S - 1)
+        o = _flash_attend(q, kq, vq, causal=causal, q_offset=q_offset,
+                          p_bf16=cfg.flash_p_bf16)
+    else:
+        o = _dense_attend(q, kq, vq, causal=causal, q_offset=q_offset, kv_len=kv_len)
+    o = o.reshape(B, S, cfg.n_heads * hd).astype(cdt)
+    o = shard(o, DATA_AXES, None, "model")
+    out = o @ p["wo"].astype(cdt)
+    return shard(out, DATA_AXES, None, None), new_cache
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers: int, dtype):
+    shape = (n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

@@ -1,0 +1,136 @@
+"""Feed-forward blocks: SwiGLU MLP (dense archs) and top-k MoE.
+
+MoE dispatch is sort-based and capacity-bounded (dropless up to the capacity
+factor): token->expert assignments are argsorted by expert id and scattered
+into an (E, C, D) buffer, giving dense per-expert GEMMs with static shapes —
+no (T, E, C) one-hot dispatch tensor (which is O(T^2) at LM batch sizes).
+Experts are sharded over "model" through their hidden dim ("expert-internal
+TP"), exact for any expert count (grok: 8, granite: 40) on a 16-wide axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init
+from repro.parallel.sharding import DATA_AXES, shard
+
+
+def init_mlp(cfg: ModelConfig, key, d_ff: int | None = None):
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(k1, (cfg.d_model, d_ff), cfg.pdt),
+        "wg": dense_init(k2, (cfg.d_model, d_ff), cfg.pdt),
+        "wo": dense_init(k3, (d_ff, cfg.d_model), cfg.pdt),
+    }
+
+
+def mlp(cfg: ModelConfig, p, x):
+    cdt = cfg.cdt
+    h = x @ p["wi"].astype(cdt)
+    g = x @ p["wg"].astype(cdt)
+    h = shard(h, DATA_AXES, None, "model")
+    g = shard(g, DATA_AXES, None, "model")
+    y = (jax.nn.silu(g) * h) @ p["wo"].astype(cdt)
+    return shard(y, DATA_AXES, None, None)
+
+
+def init_moe(cfg: ModelConfig, key):
+    d_ff = cfg.moe_d_ff or cfg.d_ff
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    E = cfg.n_experts
+    return {
+        "router": dense_init(kr, (cfg.d_model, E), jnp.float32, scale=0.02),
+        "wi": dense_init(k1, (E, cfg.d_model, d_ff), cfg.pdt),
+        "wg": dense_init(k2, (E, cfg.d_model, d_ff), cfg.pdt),
+        "wo": dense_init(k3, (E, d_ff, cfg.d_model), cfg.pdt),
+    }
+
+
+def _dispatch(cfg: ModelConfig, xt, probs, C: int):
+    """Sort-based capacity dispatch for one token chunk.
+
+    xt (T, D), probs (T, E) -> (buf (E, C, D), st, slot, keep, gates)."""
+    cdt = cfg.cdt
+    T, D = xt.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)  # (T, K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    flat_e = expert_ids.reshape(T * K)
+    flat_g = gate_vals.reshape(T * K)
+    flat_t = jnp.repeat(jnp.arange(T), K)
+    order = jnp.argsort(flat_e)  # stable
+    se, sg, st = flat_e[order], flat_g[order], flat_t[order]
+    # position within expert segment
+    pos = jnp.arange(T * K) - jnp.searchsorted(se, se, side="left")
+    keep = pos < C
+    slot = se * C + jnp.where(keep, pos, 0)  # (T*K,)
+    buf = jnp.zeros((E * C, D), cdt)
+    buf = buf.at[slot].add(jnp.where(keep[:, None], xt[st], 0).astype(cdt))
+    return buf.reshape(E, C, D), st, slot, keep, sg
+
+
+def _combine(cfg: ModelConfig, o, st, slot, keep, sg, T: int):
+    """Scatter expert outputs (E*C, D) back to (T, D)."""
+    cdt = cfg.cdt
+    y = o[slot] * jnp.where(keep, sg, 0)[:, None].astype(cdt)
+    return jnp.zeros((T, o.shape[-1]), cdt).at[st].add(y)
+
+
+def moe(cfg: ModelConfig, p, x):
+    """Top-k MoE with sort-based capacity dispatch.
+
+    ``moe_dispatch_chunks > 0`` (§Perf): the sort/scatter dispatch runs
+    independently per token chunk — GSPMD keeps each chunk's sort local to
+    its data shard instead of a global cross-device sort (the dominant
+    collective in the MoE baseline).  Capacity is per-chunk, so routing is
+    slightly stricter; expert GEMMs see the concatenated chunk buffers and
+    keep their full size.
+
+    Returns (y, aux_loss) — aux is the standard load-balancing loss."""
+    cdt = cfg.cdt
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    T = B * S
+    xt = x.reshape(T, D)
+
+    logits = (xt.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    frac = jnp.mean(
+        jax.nn.one_hot(jnp.argmax(probs, -1), E, dtype=jnp.float32), axis=0
+    )
+    aux = E * jnp.sum(frac * probs.mean(axis=0))
+
+    nc = cfg.moe_dispatch_chunks
+    if nc and T % nc == 0 and T // nc >= K:
+        Tc = T // nc
+        C = int(cfg.capacity_factor * Tc * K / E) + 1
+        xc = xt.reshape(nc, Tc, D)
+        pc = probs.reshape(nc, Tc, E)
+        buf, st, slot, keep, sg = jax.vmap(
+            lambda xi, pi: _dispatch(cfg, xi, pi, C)
+        )(xc, pc)
+        # (nc, E, C, D) -> (E, nc*C, D): chunk buffers concatenated per expert
+        bufm = buf.transpose(1, 0, 2, 3).reshape(E, nc * C, D)
+    else:
+        nc = 0
+        C = int(cfg.capacity_factor * T * K / E) + 1
+        bufm, st, slot, keep, sg = _dispatch(cfg, xt, probs, C)
+
+    bufm = shard(bufm, None, DATA_AXES, None)
+    h = jnp.einsum("ecd,edf->ecf", bufm, p["wi"].astype(cdt))
+    g = jnp.einsum("ecd,edf->ecf", bufm, p["wg"].astype(cdt))
+    h = shard(h, None, DATA_AXES, "model")
+    g = shard(g, None, DATA_AXES, "model")
+    o = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * h, p["wo"].astype(cdt))
+
+    if nc:
+        oc = o.reshape(E, nc, C, D).transpose(1, 0, 2, 3).reshape(nc, E * C, D)
+        yc = jax.vmap(lambda oi, sti, sli, ki, sgi: _combine(cfg, oi, sti, sli, ki, sgi, T // nc))(
+            oc, st, slot, keep, sg
+        )
+        yt = yc.reshape(T, D)
+    else:
+        yt = _combine(cfg, o.reshape(E * C, D), st, slot, keep, sg, T)
+    return yt.reshape(B, S, D), aux

@@ -1,0 +1,20 @@
+"""Normalization layers (RMSNorm / LayerNorm) — fp32 statistics."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jnp.reciprocal(jnp.sqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jnp.reciprocal(jnp.sqrt(var + eps))
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)

@@ -1,0 +1,44 @@
+"""Rotary position embeddings: standard RoPE + M-RoPE (Qwen2-VL).
+
+M-RoPE splits the rotary dims into (temporal, height, width) sections with
+independent position ids — for pure text all three ids coincide and M-RoPE
+degenerates to standard RoPE (which is how the smoke tests exercise it; the
+vision frontend is a stub per the assignment).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def rope_angles(positions, head_dim: int, theta: float, sections=()):
+    """positions (..., S) or (3, ..., S) for M-RoPE -> cos/sin (..., S, hd/2)."""
+    inv = rope_freqs(head_dim, theta)  # (hd/2,)
+    if sections:
+        assert positions.ndim >= 2 and positions.shape[0] == 3, "M-RoPE wants (3,...,S)"
+        ang = positions[..., None].astype(jnp.float32) * inv  # (3, ..., S, hd/2)
+        # select section: first sections[0] freqs use temporal ids, next use
+        # height, rest width (Qwen2-VL interleaved layout simplified to
+        # contiguous sections).
+        sec = jnp.concatenate(
+            [jnp.full((n,), i, jnp.int32) for i, n in enumerate(sections)]
+        )[: inv.shape[0]]
+        ang = jnp.take_along_axis(
+            ang, sec[(None,) * (ang.ndim - 2) + (slice(None),)][None].astype(jnp.int32),
+            axis=0,
+        )[0]
+    else:
+        ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, hd/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (..., S, H, hd); cos/sin (..., S, hd/2) broadcast over heads."""
+    dt = x.dtype
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(dt)

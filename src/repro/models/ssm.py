@@ -1,0 +1,170 @@
+"""Mamba2 (SSD — state-space duality) block, chunked matmul formulation.
+
+Faithful to "Transformers are SSDs" (arXiv:2405.21060): the sequence is
+split into chunks of length Q; intra-chunk terms are dense matmuls (MXU
+work), inter-chunk state is a short ``lax.scan`` recurrence over chunk
+summaries — O(S) time, O(S·N·P/Q) state traffic, matmul-dominated.
+
+Block layout (Mamba2):
+  in_proj -> [z | xBC | dt];  causal depthwise conv over xBC;  split x, B, C;
+  y = SSD(x, dt, A, B, C) + D*x;  y = RMSNorm(y * silu(z));  out_proj.
+
+Decode keeps O(1) state: conv tail (k-1 inputs) + SSM state (H, P, N).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init
+from repro.models.norms import rms_norm
+from repro.parallel.sharding import DATA_AXES, shard
+
+
+def init_mamba(cfg: ModelConfig, key):
+    di = cfg.d_inner
+    H = cfg.ssm_heads
+    N = cfg.ssm_state
+    conv_dim = di + 2 * N  # x + B + C (single group)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(k1, (cfg.d_model, 2 * di + 2 * N + H), cfg.pdt),
+        "conv_w": dense_init(k2, (cfg.ssm_conv, conv_dim), cfg.pdt, scale=0.5),
+        "conv_b": jnp.zeros((conv_dim,), cfg.pdt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 1e-2))).astype(jnp.float32),
+        "norm_w": jnp.ones((di,), cfg.pdt),
+        "out_proj": dense_init(k3, (di, cfg.d_model), cfg.pdt),
+    }
+
+
+def _causal_conv(xbc, w, b, tail=None):
+    """Depthwise causal conv. xbc (B,S,C), w (k,C). tail (B,k-1,C) or None."""
+    k = w.shape[0]
+    if tail is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = tail.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)  # (B, S+k-1, C)
+    out = sum(xp[:, i : i + xbc.shape[1]] * w[i] for i in range(k))
+    new_tail = xp[:, -(k - 1) :] if k > 1 else None
+    return out + b, new_tail
+
+
+def _ssd_chunked(x, dt, A, Bm, Cm, Q: int):
+    """SSD scan. x (B,S,H,P), dt (B,S,H), A (H,), Bm/Cm (B,S,N).
+
+    Returns y (B,S,H,P) and final state (B,H,P,N)."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    f32 = jnp.float32
+    xc = x.reshape(Bsz, nc, Q, H, P).astype(f32)
+    dtc = dt.reshape(Bsz, nc, Q, H).astype(f32)
+    Bc = Bm.reshape(Bsz, nc, Q, N).astype(f32)
+    Cc = Cm.reshape(Bsz, nc, Q, N).astype(f32)
+
+    dA = dtc * A  # (B,nc,Q,H), A < 0
+    dA_cs = jnp.cumsum(dA, axis=2)
+    # intra-chunk: L[i,j] = exp(dA_cs[i] - dA_cs[j]) for i >= j
+    seg = dA_cs[:, :, :, None, :] - dA_cs[:, :, None, :, :]  # (B,nc,Q_i,Q_j,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)  # (B,nc,Qi,Qj)
+    xdt = xc * dtc[..., None]  # (B,nc,Q,H,P)
+    y_diag = jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores, L, xdt)
+
+    # chunk state summaries: S_c = sum_j exp(dA_cs[last]-dA_cs[j]) B_j (x dt)_j
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)  # (B,nc,Q,H)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", Bc, decay_to_end, xdt)
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])  # (B,nc,H)
+
+    def inter(carry, inp):
+        st, dec = inp  # (B,H,N,P), (B,H)
+        new = st + dec[:, :, None, None] * carry
+        return new, carry  # emit state *before* this chunk
+
+    init = jnp.zeros((Bsz, H, N, P), f32)
+    final, prev_states = jax.lax.scan(
+        inter, init, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (B,nc,H,N,P)
+
+    decay_in = jnp.exp(dA_cs)  # (B,nc,Q,H) decay from chunk start to i
+    y_off = jnp.einsum("bcin,bcih,bchnp->bcihp", Cc, decay_in, prev_states)
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    return y, jnp.moveaxis(final, 2, 3)  # state (B,H,P,N)
+
+
+def mamba_block(cfg: ModelConfig, p, x, *, cache=None):
+    """x (B,S,D) -> (y (B,S,D), new_cache).
+
+    cache = {"conv": (B,k-1,conv_dim), "ssm": (B,H,P,N)} for decode (S==1)."""
+    cdt = cfg.cdt
+    di, H, N, P = cfg.d_inner, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    B_, S, _ = x.shape
+    zxbcdt = x @ p["in_proj"].astype(cdt)
+    z, xBC, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * N], axis=-1)
+    z = shard(z, DATA_AXES, None, "model")
+    xBC = shard(xBC, DATA_AXES, None, "model")
+
+    if cache is None:
+        xBC, _ = _causal_conv(xBC, p["conv_w"].astype(cdt), p["conv_b"].astype(cdt))
+        xBC = jax.nn.silu(xBC)
+        xs, Bm, Cm = jnp.split(xBC, [di, di + N], axis=-1)
+        dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+        A = -jnp.exp(p["A_log"])
+        y, _ = _ssd_chunked(
+            xs.reshape(B_, S, H, P), dtv, A, Bm, Cm, min(cfg.ssm_chunk, S)
+        )
+        new_cache = None
+    elif S == 1:
+        # single-token recurrence
+        xBC, new_tail = _causal_conv(
+            xBC, p["conv_w"].astype(cdt), p["conv_b"].astype(cdt), tail=cache["conv"]
+        )
+        xBC = jax.nn.silu(xBC)
+        xs, Bm, Cm = jnp.split(xBC, [di, di + N], axis=-1)
+        dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,1,H)
+        A = -jnp.exp(p["A_log"])
+        dA = jnp.exp(dtv[:, 0, :] * A)  # (B,H)
+        xh = xs.reshape(B_, H, P).astype(jnp.float32)
+        st = cache["ssm"]  # (B,H,P,N)
+        st = dA[:, :, None, None] * st + jnp.einsum(
+            "bhp,bn,bh->bhpn", xh, Bm[:, 0].astype(jnp.float32), dtv[:, 0]
+        )
+        y = jnp.einsum("bhpn,bn->bhp", st, Cm[:, 0].astype(jnp.float32))
+        y = y.reshape(B_, 1, H, P)
+        new_cache = {"conv": new_tail, "ssm": st}
+        xs = xs.reshape(B_, S, di)
+    else:
+        # chunked prefill: seed from cache, emit final state (assumes fresh
+        # cache, i.e. prior state zero — the serve engine's prefill contract)
+        xBC, new_tail = _causal_conv(
+            xBC, p["conv_w"].astype(cdt), p["conv_b"].astype(cdt), tail=cache["conv"]
+        )
+        xBC = jax.nn.silu(xBC)
+        xs, Bm, Cm = jnp.split(xBC, [di, di + N], axis=-1)
+        dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+        A = -jnp.exp(p["A_log"])
+        y, final_state = _ssd_chunked(
+            xs.reshape(B_, S, H, P), dtv, A, Bm, Cm, min(cfg.ssm_chunk, S)
+        )
+        new_cache = {"conv": new_tail, "ssm": final_state}
+
+    y = y + p["D"][None, None, :, None] * xs.reshape(B_, S, H, P).astype(jnp.float32)
+    y = y.reshape(B_, S, di).astype(cdt)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(cdt)
+    return shard(out, DATA_AXES, None, None), new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, n_layers: int, dtype):
+    di, H, N, P = cfg.d_inner, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    conv_dim = di + 2 * N
+    return {
+        "conv": jnp.zeros((n_layers, batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((n_layers, batch, H, P, N), jnp.float32),
+    }

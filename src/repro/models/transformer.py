@@ -1,0 +1,385 @@
+"""Decoder-only LM covering the dense / GQA / MoE / SSM / hybrid families.
+
+Layers are scanned (`jax.lax.scan` over stacked parameters) so compiled HLO
+is O(1) in depth.  The hybrid (Zamba2) family interleaves a *shared*
+attention+MLP block every ``hybrid_attn_every`` SSM layers inside the same
+scan via ``lax.cond`` — one set of shared parameters, applied at multiple
+depths (the Zamba2 design), still a single compiled layer body.
+
+Public API:
+  init_lm(cfg, key)                      -> params
+  lm_forward(cfg, params, tokens|embeds) -> logits [+ aux]
+  lm_loss(cfg, params, batch)            -> scalar loss
+  init_decode_cache(cfg, batch, max_len) -> cache
+  lm_decode_step(cfg, params, cache, tok, idx) -> (logits, cache)
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import mlp as mlp_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import ModelConfig, dense_init, stack_layer_params
+from repro.models.norms import rms_norm
+from repro.models.rope import rope_angles
+from repro.parallel.sharding import DATA_AXES, shard
+
+
+# --------------------------------------------------------------- init ----
+
+
+def _init_block(cfg: ModelConfig, key):
+    """One decoder block (attention + ffn/moe) — dense & moe families."""
+    ka, kf = jax.random.split(key)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), cfg.pdt),
+        "attn": attn_mod.init_attention(cfg, ka),
+        "ln2": jnp.ones((cfg.d_model,), cfg.pdt),
+    }
+    if cfg.family == "moe":
+        p["moe"] = mlp_mod.init_moe(cfg, kf)
+    else:
+        p["mlp"] = mlp_mod.init_mlp(cfg, kf)
+    return p
+
+
+def _init_mamba_layer(cfg: ModelConfig, key):
+    return {
+        "ln": jnp.ones((cfg.d_model,), cfg.pdt),
+        "mamba": ssm_mod.init_mamba(cfg, key),
+    }
+
+
+def init_lm(cfg: ModelConfig, key):
+    ke, kl, kh, ks = jax.random.split(key, 4)
+    params = {
+        "embed": dense_init(ke, (cfg.vocab_size, cfg.d_model), cfg.pdt, scale=0.02),
+        "final_ln": jnp.ones((cfg.d_model,), cfg.pdt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(kh, (cfg.d_model, cfg.vocab_size), cfg.pdt)
+    if cfg.family in ("ssm", "hybrid"):
+        params["layers"] = stack_layer_params(
+            partial(_init_mamba_layer, cfg), cfg.n_layers, kl
+        )
+        if cfg.family == "hybrid":
+            kg1, kg2 = jax.random.split(ks)
+            params["shared"] = {
+                "ln1": jnp.ones((cfg.d_model,), cfg.pdt),
+                "attn": attn_mod.init_attention(cfg, kg1),
+                "ln2": jnp.ones((cfg.d_model,), cfg.pdt),
+                "mlp": mlp_mod.init_mlp(cfg, kg2),
+            }
+    else:
+        params["layers"] = stack_layer_params(
+            partial(_init_block, cfg), cfg.n_layers, kl
+        )
+    return params
+
+
+def param_sharding_rules(cfg: ModelConfig):
+    """pytree of PartitionSpec entries matching init_lm's structure.
+
+    2D FSDP + TP: Megatron tensor parallelism over "model" plus fully-sharded
+    parameters over the folded data axes ("pod","data") — XLA all-gathers
+    weights per layer (inside the scan) and reduce-scatters gradients, which
+    is what lets the 104B/314B training cells fit 16 GB/chip.  The leading
+    layer-stack axis is never sharded.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    F = ("pod", "data")  # FSDP axes (filtered to the active mesh)
+    attn_spec = {
+        "wq": P(None, F, "model"),
+        "wk": P(None, F, "model"),
+        "wv": P(None, F, "model"),
+        "wo": P(None, "model", F),
+    }
+    if cfg.qkv_bias:
+        attn_spec |= {"bq": P(None, "model"), "bk": P(None, "model"),
+                      "bv": P(None, "model")}
+    mlp_spec = {"wi": P(None, F, "model"), "wg": P(None, F, "model"),
+                "wo": P(None, "model", F)}
+    rules = {
+        "embed": P("model", F),
+        "final_ln": P(None),
+    }
+    if not cfg.tie_embeddings:
+        rules["lm_head"] = P(F, "model")
+    if cfg.family in ("ssm", "hybrid"):
+        rules["layers"] = {
+            "ln": P(None),
+            "mamba": {
+                "in_proj": P(None, F, "model"),
+                "conv_w": P(None, None, "model"),
+                "conv_b": P(None, "model"),
+                "A_log": P(None, None),
+                "D": P(None, None),
+                "dt_bias": P(None, None),
+                "norm_w": P(None, "model"),
+                "out_proj": P(None, "model", F),
+            },
+        }
+        if cfg.family == "hybrid":
+            shared_attn = {k: P(*s[1:]) for k, s in attn_spec.items()}
+            shared_mlp = {k: P(*s[1:]) for k, s in mlp_spec.items()}
+            rules["shared"] = {
+                "ln1": P(None), "attn": shared_attn,
+                "ln2": P(None), "mlp": shared_mlp,
+            }
+    else:
+        block = {"ln1": P(None), "attn": attn_spec, "ln2": P(None)}
+        if cfg.family == "moe":
+            block["moe"] = {
+                "router": P(None, F, None),
+                "wi": P(None, None, F, "model"),
+                "wg": P(None, None, F, "model"),
+                "wo": P(None, None, "model", F),
+            }
+        else:
+            block["mlp"] = mlp_spec
+        rules["layers"] = block
+    if cfg.dp_only:
+        rules = jax.tree.map(
+            _dp_only_param_spec, rules,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+    return rules
+
+
+def _dp_only_param_spec(spec):
+    """ZeRO-3 remap of a param spec: TP entries dropped, the FSDP entry
+    extends over the freed "model" axis."""
+    from jax.sharding import PartitionSpec as P
+
+    out = []
+    for e in spec:
+        if isinstance(e, (tuple, list)):
+            e = tuple(e)
+            if "model" not in e:
+                e = e + ("model",)
+            out.append(e)
+        elif e == "model":
+            out.append(None)
+        else:
+            out.append(e)
+    return P(*out)
+
+
+# ------------------------------------------------------------- forward ----
+
+
+def _res_spec(cfg: ModelConfig):
+    # sequence parallelism (Megatron-SP): the residual stream lives sharded
+    # over "model" along S between blocks, turning each TP all-reduce into a
+    # reduce-scatter + all-gather pair (half the wire bytes) and sharding the
+    # fp32 norm math 16-ways.
+    return (DATA_AXES, "model", None) if cfg.seq_parallel else (DATA_AXES, None, None)
+
+
+def _block_apply(cfg: ModelConfig, p, x, cos_sin, cache=None, cache_index=None):
+    h, new_cache = attn_mod.attention(
+        cfg, p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps),
+        cos_sin=cos_sin, cache=cache, cache_index=cache_index,
+    )
+    x = shard(x + h, *_res_spec(cfg))
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "moe":
+        h, aux = mlp_mod.moe(cfg, p["moe"], rms_norm(x, p["ln2"], cfg.norm_eps))
+    else:
+        h = mlp_mod.mlp(cfg, p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+    return shard(x + h, *_res_spec(cfg)), aux, new_cache
+
+
+def _shared_apply(cfg: ModelConfig, p, x, cos_sin, cache=None, cache_index=None):
+    h, new_cache = attn_mod.attention(
+        cfg, p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps),
+        cos_sin=cos_sin, cache=cache, cache_index=cache_index,
+    )
+    x = x + h
+    x = x + mlp_mod.mlp(cfg, p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+    return x, new_cache
+
+
+def _maybe_remat(cfg: ModelConfig, fn):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return fn
+
+
+def lm_forward(cfg: ModelConfig, params, tokens=None, *, embeds=None, positions=None):
+    """tokens (B,S) int32 or embeds (B,S,D) (stub frontends).  Returns
+    (logits (B,S,V), aux_loss)."""
+    cdt = cfg.cdt
+    if embeds is None:
+        x = params["embed"][tokens].astype(cdt)
+    else:
+        x = embeds.astype(cdt)
+    x = shard(x, *_res_spec(cfg))
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :] * jnp.ones((B, 1), jnp.int32)
+        if cfg.mrope_sections:
+            positions = jnp.broadcast_to(positions, (3, B, S))
+    cos_sin = (
+        rope_angles(positions, cfg.hd, cfg.rope_theta, cfg.mrope_sections)
+        if cfg.n_heads
+        else None
+    )
+
+    if cfg.family in ("ssm", "hybrid"):
+        shared = params.get("shared")
+        every = cfg.hybrid_attn_every
+
+        def body(carry, inp):
+            x = carry
+            i, lp = inp
+            h, _ = ssm_mod.mamba_block(cfg, lp["mamba"],
+                                       rms_norm(x, lp["ln"], cfg.norm_eps))
+            x = x + h
+            if shared is not None:
+                x = jax.lax.cond(
+                    (i + 1) % every == 0,
+                    lambda x: _shared_apply(cfg, shared, x, cos_sin)[0],
+                    lambda x: x,
+                    x,
+                )
+            return x, jnp.zeros((), jnp.float32)
+
+        body = _maybe_remat(cfg, body)
+        x, auxs = jax.lax.scan(body, x, (jnp.arange(cfg.n_layers), params["layers"]))
+    else:
+
+        def body(x, lp):
+            x, aux, _ = _block_apply(cfg, lp, x, cos_sin)
+            return x, aux
+
+        body = _maybe_remat(cfg, body)
+        x, auxs = jax.lax.scan(body, x, params["layers"])
+
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(cdt)
+    logits = shard(logits, DATA_AXES, None, "model")
+    return logits, auxs.mean()
+
+
+def sharded_xent(logits, labels, mask=None):
+    """Cross entropy that stays vocab-parallel.
+
+    ``take_along_axis`` on vocab-sharded logits makes GSPMD re-gather the
+    batch axis (a ~40 GB all-gather for a 150k vocab at 1M tokens); instead
+    the label logit is a one-hot contraction and logsumexp uses plain
+    reductions — both shard cleanly over the vocab axis with only (B, S)
+    sized collectives."""
+    lf = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(lf.max(axis=-1, keepdims=True))
+    lse = jnp.log(jnp.exp(lf - m).sum(axis=-1)) + m[..., 0]
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=lf.dtype)
+    label_logit = (lf * onehot).sum(axis=-1)
+    ll = label_logit - lse
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1)
+
+
+def lm_loss(cfg: ModelConfig, params, batch):
+    """batch: {"tokens": (B,S), "labels": (B,S), "mask": optional} -> scalar."""
+    logits, aux = lm_forward(
+        cfg, params, batch.get("tokens"), embeds=batch.get("embeds")
+    )
+    loss = sharded_xent(logits, batch["labels"], batch.get("mask"))
+    if cfg.family == "moe":
+        loss = loss + 0.01 * aux
+    return loss
+
+
+# -------------------------------------------------------------- decode ----
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int):
+    cdt = cfg.cdt
+    if cfg.family == "ssm":
+        return {"mamba": ssm_mod.init_mamba_cache(cfg, batch, cfg.n_layers, cdt)}
+    if cfg.family == "hybrid":
+        return {
+            "mamba": ssm_mod.init_mamba_cache(cfg, batch, cfg.n_layers, cdt),
+            "kv": attn_mod.init_kv_cache(cfg, batch, max_len, cfg.n_layers, cdt),
+        }
+    return {"kv": attn_mod.init_kv_cache(cfg, batch, max_len, cfg.n_layers, cdt)}
+
+
+def lm_decode_step(cfg: ModelConfig, params, cache, tokens, cache_index):
+    """One decode (S=1) or prefill (S>1, cache_index=0) step.
+
+    tokens (B, S) int32; cache_index: tokens already in the cache.
+    Returns (logits (B, S, V), new_cache)."""
+    cdt = cfg.cdt
+    x = params["embed"][tokens].astype(cdt)
+    B, S = tokens.shape
+    positions = cache_index + jnp.arange(S)[None, :] + jnp.zeros((B, 1), jnp.int32)
+    if cfg.mrope_sections:
+        positions = jnp.broadcast_to(positions, (3, B, S))
+    cos_sin = (
+        rope_angles(positions, cfg.hd, cfg.rope_theta, cfg.mrope_sections)
+        if cfg.n_heads
+        else None
+    )
+
+    if cfg.family in ("ssm", "hybrid"):
+        shared = params.get("shared")
+        every = cfg.hybrid_attn_every
+
+        def body(x, inp):
+            if shared is not None:
+                i, lp, mc, kvc = inp
+            else:
+                i, lp, mc = inp
+                kvc = None
+            h, new_mc = ssm_mod.mamba_block(
+                cfg, lp["mamba"], rms_norm(x, lp["ln"], cfg.norm_eps), cache=mc
+            )
+            x = x + h
+            new_kvc = kvc
+            if shared is not None:
+                def apply(op):
+                    x, kvc = op
+                    y, nc = _shared_apply(cfg, shared, x, cos_sin,
+                                          cache=kvc, cache_index=cache_index)
+                    return y, nc
+                x, new_kvc = jax.lax.cond(
+                    (i + 1) % every == 0, apply, lambda op: op, (x, kvc)
+                )
+            out = (new_mc, new_kvc) if shared is not None else (new_mc,)
+            return x, out
+
+        xs = [jnp.arange(cfg.n_layers), params["layers"], cache["mamba"]]
+        if shared is not None:
+            xs.append(cache["kv"])
+        x, new_caches = jax.lax.scan(body, x, tuple(xs))
+        new_cache = {"mamba": new_caches[0]}
+        if shared is not None:
+            new_cache["kv"] = new_caches[1]
+    else:
+
+        def body(x, inp):
+            lp, kvc = inp
+            x, _, new_kvc = _block_apply(cfg, lp, x, cos_sin,
+                                         cache=kvc, cache_index=cache_index)
+            return x, new_kvc
+
+        x, new_kv = jax.lax.scan(body, x, (params["layers"], cache["kv"]))
+        new_cache = {"kv": new_kv}
+
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(cdt)
+    return logits, new_cache

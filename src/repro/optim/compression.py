@@ -1,0 +1,69 @@
+"""Gradient compression for cross-pod data parallelism: int8 quantization
+with error feedback (EF-SGD style).
+
+On a multi-pod run the "pod" axis all-reduce crosses the slow inter-pod
+links; quantizing gradients to int8 with a per-tensor scale cuts that
+traffic 4x (fp32) / 2x (bf16), and the residual (quantization error) is fed
+back into the next step so the compression is unbiased in the long run.
+
+Used by the trainer's manual-DP mode (shard_map over "pod"): gradients are
+quantized, psummed over "pod" in int32, and dequantized.  Inside a pod the
+full-precision GSPMD all-reduce is kept (ICI is fast).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def quantize(x, *, bits: int = 8):
+    """Symmetric per-tensor int quantization. Returns (q int8/int16, scale)."""
+    qmax = 2 ** (bits - 1) - 1
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+    dt = jnp.int8 if bits <= 8 else jnp.int16
+    return q.astype(dt), scale.astype(jnp.float32)
+
+
+def dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, error):
+    """Quantize (grads + error). Returns (q_tree, scales, new_error)."""
+    def one(g, e):
+        t = g.astype(jnp.float32) + e
+        q, s = quantize(t)
+        deq = dequantize(q, s)
+        return q, s, t - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(error)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (
+        treedef.unflatten([o[0] for o in out]),
+        treedef.unflatten([o[1] for o in out]),
+        treedef.unflatten([o[2] for o in out]),
+    )
+
+
+def allreduce_compressed(grads, error, axis: str):
+    """psum int8 grads over `axis` (as int32 to avoid overflow), mean, dequant.
+
+    Scales are psum-maxed so every pod dequantizes identically."""
+    q, scales, new_error = compress_tree(grads, error)
+    n = jax.lax.psum(1, axis)
+    scale_max = jax.tree.map(lambda s: jax.lax.pmax(s, axis), scales)
+    # requantize against the shared scale so the sum is consistent
+    def resum(qi, s_local, s_shared):
+        v = dequantize(qi, s_local)
+        q2 = jnp.clip(jnp.round(v / s_shared), -127, 127).astype(jnp.int32)
+        total = jax.lax.psum(q2, axis)
+        return total.astype(jnp.float32) * s_shared / n
+
+    mean = jax.tree.map(resum, q, scales, scale_max)
+    return mean, new_error

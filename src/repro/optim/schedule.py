@@ -1,0 +1,19 @@
+"""LR schedules (multipliers on the base LR)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(warmup: int, total: int, floor: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(warmup, 1)
+        t = (step - warmup) / jnp.maximum(total - warmup, 1)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * jnp.clip(t, 0, 1)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return fn
+
+
+def constant():
+    return lambda step: jnp.ones_like(step, jnp.float32)

@@ -1,0 +1,1 @@
+from repro.roofline.analysis import HW_V5E, analyze_compiled  # noqa: F401

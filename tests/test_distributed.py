@@ -1,0 +1,28 @@
+"""Runs the multi-device decomposition-invariance harness in a subprocess
+(device count must be set before jax initializes; the main pytest process
+keeps the default single CPU device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+SRC = os.path.join(os.path.dirname(HERE), "src")
+
+
+@pytest.mark.slow
+def test_decomposition_invariance():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "distributed_harness.py")],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=900,
+    )
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr[-4000:])
+    assert proc.returncode == 0, "distributed harness failed"
+    assert "ALL DISTRIBUTED CHECKS PASSED" in proc.stdout

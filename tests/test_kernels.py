@@ -1,0 +1,142 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles.
+
+Sweeps shapes (block-aligned, ragged, smaller-than-block) and dtypes per the
+deliverable contract.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.mgemm import mgemm_xla
+from repro.core.synthetic import random_integer_vectors
+from repro.kernels.czek3 import czek3_step, czek3_step_ref
+from repro.kernels.mgemm import czek2_metric, czek2_metric_ref, mgemm, mgemm_ref
+from repro.kernels.mgemm_levels import (
+    mgemm_levels,
+    mgemm_levels_ref,
+    mgemm_levels_xla,
+)
+
+# small blocks so CPU interpret mode exercises multi-block grids
+BLK = dict(bm=8, bn=16, bk=32)
+SHAPES = [
+    (8, 32, 16),     # exactly one block
+    (16, 64, 32),    # multi-block all dims
+    (8, 32, 16 + 5), # ragged n
+    (11, 45, 7),     # ragged everything, k < bk
+    (24, 96, 33),
+]
+
+
+def _rand(m, k, n, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    A = rng.random((m, k)).astype(dtype) * 4
+    B = rng.random((k, n)).astype(dtype) * 4
+    return A, B
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("dtype", [np.float32, np.float16, jnp.bfloat16])
+def test_mgemm_pallas_vs_ref(m, k, n, dtype):
+    A, B = _rand(m, k, n, np.float32, seed=m * k + n)
+    A = jnp.asarray(A, dtype)
+    B = jnp.asarray(B, dtype)
+    got = mgemm(A, B, interpret=True, **BLK)
+    want = mgemm_ref(A, B)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-6, atol=2e-6)
+
+
+@pytest.mark.parametrize("k_chunk", [1, 4, 8])
+def test_mgemm_k_chunk_sweep(k_chunk):
+    A, B = _rand(16, 64, 24, np.float32)
+    got = mgemm(jnp.asarray(A), jnp.asarray(B), interpret=True, k_chunk=k_chunk, **BLK)
+    want = mgemm_ref(jnp.asarray(A), jnp.asarray(B))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_mgemm_pallas_vs_xla_impl():
+    A, B = _rand(13, 50, 21, np.float32, seed=3)
+    a, b = jnp.asarray(A), jnp.asarray(B)
+    np.testing.assert_allclose(
+        np.asarray(mgemm(a, b, interpret=True, **BLK)),
+        np.asarray(mgemm_xla(a, b)),
+        rtol=1e-6,
+    )
+
+
+def test_mgemm_exact_on_integers():
+    """Integer inputs: the kernel must be bit-exact vs the oracle."""
+    V = random_integer_vectors(64, 24, max_value=7, seed=1)
+    A = jnp.asarray(V.T)
+    B = jnp.asarray(V)
+    got = np.asarray(mgemm(A, B, interpret=True, **BLK))
+    want = np.asarray(mgemm_ref(A, B))
+    assert (got == want).all()
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES[:3])
+def test_czek2_fused_metric(m, k, n):
+    A, B = _rand(m, k, n, np.float32, seed=7)
+    A, B = jnp.asarray(A), jnp.asarray(B)
+    sa = A.sum(axis=1)
+    sb = B.sum(axis=0)
+    got = czek2_metric(A, B, sa, sb, interpret=True, **BLK)
+    want = czek2_metric_ref(A, B, sa, sb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-6)
+
+
+# ----------------------------------------------------------- levels (MXU) --
+
+
+@pytest.mark.parametrize("levels", [1, 2, 3, 7])
+@pytest.mark.parametrize("m,k,n", [(8, 32, 16), (13, 40, 21)])
+def test_levels_exact_for_quantized(levels, m, k, n):
+    rng = np.random.default_rng(levels)
+    A = rng.integers(0, levels + 1, (m, k)).astype(np.float32)
+    B = rng.integers(0, levels + 1, (k, n)).astype(np.float32)
+    a, b = jnp.asarray(A), jnp.asarray(B)
+    want = np.asarray(mgemm_ref(a, b))  # true min-plus
+    got = np.asarray(mgemm_levels(a, b, levels=levels, interpret=True, bm=8, bn=16, bk=32))
+    assert (got == want).all(), "level decomposition must be EXACT for ints <= L"
+    got_ref = np.asarray(mgemm_levels_ref(a, b, levels=levels))
+    assert (got_ref == want).all()
+    got_xla = np.asarray(mgemm_levels_xla(a, b, levels=levels))
+    assert (got_xla == want).all()
+
+
+def test_levels_sorenson_binary_case():
+    """L=1 is the paper's §2.3 Sorenson fast path: min == AND == product."""
+    rng = np.random.default_rng(0)
+    A = (rng.random((16, 64)) < 0.3).astype(np.float32)
+    B = (rng.random((64, 8)) < 0.3).astype(np.float32)
+    got = np.asarray(mgemm_levels(jnp.asarray(A), jnp.asarray(B), levels=1,
+                                  interpret=True, bm=8, bn=8, bk=32))
+    want = A @ B
+    assert (got == want).all()
+
+
+# ------------------------------------------------------------- czek3 step --
+
+
+@pytest.mark.parametrize("nf,m,n", [(32, 8, 16), (45, 11, 7), (64, 24, 24)])
+def test_czek3_fused_step(nf, m, n):
+    rng = np.random.default_rng(nf)
+    own = jnp.asarray(rng.random((nf, m)).astype(np.float32) * 3)
+    x = jnp.asarray(rng.random((nf,)).astype(np.float32) * 3)
+    right = jnp.asarray(rng.random((nf, n)).astype(np.float32) * 3)
+    got = czek3_step(own, x, right, interpret=True, **BLK)
+    want = czek3_step_ref(own, x, right)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_czek3_equals_unfused_composition():
+    """Fused kernel == materialize X_j then 2-way mGEMM (paper's formulation)."""
+    rng = np.random.default_rng(5)
+    nf, m, n = 40, 12, 9
+    own = jnp.asarray(rng.integers(0, 8, (nf, m)).astype(np.float32))
+    x = jnp.asarray(rng.integers(0, 8, (nf,)).astype(np.float32))
+    right = jnp.asarray(rng.integers(0, 8, (nf, n)).astype(np.float32))
+    X = jnp.minimum(own, x[:, None])
+    want = np.asarray(mgemm_ref(X.T, right))
+    got = np.asarray(czek3_step(own, x, right, interpret=True, **BLK))
+    assert (got == want).all()

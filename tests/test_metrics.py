@@ -1,0 +1,87 @@
+"""Oracle-level tests for the Proportional Similarity metric definitions."""
+import numpy as np
+import pytest
+
+from repro.core import metrics
+from repro.core.synthetic import analytic_window_vectors, random_integer_vectors
+
+
+def test_czek2_matches_numpy_oracle():
+    V = random_integer_vectors(40, 12, seed=1)
+    got = np.asarray(metrics.czek2_metric(V))
+    want = metrics.czek2_metric_np(V)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_czek2_symmetry_and_selfsimilarity():
+    V = random_integer_vectors(30, 9, seed=2).astype(np.float64)
+    c = np.asarray(metrics.czek2_metric(V))
+    np.testing.assert_allclose(c, c.T)
+    np.testing.assert_allclose(np.diag(c), 1.0)  # c2(v, v) = 1
+
+
+def test_czek2_range():
+    V = random_integer_vectors(25, 14, seed=3)
+    c = np.asarray(metrics.czek2_metric(V))
+    assert (c >= 0).all() and (c <= 1 + 1e-6).all()
+
+
+def test_czek3_matches_numpy_oracle():
+    V = random_integer_vectors(20, 7, seed=4)
+    got = np.asarray(metrics.czek3_metric(V))
+    want = metrics.czek3_metric_np(V)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_czek3_permutation_symmetry():
+    V = random_integer_vectors(15, 6, seed=5).astype(np.float64)
+    c = np.asarray(metrics.czek3_metric(V))
+    for perm in [(0, 2, 1), (1, 0, 2), (2, 1, 0), (1, 2, 0), (2, 0, 1)]:
+        np.testing.assert_allclose(c, np.transpose(c, perm))
+
+
+def test_czek3_reduces_to_czek2_when_duplicated():
+    # c3(u, u, w): n3 = n2(u,u) + 2 n2(u,w) - n2(u,w) = s_u + n2(u,w)
+    V = random_integer_vectors(18, 5, seed=6).astype(np.float64)
+    c3 = np.asarray(metrics.czek3_metric(V))
+    s = V.sum(axis=0)
+    n2 = np.asarray(metrics.czek2_numerators(V))
+    for u in range(5):
+        for w in range(5):
+            want = 1.5 * (s[u] + n2[u, w]) / (2 * s[u] + s[w])
+            np.testing.assert_allclose(c3[u, u, w], want, rtol=1e-6)
+
+
+def test_analytic_windows_n2_and_n3():
+    V, aw = analytic_window_vectors(48, 20, width=10, seed=7)
+    # brute force overlaps
+    n2_ref = np.minimum(V[:, :, None], V[:, None, :]).sum(axis=0)
+    I, J = np.meshgrid(np.arange(20), np.arange(20), indexing="ij")
+    np.testing.assert_allclose(aw.n2(I, J), n2_ref)
+    np3_ref = np.minimum(
+        np.minimum(V[:, :, None, None], V[:, None, :, None]), V[:, None, None, :]
+    ).sum(axis=0)
+    I, J, K = np.meshgrid(*([np.arange(20)] * 3), indexing="ij")
+    np.testing.assert_allclose(aw.nprime3(I, J, K), np3_ref)
+
+
+def test_analytic_windows_metrics():
+    V, aw = analytic_window_vectors(60, 15, width=12, seed=8)
+    c2 = metrics.czek2_metric_np(V)
+    I, J = np.meshgrid(np.arange(15), np.arange(15), indexing="ij")
+    np.testing.assert_allclose(aw.c2(I, J), c2, rtol=1e-12)
+    c3 = metrics.czek3_metric_np(V)
+    I, J, K = np.meshgrid(*([np.arange(15)] * 3), indexing="ij")
+    np.testing.assert_allclose(aw.c3(I, J, K), c3, rtol=1e-12)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_integer_inputs_are_exact(dtype):
+    """Integer-valued inputs make sums order-independent (paper's bit-for-bit
+    reproducibility depends on this)."""
+    V = random_integer_vectors(100, 8, max_value=31, seed=9, dtype=dtype)
+    n = np.asarray(metrics.czek2_numerators(V))
+    # permuting the field axis must give bit-identical numerators
+    perm = np.random.default_rng(0).permutation(100)
+    n2 = np.asarray(metrics.czek2_numerators(V[perm]))
+    assert (n == n2).all()

@@ -1,0 +1,144 @@
+"""Exhaustive verification of the paper's redundancy-elimination schedules.
+
+These tests are the ground truth for the engines: every unique pair/triple is
+covered exactly once, and the work is balanced as the paper claims.
+"""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core.plan2 import TwoWayPlan, covered_block_pairs, global_pairs_of_block
+from repro.core.plan3 import ItemKind, ThreeWayPlan, vol_slice_rule
+
+
+# ---------------------------------------------------------------- 2-way ----
+
+
+@pytest.mark.parametrize("n_pv", [1, 2, 3, 4, 5, 6, 7, 8, 16])
+def test_2way_block_coverage(n_pv):
+    pairs = covered_block_pairs(n_pv)
+    want = [tuple(sorted(p)) for p in itertools.combinations_with_replacement(range(n_pv), 2)]
+    assert sorted(pairs) == sorted(want)
+    assert len(pairs) == len(set(pairs)), "block pair computed twice"
+
+
+@pytest.mark.parametrize("n_pv,n_pr", [(4, 1), (5, 1), (4, 2), (6, 2), (8, 4), (16, 3)])
+def test_2way_load_balance(n_pv, n_pr):
+    plan = TwoWayPlan(n_pv, n_pr)
+    w = plan.work_per_rank()
+    # every rank within 1 block of every other (paper's claim for the
+    # circulant schedule; the pr round-robin adds at most 1 more)
+    assert w.max() - w.min() <= 2
+    assert w.sum() == len(plan.all_computed_blocks())
+
+
+@pytest.mark.parametrize("n_pv,n_vp", [(1, 7), (2, 4), (3, 5), (4, 4), (5, 3), (8, 2)])
+def test_2way_global_pair_coverage(n_pv, n_vp):
+    plan = TwoWayPlan(n_pv, 1)
+    n_v = n_pv * n_vp
+    seen = set()
+    for p_v, d, col in plan.all_computed_blocks():
+        I, J, mask = global_pairs_of_block(p_v, col, n_vp)
+        for i, j in zip(I[mask], J[mask]):
+            key = (min(i, j), max(i, j))
+            assert key not in seen, f"pair {key} computed twice"
+            assert i != j
+            seen.add(key)
+    assert len(seen) == n_v * (n_v - 1) // 2
+
+
+def test_2way_rank_computes_matches_blocks():
+    plan = TwoWayPlan(6, 2)
+    executed = [
+        (p_v, d)
+        for d in range(plan.n_steps)
+        for p_r in range(plan.n_pr)
+        for p_v in range(plan.n_pv)
+        if plan.rank_computes(p_v, p_r, d)
+    ]
+    blocks = [(p_v, d) for p_v, d, _ in plan.all_computed_blocks()]
+    assert sorted(executed) == sorted(blocks)
+
+
+# ---------------------------------------------------------------- 3-way ----
+
+
+def test_vol_slice_rule_is_exact_sixths():
+    """The six permutation-image blocks of an unordered block triple select
+    six distinct sixths, all on the axis carrying the middle id."""
+    for ids in itertools.combinations(range(7), 3):
+        seen = set()
+        for perm in itertools.permutations(ids):
+            ax, idx = vol_slice_rule(*perm)
+            # the sliced axis must hold the middle id
+            assert perm[ax] == sorted(ids)[1]
+            seen.add(idx)
+        assert seen == set(range(6))
+
+
+@pytest.mark.parametrize("n_pv", [1, 2, 3, 4, 5])
+def test_3way_item_count(n_pv):
+    plan = ThreeWayPlan(n_pv, 1)
+    assert len(plan.slab_items()) == (n_pv + 1) * (n_pv + 2)
+
+
+@pytest.mark.parametrize(
+    "n_pv,n_vp,n_st",
+    [(1, 6, 1), (2, 6, 1), (3, 6, 1), (4, 6, 1), (3, 12, 1), (3, 12, 2), (2, 12, 2)],
+)
+def test_3way_global_triple_coverage(n_pv, n_vp, n_st):
+    """THE key schedule property: union over slabs, items and stages covers
+    every unique triple i<j<k exactly once."""
+    plan = ThreeWayPlan(n_pv, 1, n_st)
+    n_v = n_pv * n_vp
+    seen = {}
+    for p_v in range(n_pv):
+        for it in plan.items_of(p_v, 0):
+            for st in range(n_st):
+                gi, gj, gk = plan.item_cells(p_v, it, n_vp, st)
+                for a, b, c in zip(gi, gj, gk):
+                    key = tuple(sorted((a, b, c)))
+                    assert len(set(key)) == 3, f"degenerate triple {key} ({it})"
+                    assert key not in seen, f"triple {key} twice: {seen[key]} and {it}"
+                    seen[key] = (p_v, it)
+    assert len(seen) == n_v * (n_v - 1) * (n_v - 2) // 6
+
+
+@pytest.mark.parametrize("n_pv,n_pr", [(3, 1), (3, 4), (4, 5), (5, 7)])
+def test_3way_round_robin_partitions_items(n_pv, n_pr):
+    plan = ThreeWayPlan(n_pv, n_pr)
+    all_items = {it.sb for it in plan.slab_items()}
+    union = set()
+    for p_r in range(n_pr):
+        mine = {it.sb for it in plan.items_of(0, p_r)}
+        assert union.isdisjoint(mine)
+        union |= mine
+    assert union == all_items
+    w = plan.work_per_rank()
+    assert w.max() - w.min() <= 1
+
+
+def test_3way_load_imbalance_factor_matches_paper():
+    """Paper: slices per slab = (n_pv+1)(n_pv+2) with imbalance factor
+    n_pv^2 / ((n_pv+1)(n_pv+2)) -> 1 as n_pv grows."""
+    for n_pv in (4, 8, 16, 64):
+        plan = ThreeWayPlan(n_pv, 1)
+        vol = sum(1 for it in plan.slab_items() if it.kind == ItemKind.VOL)
+        total = len(plan.slab_items())
+        assert vol == (n_pv - 1) * (n_pv - 2)
+        factor = n_pv**2 / total
+        assert abs(factor - n_pv**2 / ((n_pv + 1) * (n_pv + 2))) < 1e-12
+        if n_pv == 64:
+            assert factor > 0.95  # becomes insignificant at scale
+
+
+def test_3way_stage_union_is_sixth():
+    plan = ThreeWayPlan(2, 1, n_st=3)
+    n_vp = 18
+    for s in range(6):
+        rngs = [plan.sixth_bounds(n_vp, s, st) for st in range(3)]
+        covered = sorted(itertools.chain(*[range(lo, hi) for lo, hi in rngs]))
+        lo6 = s * n_vp // 6
+        hi6 = (s + 1) * n_vp // 6
+        assert covered == list(range(lo6, hi6))

@@ -1,0 +1,160 @@
+"""Training substrate tests: optimizer, data determinism, checkpoint/restart
+(bit-exact), failure injection, straggler watchdog, serving."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke_config
+from repro.data.tokens import PrefetchIterator, SyntheticTokens
+from repro.models import api
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, global_norm
+from repro.optim.schedule import warmup_cosine
+from repro.optim import compression
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.train.trainer import SimulatedFailure, Trainer, TrainerConfig
+
+
+def _tree_equal(a, b):
+    return all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+
+
+def test_adamw_reduces_loss_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = adamw_init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw_update(cfg, g, state, params)
+    assert float(loss(params)) < 1e-3
+
+
+def test_grad_clipping():
+    cfg = AdamWConfig(lr=0.0, clip_norm=1.0)
+    params = {"w": jnp.ones(4)}
+    state = adamw_init(params)
+    g = {"w": jnp.full(4, 100.0)}
+    _, _, m = adamw_update(cfg, g, state, params)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_schedule_shape():
+    s = warmup_cosine(10, 100)
+    assert float(s(jnp.array(0))) == 0.0
+    assert float(s(jnp.array(10))) == pytest.approx(1.0)
+    assert float(s(jnp.array(100))) == pytest.approx(0.1, abs=1e-3)
+
+
+def test_data_determinism_and_sharding():
+    src = SyntheticTokens(vocab_size=100, batch=8, seq_len=16, seed=3)
+    a = src.batch_at(5)
+    b = src.batch_at(5)
+    assert np.array_equal(a["tokens"], b["tokens"])
+    s0 = SyntheticTokens(vocab_size=100, batch=8, seq_len=16, seed=3,
+                         shard=0, num_shards=2)
+    s1 = SyntheticTokens(vocab_size=100, batch=8, seq_len=16, seed=3,
+                         shard=1, num_shards=2)
+    assert s0.local_batch == 4
+    assert not np.array_equal(s0.batch_at(0)["tokens"], s1.batch_at(0)["tokens"])
+
+
+def test_prefetch_iterator_order():
+    src = SyntheticTokens(vocab_size=50, batch=2, seq_len=8)
+    it = PrefetchIterator(src, start_step=7)
+    for want in (7, 8, 9):
+        step, batch = next(it)
+        assert step == want
+        assert np.array_equal(batch["tokens"], src.batch_at(want)["tokens"])
+    it.close()
+
+
+def test_compression_roundtrip_error_feedback():
+    g = {"w": jnp.array([0.5, -0.25, 1.0, 3.0])}
+    err = compression.ef_init(g)
+    q, s, new_err = compression.compress_tree(g, err)
+    deq = compression.dequantize(q["w"], s["w"])
+    np.testing.assert_allclose(deq + new_err["w"], g["w"], rtol=1e-6)
+    assert q["w"].dtype == jnp.int8
+
+
+def test_trainer_checkpoint_restart_bit_exact(tmp_path):
+    cfg = get_smoke_config("qwen1.5-0.5b")
+    tdir = str(tmp_path / "ck")
+    # uninterrupted run: 8 steps
+    t1 = Trainer(cfg, TrainerConfig(steps=8, ckpt_every=4, ckpt_dir=tdir + "a",
+                                    batch=2, seq_len=16))
+    s1 = t1.train()
+    # interrupted run: fail at 5, restart from ckpt @4, finish
+    tc = TrainerConfig(steps=8, ckpt_every=4, ckpt_dir=tdir + "b",
+                       batch=2, seq_len=16, fail_at_step=5)
+    t2 = Trainer(cfg, tc)
+    with pytest.raises(SimulatedFailure):
+        t2.train()
+    tc2 = TrainerConfig(steps=8, ckpt_every=4, ckpt_dir=tdir + "b",
+                        batch=2, seq_len=16)
+    t3 = Trainer(cfg, tc2)
+    s3 = t3.train()  # resumes from step 4
+    assert s3.step == 8
+    assert _tree_equal(s1.params, s3.params), "restart must be bit-exact"
+
+
+def test_checkpoint_retention_and_atomicity(tmp_path):
+    from repro.checkpoint.ckpt import CheckpointManager
+
+    m = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"a": jnp.arange(5), "b": {"c": jnp.ones((2, 2))}}
+    for s in (1, 2, 3):
+        m.save(s, tree, blocking=True)
+    assert m.available_steps() == [2, 3]
+    got, step = m.restore(tree)
+    assert step == 3
+    assert _tree_equal(got, tree)
+    assert not any(p.endswith(".tmp") for p in os.listdir(tmp_path))
+
+
+def test_straggler_watchdog():
+    from repro.train.straggler import StragglerWatchdog
+
+    w = StragglerWatchdog(min_samples=3, threshold=2.0)
+    for i in range(5):
+        assert w.observe(i, 0.1) is None
+    ev = w.observe(5, 1.0)
+    assert ev is not None and ev.step == 5
+    assert len(w.events) == 1
+
+
+def test_trainer_straggler_integration():
+    cfg = get_smoke_config("qwen1.5-0.5b")
+    tc = TrainerConfig(steps=10, ckpt_every=100, ckpt_dir="/tmp/repro_strag",
+                       batch=2, seq_len=8,
+                       inject_delay=lambda s: 0.3 if s == 8 else 0.0)
+    t = Trainer(cfg, tc)
+    t.watchdog.min_samples = 3
+    t.watchdog.threshold = 2.0
+    t.train(t.init_state())
+    assert any(e.step == 8 for e in t.watchdog.events)
+
+
+def test_serve_engine_greedy_deterministic():
+    cfg = get_smoke_config("llama3-8b")
+    params = api.init_model(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, ServeConfig(max_new_tokens=8))
+    prompts = np.array([[5, 6, 7], [9, 10, 11]], np.int32)
+    a = eng.generate(prompts)
+    b = eng.generate(prompts)
+    assert a.shape == (2, 8)
+    assert np.array_equal(a, b)
+
+
+def test_serve_engine_ssm():
+    cfg = get_smoke_config("mamba2-1.3b")
+    params = api.init_model(cfg, jax.random.PRNGKey(1))
+    eng = ServeEngine(cfg, params, ServeConfig(max_new_tokens=5))
+    out = eng.generate(np.array([[3, 4]], np.int32))
+    assert out.shape == (1, 5)
