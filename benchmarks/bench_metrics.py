@@ -1,0 +1,44 @@
+"""API-level campaign throughput: one row per (registered metric, way).
+
+Times full ``SimilarityEngine.run`` campaigns — request validation, mesh
+lookup, dispatch, device compute and host readback — so the numbers reflect
+what a caller of the unified API actually gets, not just kernel time.
+Derived column: elementwise comparisons/second (the paper's headline
+metric).
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.util import row
+from repro.api import SimilarityEngine, SimilarityRequest, available_metrics
+from repro.core.synthetic import random_integer_vectors
+
+N_F2, N_V2 = 512, 256  # 2-way campaign shape
+N_F3, N_V3 = 64, 48  # 3-way campaign shape (O(n^3) results)
+
+
+def main():
+    engine = SimilarityEngine()
+    V2 = random_integer_vectors(N_F2, N_V2, seed=0)
+    V3 = random_integer_vectors(N_F3, N_V3, seed=0)
+    rows = []
+    for name in available_metrics():
+        for way, V in ((2, V2), (3, V3)):
+            req = SimilarityRequest(metric=name, way=way)
+            engine.run(req, V)  # warmup/compile
+            t0 = time.perf_counter()
+            result = engine.run(req, V)
+            dt = time.perf_counter() - t0
+            comparisons = result.num_results() * V.shape[0]
+            rows.append(row(
+                f"api/{name}/{way}way", dt,
+                f"{comparisons / dt:.3e}_cmp/s_results={result.num_results()}",
+            ))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.util import print_rows
+
+    print_rows(main())

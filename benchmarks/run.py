@@ -1,4 +1,5 @@
-"""Benchmark driver — one module per paper table/figure.
+"""Benchmark driver — one module per paper table/figure, plus the ``api``
+module covering the unified SimilarityEngine per registered metric.
 
 Prints ``name,us_per_call,derived`` CSV.  Scaling (Figs 6-10) runs in a
 subprocess with 8 virtual devices; everything else runs on this process's
@@ -16,6 +17,7 @@ def main() -> None:
         bench_accel_ratio,
         bench_kernel,
         bench_max_rates,
+        bench_metrics,
         bench_normalized,
         bench_phewas_sample,
         bench_scaling,
@@ -25,6 +27,7 @@ def main() -> None:
 
     modules = [
         ("table1", bench_kernel),
+        ("api", bench_metrics),
         ("table2", bench_accel_ratio),
         ("fig6-10", bench_scaling),
         ("table3-4", bench_max_rates),

@@ -15,26 +15,27 @@ import time  # noqa: E402
 import numpy as np  # noqa: E402
 
 
-def measure(way, n_f, n_v, n_pv, n_pr=1, n_st=1):
-    from repro.core.threeway import czek3_distributed
-    from repro.core.twoway import CometConfig, czek2_distributed
-    from repro.parallel.mesh import make_comet_mesh
+_ENGINE = None
 
+
+def measure(way, n_f, n_v, n_pv, n_pr=1, n_st=1):
+    from repro.api import SimilarityEngine, SimilarityRequest
     from repro.core.synthetic import random_integer_vectors
 
+    global _ENGINE
+    if _ENGINE is None:
+        _ENGINE = SimilarityEngine()  # mesh cache shared across the sweep
+
     V = random_integer_vectors(n_f, n_v, seed=0)
-    cfg = CometConfig(n_pv=n_pv, n_pr=n_pr, n_st=n_st)
-    mesh = make_comet_mesh(1, n_pv, n_pr)
-    run = (
-        (lambda: czek2_distributed(V, mesh, cfg))
-        if way == 2
-        else (lambda: czek3_distributed(V, mesh, cfg, stage=0))
+    req = SimilarityRequest(
+        way=way, n_pv=n_pv, n_pr=n_pr, n_st=n_st,
+        stages=(0,) if way == 3 else None,
     )
-    out = run()  # warmup/compile
+    _ENGINE.run(req, V)  # warmup/compile
     t0 = time.perf_counter()
-    out = run()
+    out = _ENGINE.run(req, V)
     dt = time.perf_counter() - t0
-    n_results = out.num_pairs() if way == 2 else out.num_triples()
+    n_results = out.num_results()
     return {
         "way": way, "n_f": n_f, "n_v": n_v, "n_pv": n_pv, "n_pr": n_pr,
         "seconds": dt, "results": n_results,

@@ -1,8 +1,9 @@
-"""End-to-end PheWAS-style similarity campaign (paper §6.8 workflow).
+"""End-to-end PheWAS-style similarity campaign (paper §6.8 workflow) on the
+unified API.
 
 Synthetic SNP association profiles (values {0,1,2} like allele counts) ->
 distributed 2-way Czekanowski metrics on the MXU-exact level-decomposition
-path -> thresholded output written per-rank with a manifest + exact
+path -> thresholded output + full result saved with a manifest and exact
 checksum -> staged 3-way pass over the strongest cluster.
 
     PYTHONPATH=src python examples/genomics_phewas.py [--n-v 600] [--n-f 385]
@@ -13,11 +14,8 @@ import os
 
 import numpy as np
 
-from repro.core import checksum as ck
+from repro.api import SimilarityEngine, SimilarityRequest
 from repro.core.synthetic import random_integer_vectors
-from repro.core.threeway import czek3_distributed
-from repro.core.twoway import CometConfig, czek2_distributed
-from repro.parallel.mesh import make_comet_mesh
 
 
 def main():
@@ -30,46 +28,48 @@ def main():
 
     # {0,1,2} allele-count-like profiles: exact on the levels (MXU) path
     V = random_integer_vectors(args.n_f, args.n_v, max_value=2, seed=11)
-    mesh = make_comet_mesh(1, 1, 1)
-    cfg = CometConfig(impl="levels_xla", levels=2, out_dtype="float32")
+    engine = SimilarityEngine()
 
-    out = czek2_distributed(V, mesh, cfg)
+    result = engine.run(
+        SimilarityRequest(metric="czekanowski", way=2,
+                          impl="levels_xla", levels=2), V)
     os.makedirs(args.out, exist_ok=True)
+    # streaming tile scan: the hit filter never materializes the dense matrix
     n_hits = 0
-    parts = []
     hits = []
-    for I, J, W in out.entries():
-        parts.append(ck.raw_pairs(I, J, W))
-        sel = W >= args.threshold
+    for tile in result.tiles():
+        I, J = tile.index
+        sel = tile.values >= args.threshold
         n_hits += int(sel.sum())
-        hits.extend(zip(I[sel].tolist(), J[sel].tolist(), W[sel].tolist()))
-        # paper §6.8: metrics written as single bytes (~2.5 sig figs)
+        hits.extend(zip(I[sel].tolist(), J[sel].tolist(),
+                        tile.values[sel].tolist()))
+    # paper §6.8: metrics written as single bytes (~2.5 sig figs)
     u8 = {(i, j): int(w * 255 + 0.5) for i, j, w in hits}
     with open(os.path.join(args.out, "hits_u8.json"), "w") as f:
         json.dump({f"{i},{j}": v for (i, j), v in u8.items()}, f)
-    checksum = ck.combine(parts)
-    manifest = {
+    manifest = result.save(os.path.join(args.out, "full"))
+    summary = {
         "n_f": args.n_f, "n_v": args.n_v,
-        "pairs": out.num_pairs(), "hits": n_hits,
-        "threshold": args.threshold, "checksum": hex(checksum),
+        "pairs": result.num_results(), "hits": n_hits,
+        "threshold": args.threshold, "checksum": manifest["checksum"],
     }
     with open(os.path.join(args.out, "manifest.json"), "w") as f:
-        json.dump(manifest, f, indent=2)
-    print(json.dumps(manifest, indent=2))
+        json.dump(summary, f, indent=2)
+    print(json.dumps(summary, indent=2))
 
-    # 3-way follow-up on the densest hub vectors (staged like the paper)
+    # 3-way follow-up on the densest hub vectors (staged like the paper):
+    # stages=None runs every stage of n_st through one request
     deg = np.zeros(args.n_v, int)
     for i, j, _ in hits:
         deg[i] += 1
         deg[j] += 1
     hub = np.argsort(-deg)[:36]
-    cfg3 = CometConfig(n_st=2, out_dtype="float32")
-    total = 0
-    for stage in range(2):
-        out3 = czek3_distributed(V[:, hub], mesh, cfg3, stage=stage)
-        total += out3.num_triples()
-        print(f"stage {stage}: {out3.num_triples()} triples")
-    print(f"3-way follow-up on {len(hub)} hub vectors: {total} unique triples")
+    out3 = engine.run(
+        SimilarityRequest(metric="czekanowski", way=3, n_st=2, stages=None),
+        V[:, hub],
+    )
+    print(f"3-way follow-up on {len(hub)} hub vectors: "
+          f"{out3.num_results()} unique triples over stages {list(out3.stages)}")
 
 
 if __name__ == "__main__":

@@ -1,38 +1,39 @@
-"""Quickstart: all-pairs + all-triples Proportional Similarity in 30 lines.
+"""Quickstart: all-pairs + all-triples similarity through the unified API.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
+from repro.api import SimilarityEngine, SimilarityRequest, available_metrics
 from repro.core.synthetic import random_integer_vectors
-from repro.core.twoway import CometConfig, czek2_distributed
-from repro.core.threeway import czek3_distributed
-from repro.parallel.mesh import make_comet_mesh
 
 
 def main():
     # 200 vectors of 128 fields — think "SNP profiles" or "metabolite peaks"
     V = random_integer_vectors(n_f=128, n_v=198, max_value=15, seed=7)
-    mesh = make_comet_mesh(1, 1, 1)  # single device; scales via (pf, pv, pr)
-    cfg = CometConfig(out_dtype="float32")
+    engine = SimilarityEngine()  # owns mesh construction; scales via (pf,pv,pr)
+    print(f"registered metrics: {available_metrics()}")
 
-    out2 = czek2_distributed(V, mesh, cfg)
-    print(f"2-way: {out2.num_pairs()} unique pairs, checksum {hex(out2.checksum())[:18]}")
-    pairs = [(i, j, w) for I, J, W in out2.entries() for i, j, w in zip(I, J, W)]
+    out2 = engine.run(SimilarityRequest(metric="czekanowski", way=2), V)
+    print(f"2-way: {out2.num_results()} unique pairs, "
+          f"checksum {hex(out2.checksum())[:18]}")
+    pairs = [(i, j, w) for i, j, w in out2.entries()]
     for i, j, w in sorted(pairs, key=lambda t: -t[2])[:5]:
         print(f"  most similar: v{i} ~ v{j}  c2={w:.4f}")
 
     # 3-way on a subset (O(n^3) results!)
-    out3 = czek3_distributed(V[:, :48], mesh, cfg, stage=0)
-    print(f"3-way: {out3.num_triples()} unique triples, "
+    out3 = engine.run(SimilarityRequest(metric="czekanowski", way=3), V[:, :48])
+    print(f"3-way: {out3.num_results()} unique triples, "
           f"checksum {hex(out3.checksum())[:18]}")
-    triples = [
-        (i, j, k, w)
-        for I, J, K, W in out3.entries()
-        for i, j, k, w in zip(I, J, K, W)
-    ]
+    triples = [(i, j, k, w) for i, j, k, w in out3.entries()]
     for i, j, k, w in sorted(triples, key=lambda t: -t[3])[:5]:
         print(f"  most similar: (v{i}, v{j}, v{k})  c3={w:.4f}")
+
+    # any registered metric runs through the same engine — e.g. the Custom
+    # Correlation Coefficient of the companion paper (arXiv:1705.08213)
+    ccc = engine.run(SimilarityRequest(metric="ccc", way=2), V)
+    top = max(ccc.entries(), key=lambda t: t[2])
+    print(f"ccc:   top pair v{top[0]} ~ v{top[1]}  ccc={top[2]:.4f}")
 
 
 if __name__ == "__main__":

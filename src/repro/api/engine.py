@@ -1,0 +1,110 @@
+"""SimilarityEngine: the one way to run a similarity campaign.
+
+The engine owns everything between a ``SimilarityRequest`` and a
+``SimilarityResult``: metric resolution via the registry, request
+validation against the device pool, comet-mesh construction (cached per
+decomposition so repeated requests reuse compiled programs), input
+materialization, padding (inside the core engines), plan selection and
+2-way/3-way dispatch including the staged 3-way sweep.
+
+    from repro.api import SimilarityEngine, SimilarityRequest
+
+    engine = SimilarityEngine()
+    result = engine.run(SimilarityRequest(metric="czekanowski", way=2), V)
+    for tile in result.tiles():
+        ...
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.api.registry import get_metric
+from repro.api.request import SimilarityRequest
+from repro.api.result import SimilarityResult
+from repro.core.threeway import threeway_distributed
+from repro.core.twoway import twoway_distributed
+from repro.parallel.mesh import COMET_AXES, make_comet_mesh
+
+__all__ = ["SimilarityEngine"]
+
+
+class SimilarityEngine:
+    """Metric-agnostic front-end over the distributed similarity engines."""
+
+    def __init__(self, mesh=None, devices=None):
+        """``mesh``: use an existing ("pf","pv","pv") comet mesh instead of
+        constructing one (must match each request's decomposition).
+        ``devices``: restrict mesh construction to an explicit device list.
+        """
+        self._mesh = mesh
+        self._devices = devices
+        self._mesh_cache = {}
+
+    # -- internals ---------------------------------------------------------
+
+    def _device_count(self) -> int:
+        if self._mesh is not None:
+            return int(self._mesh.devices.size)
+        if self._devices is not None:
+            return len(self._devices)
+        import jax
+
+        return len(jax.devices())
+
+    def _mesh_for(self, request: SimilarityRequest):
+        key = (request.n_pf, request.n_pv, request.n_pr)
+        if self._mesh is not None:
+            shape = tuple(self._mesh.devices.shape)
+            if self._mesh.axis_names != COMET_AXES or shape != key:
+                raise ValueError(
+                    f"engine mesh {self._mesh.axis_names}{shape} does not "
+                    f"match request decomposition {key}"
+                )
+            return self._mesh
+        if key not in self._mesh_cache:
+            self._mesh_cache[key] = make_comet_mesh(
+                *key, devices=self._devices
+            )
+        return self._mesh_cache[key]
+
+    # -- public API --------------------------------------------------------
+
+    def run(self, request: SimilarityRequest, V=None) -> SimilarityResult:
+        """Execute a campaign; ``V`` overrides the request's input spec."""
+        spec = get_metric(request.metric)
+        request.validate(n_devices=self._device_count(), metric_spec=spec)
+        if V is None:
+            if request.input is None:
+                raise ValueError("no input: pass V or set request.input")
+            V = request.input.materialize()
+        V = np.asarray(V)
+        if V.ndim != 2:
+            raise ValueError(f"V must be (n_f, n_v), got shape {V.shape}")
+        mesh = self._mesh_for(request)
+        cfg = request.to_comet_config()
+        stages = request.resolved_stages()
+
+        t0 = time.perf_counter()
+        if request.way == 2:
+            outputs = [twoway_distributed(V, mesh, cfg, metric=spec)]
+        else:
+            outputs = [
+                threeway_distributed(V, mesh, cfg, stage=s, metric=spec)
+                for s in stages
+            ]
+        seconds = time.perf_counter() - t0
+
+        return SimilarityResult(
+            way=request.way,
+            metric=request.metric,
+            n_v=V.shape[1],
+            n_f=V.shape[0],
+            outputs=outputs,
+            decomposition=(request.n_pf, request.n_pv, request.n_pr),
+            n_st=request.n_st,
+            stages=stages,
+            out_dtype=request.out_dtype,
+            seconds=seconds,
+        )

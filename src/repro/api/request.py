@@ -1,0 +1,126 @@
+"""SimilarityRequest: one frozen object describing a similarity campaign.
+
+A request is the complete, hashable description of *what* to compute: the
+metric, the way (2- or 3-way), the parallel decomposition, implementation /
+dtype knobs, 3-way staging, and (optionally) where the input comes from.
+``SimilarityEngine`` turns a request into a ``SimilarityResult``; the serving
+layer caches results keyed by the request, which is why it must be frozen
+and hashable.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import numpy as np
+
+from repro.core.twoway import CometConfig
+
+__all__ = ["InputSpec", "SimilarityRequest"]
+
+
+@dataclass(frozen=True)
+class InputSpec:
+    """Where the (n_f, n_v) vector matrix comes from.
+
+    ``synthetic`` draws the paper's random-integer dataset (fp-exact sums);
+    ``npy`` loads a saved matrix from ``path``.
+    """
+
+    source: str = "synthetic"  # "synthetic" | "npy"
+    n_f: int = 512
+    n_v: int = 240
+    max_value: int = 15
+    seed: int = 0
+    path: str = ""
+
+    def materialize(self) -> np.ndarray:
+        if self.source == "npy":
+            if not self.path:
+                raise ValueError("InputSpec(source='npy') needs a path")
+            return np.load(self.path)
+        if self.source == "synthetic":
+            from repro.core.synthetic import random_integer_vectors
+
+            return random_integer_vectors(
+                self.n_f, self.n_v, max_value=self.max_value, seed=self.seed
+            )
+        raise ValueError(f"unknown input source {self.source!r}")
+
+
+@dataclass(frozen=True)
+class SimilarityRequest:
+    """Frozen description of one similarity campaign."""
+
+    metric: str = "czekanowski"
+    way: int = 2
+    # parallel decomposition (paper's three axes) + 3-way staging
+    n_pf: int = 1
+    n_pv: int = 1
+    n_pr: int = 1
+    n_st: int = 1
+    #: which 3-way stages to run; None -> every stage of n_st
+    stages: tuple = None
+    # implementation / dtype knobs (threaded into CometConfig)
+    impl: str = "xla"
+    levels: int = 2
+    out_dtype: str = "float32"
+    ring_dtype: str = "float32"
+    chunk: int = 128
+    #: optional input description (run() can also take V directly)
+    input: InputSpec = None
+
+    # -- derived -----------------------------------------------------------
+
+    @property
+    def n_ranks(self) -> int:
+        return self.n_pf * self.n_pv * self.n_pr
+
+    def resolved_stages(self) -> tuple:
+        if self.way == 2:
+            return (0,)
+        return self.stages if self.stages is not None else tuple(range(self.n_st))
+
+    def to_comet_config(self) -> CometConfig:
+        return CometConfig(
+            n_pf=self.n_pf, n_pv=self.n_pv, n_pr=self.n_pr, n_st=self.n_st,
+            impl=self.impl, levels=self.levels,
+            out_dtype=self.out_dtype, ring_dtype=self.ring_dtype,
+            chunk=self.chunk,
+        )
+
+    def with_decomposition(self, n_pf: int, n_pv: int, n_pr: int) -> "SimilarityRequest":
+        return replace(self, n_pf=n_pf, n_pv=n_pv, n_pr=n_pr)
+
+    # -- validation --------------------------------------------------------
+
+    def validate(self, *, n_devices: int = None, metric_spec=None) -> None:
+        """Raise ValueError on an unsatisfiable request.
+
+        Metric-name resolution errors are raised by the registry
+        (UnknownMetricError) before this runs; here we check shape/placement
+        consistency, including decomposition vs the available device count.
+        """
+        if self.way not in (2, 3):
+            raise ValueError(f"way must be 2 or 3, got {self.way}")
+        for name in ("n_pf", "n_pv", "n_pr", "n_st"):
+            v = getattr(self, name)
+            if not (isinstance(v, int) and v >= 1):
+                raise ValueError(f"{name} must be a positive int, got {v!r}")
+        if n_devices is not None and self.n_ranks > n_devices:
+            raise ValueError(
+                f"decomposition ({self.n_pf}, {self.n_pv}, {self.n_pr}) needs "
+                f"{self.n_ranks} devices, have {n_devices}"
+            )
+        if self.way == 2 and self.n_st != 1:
+            raise ValueError("staging (n_st > 1) applies to 3-way only")
+        if self.stages is not None:
+            if self.way == 2:
+                raise ValueError("stages apply to 3-way requests only")
+            bad = [s for s in self.stages if not 0 <= s < self.n_st]
+            if bad:
+                raise ValueError(f"stages {bad} out of range for n_st={self.n_st}")
+        if metric_spec is not None and self.way not in metric_spec.ways:
+            raise ValueError(
+                f"metric {self.metric!r} supports ways {metric_spec.ways}, "
+                f"requested {self.way}"
+            )

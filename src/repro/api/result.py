@@ -1,0 +1,181 @@
+"""SimilarityResult: one streaming interface over 2-way and 3-way outputs.
+
+The engines produce per-rank metric *blocks* (``TwoWayOutput`` /
+``ThreeWayOutput``); a result unifies them — across ways and across 3-way
+stages — behind one reading API:
+
+* ``tiles()``    — stream of ``Tile``s, one per computed block slice: global
+                   index arrays + values.  This is the production path: a
+                   campaign's output never has to exist densely in memory
+                   (the paper's 3-way runs write ~1e12 results).
+* ``entries()``  — flat scalar stream ``(i, j[, k], value)`` for small jobs.
+* ``dense()``    — materialized symmetric matrix / tensor (tests, demos).
+* ``checksum()`` — the paper §5 exact multiset checksum over all tiles.
+* ``save()/load()`` — manifest + per-stage block arrays, round-tripping to
+                   an identical checksum.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import checksum as ck
+from repro.core.plan2 import TwoWayPlan
+from repro.core.plan3 import ThreeWayPlan
+from repro.core.threeway import ThreeWayOutput
+from repro.core.twoway import TwoWayOutput
+
+__all__ = ["Tile", "SimilarityResult"]
+
+MANIFEST = "manifest.json"
+FORMAT_VERSION = 1
+
+
+@dataclass(frozen=True)
+class Tile:
+    """One computed block slice: parallel global-index arrays + values."""
+
+    way: int
+    index: tuple  # (I, J) or (I, J, K) int arrays, same length as values
+    values: np.ndarray
+    stage: int = 0
+
+    def __len__(self) -> int:
+        return len(self.values)
+
+    def raw_checksum(self) -> tuple:
+        if self.way == 2:
+            return ck.raw_pairs(*self.index, self.values)
+        return ck.raw_triples(*self.index, self.values)
+
+
+@dataclass
+class SimilarityResult:
+    """Unified, streaming view of a similarity campaign's output."""
+
+    way: int
+    metric: str
+    n_v: int
+    n_f: int
+    outputs: list  # one TwoWayOutput, or one ThreeWayOutput per stage
+    decomposition: tuple = (1, 1, 1)
+    n_st: int = 1
+    stages: tuple = (0,)
+    out_dtype: str = "float32"
+    seconds: float = 0.0
+    meta: dict = field(default_factory=dict)
+    # memoized aggregates (blocks are write-once; full tile scans are the
+    # dominant host-side cost of large campaigns)
+    _checksum: int = field(default=None, init=False, repr=False, compare=False)
+    _num_results: int = field(default=None, init=False, repr=False, compare=False)
+
+    # -- streaming reads ---------------------------------------------------
+
+    def tiles(self):
+        """Yield every computed block slice as a Tile (constant memory)."""
+        for out in self.outputs:
+            stage = getattr(out, "stage", 0)
+            for tup in out.entries():
+                *index, values = tup
+                yield Tile(way=self.way, index=tuple(index), values=values,
+                           stage=stage)
+
+    def entries(self):
+        """Flat scalar stream: (i, j, value) / (i, j, k, value)."""
+        for tile in self.tiles():
+            for row in zip(*tile.index, tile.values):
+                yield row
+
+    def dense(self) -> np.ndarray:
+        """Materialized (n_v, n_v) symmetric matrix, or (n_v, n_v, n_v)
+        tensor holding each triple at its canonical sorted index i < j < k
+        (the other 5 permutation slots stay zero)."""
+        out = np.zeros((self.n_v,) * self.way, np.dtype(self.out_dtype))
+        for tile in self.tiles():
+            idx = np.sort(np.stack(tile.index), axis=0)
+            if self.way == 2:
+                out[idx[0], idx[1]] = tile.values
+                out[idx[1], idx[0]] = tile.values
+            else:
+                out[idx[0], idx[1], idx[2]] = tile.values
+        return out
+
+    def checksum(self) -> int:
+        """Paper §5 exact campaign checksum (all stages combined)."""
+        if self._checksum is None:
+            parts = []
+            count = 0
+            for t in self.tiles():
+                parts.append(t.raw_checksum())
+                count += len(t)
+            self._checksum = ck.combine(parts)
+            self._num_results = count
+        return self._checksum
+
+    def num_results(self) -> int:
+        if self._num_results is None:
+            self._num_results = sum(len(t) for t in self.tiles())
+        return self._num_results
+
+    # -- persistence -------------------------------------------------------
+
+    def save(self, path: str) -> dict:
+        """Write per-stage blocks + a manifest; returns the manifest dict."""
+        os.makedirs(path, exist_ok=True)
+        for out, stage in zip(self.outputs, self.stages):
+            np.save(os.path.join(path, f"blocks_s{stage}.npy"), out.blocks)
+        manifest = {
+            "format_version": FORMAT_VERSION,
+            "metric": self.metric,
+            "way": self.way,
+            "n_f": int(self.n_f),
+            "n_v": int(self.n_v),
+            "n_vp": int(self.outputs[0].n_vp),
+            "decomposition": list(self.decomposition),
+            "n_st": self.n_st,
+            "stages": list(self.stages),
+            "out_dtype": self.out_dtype,
+            "results": int(self.num_results()),
+            "seconds": self.seconds,
+            "checksum": hex(self.checksum()),
+            **self.meta,
+        }
+        with open(os.path.join(path, MANIFEST), "w") as f:
+            json.dump(manifest, f, indent=2)
+        return manifest
+
+    @classmethod
+    def load(cls, path: str) -> "SimilarityResult":
+        """Rebuild a result from ``save()`` output (verifies the checksum)."""
+        with open(os.path.join(path, MANIFEST)) as f:
+            m = json.load(f)
+        n_pf, n_pv, n_pr = m["decomposition"]
+        outputs = []
+        for stage in m["stages"]:
+            blocks = np.load(os.path.join(path, f"blocks_s{stage}.npy"))
+            if m["way"] == 2:
+                outputs.append(TwoWayOutput(
+                    blocks=blocks, plan=TwoWayPlan(n_pv, n_pr),
+                    n_v=m["n_v"], n_vp=m["n_vp"],
+                ))
+            else:
+                outputs.append(ThreeWayOutput(
+                    blocks=blocks, plan=ThreeWayPlan(n_pv, n_pr, m["n_st"]),
+                    n_v=m["n_v"], n_vp=m["n_vp"], stage=stage,
+                ))
+        result = cls(
+            way=m["way"], metric=m["metric"], n_v=m["n_v"], n_f=m["n_f"],
+            outputs=outputs, decomposition=tuple(m["decomposition"]),
+            n_st=m["n_st"], stages=tuple(m["stages"]),
+            out_dtype=m["out_dtype"], seconds=m.get("seconds", 0.0),
+        )
+        got = hex(result.checksum())
+        if got != m["checksum"]:
+            raise ValueError(
+                f"checksum mismatch loading {path}: manifest {m['checksum']}, "
+                f"recomputed {got}"
+            )
+        return result

@@ -40,6 +40,8 @@ def _value_bits(values: np.ndarray) -> np.ndarray:
         return v.view(np.uint64).astype(object)
     if v.dtype == np.float32:
         return v.view(np.uint32).astype(object)
+    if v.dtype.itemsize == 2:  # float16 / bfloat16 (ml_dtypes) metric outputs
+        return v.view(np.uint16).astype(object)
     raise TypeError(f"unsupported dtype {v.dtype}")
 
 

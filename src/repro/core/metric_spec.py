@@ -1,0 +1,125 @@
+"""Metric specification: what the distributed engines need to know about a
+similarity metric.
+
+The paper's engines hard-coded Proportional Similarity (Czekanowski): a
+min-plus contraction for numerators, row sums ring-carried for denominators,
+and the ``2n/d`` / ``1.5 n3/d3`` assemblies.  Its companion paper (Joubert et
+al., arXiv:1705.08213) runs the *same* decomposition/ring machinery for a
+different metric — so the machinery is parameterized here by a ``MetricSpec``:
+
+* ``combine``   — the elementwise pairing op folded into the inner GEMM
+                  (``min`` for Czekanowski, ``*`` for correlation-family).
+* ``stat``      — the per-vector statistic psummed over "pf" and ring-carried
+                  alongside V (row sums / sums of squares).
+* ``contract``  — the (m, k) x (k, n) "GEMM-like" numerator contraction
+                  ``sum_q combine(A[i, q], B[q, j])``; Czekanowski dispatches
+                  through the mgemm impl registry (XLA / Pallas / levels),
+                  dot-product metrics hit the plain MXU GEMM.
+* ``assemble2`` / ``assemble3`` — numerator(s) + stats -> metric values.
+
+The Czekanowski spec below reproduces the pre-refactor engines' arithmetic
+op-for-op, so every campaign checksum is bit-identical to the inlined code it
+replaced (verified in tests/distributed_harness.py).
+
+The registry that maps metric *names* to specs lives in ``repro.api.registry``
+(the user-facing layer); this module only defines the contract and the
+built-in Czekanowski entry the core engines default to.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax.numpy as jnp
+
+from repro.core.metrics import safe_denom
+
+__all__ = ["MetricSpec", "CZEKANOWSKI"]
+
+
+@dataclass(frozen=True)
+class MetricSpec:
+    """Everything the 2-way/3-way distributed programs need for one metric."""
+
+    name: str
+    description: str = ""
+    ways: tuple = (2, 3)
+    #: elementwise combine op used to build the 3-way batched contraction
+    combine: Callable = jnp.minimum
+    #: (n_fp, m) local block -> (m,) per-vector statistic (pre-psum)
+    stat: Callable = None
+    #: (n2, s_i, s_j) -> 2-way metric values (broadcast-ready stats)
+    assemble2: Callable = None
+    #: (b3, n2_pl, n2_pr, n2_lr, s_p, s_l, s_r) -> (L, m, m) 3-way values
+    assemble3: Callable = None
+    #: route the contraction through the mgemm impl registry (CometConfig.impl)
+    uses_mgemm: bool = False
+    #: fixed contraction when not using the registry (e.g. a plain dot)
+    contract: Callable = None
+    #: 3-way assembly consumes the pairwise numerator terms (Czekanowski
+    #: does; pure product metrics don't — their computation is skipped)
+    needs_pair_terms: bool = True
+    #: numpy float64 references, (n_f, n_v) -> (n_v, n_v) / (n_v,)*3
+    oracle2: Callable = None
+    oracle3: Callable = None
+
+    def contract_fn(self, cfg) -> Callable:
+        """Numerator contraction for this metric under a CometConfig.
+
+        ``uses_mgemm`` metrics dispatch through the impl registry so the
+        Pallas / level-decomposition kernels keep working; otherwise the
+        spec's own ``contract`` runs (falling back to a generic chunk-free
+        broadcast-combine reduction so a new metric needs nothing beyond
+        ``combine`` to be runnable).
+        """
+        if self.uses_mgemm:
+            return cfg.impl_fn()
+        if self.contract is not None:
+            return self.contract
+        comb = self.combine
+
+        def generic(A, B):
+            return comb(A[:, :, None], B[None, :, :]).astype(jnp.float32).sum(1)
+
+        return generic
+
+
+def _czek_stat(Vl):
+    return Vl.astype(jnp.float32).sum(axis=0)
+
+
+def _czek_assemble2(n2, si, sj):
+    return 2.0 * n2 / safe_denom(si + sj)
+
+
+def _czek_assemble3(b3, n2_pl, n2_pr, n2_lr, sp, sl, sr):
+    n3 = n2_pl[:, :, None] + n2_pr[:, None, :] + n2_lr[None, :, :] - b3
+    d3 = sp[:, None, None] + sl[None, :, None] + sr[None, None, :]
+    return 1.5 * n3 / safe_denom(d3)
+
+
+def _czek_oracle2(V):
+    from repro.core.metrics import czek2_metric_np
+
+    return czek2_metric_np(V)
+
+
+def _czek_oracle3(V):
+    from repro.core.metrics import czek3_metric_np
+
+    return czek3_metric_np(V)
+
+
+CZEKANOWSKI = MetricSpec(
+    name="czekanowski",
+    description="Proportional Similarity (paper §2): 2 Σ min / Σ sums",
+    ways=(2, 3),
+    combine=jnp.minimum,
+    stat=_czek_stat,
+    assemble2=_czek_assemble2,
+    assemble3=_czek_assemble3,
+    uses_mgemm=True,
+    needs_pair_terms=True,
+    oracle2=_czek_oracle2,
+    oracle3=_czek_oracle3,
+)

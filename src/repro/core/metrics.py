@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = [
+    "safe_denom",
     "czek2_numerators",
     "czek2_metric",
     "czek3_nprime",
@@ -34,6 +35,23 @@ __all__ = [
     "czek2_from_parts",
     "czek3_from_parts",
 ]
+
+#: Smallest denominator admitted by any metric assembly.  All-zero vectors
+#: produce a zero numerator AND a zero denominator; clamping yields metric 0
+#: (no similarity evidence) instead of NaN, identically on every path.
+DENOM_EPS = 1e-30
+
+
+def safe_denom(d, eps: float = DENOM_EPS):
+    """Clamp a metric denominator away from zero (all-zero-vector guard).
+
+    Works on numpy arrays (oracles) and jax values (engines/kernels); for
+    any nonzero denominator this is the identity, so it never perturbs real
+    metric values.
+    """
+    if isinstance(d, np.ndarray) or np.isscalar(d):
+        return np.maximum(d, eps)
+    return jnp.maximum(d, eps)
 
 
 def czek2_numerators(V):
@@ -52,12 +70,12 @@ def czek2_metric(V):
     n = czek2_numerators(V)
     s = V.sum(axis=0)  # (n_v,)
     d = s[:, None] + s[None, :]
-    return 2.0 * n / d
+    return 2.0 * n / safe_denom(d)
 
 
 def czek2_from_parts(n2, si, sj):
     """Assemble c2 from numerator(s) and the two row sums (broadcasts)."""
-    return 2.0 * n2 / (si + sj)
+    return 2.0 * n2 / safe_denom(si + sj)
 
 
 def czek3_nprime(V):
@@ -78,14 +96,14 @@ def czek3_metric(V):
     s = V.sum(axis=0)
     n3 = n2[:, :, None] + n2[:, None, :] + n2[None, :, :] - np3
     d3 = s[:, None, None] + s[None, :, None] + s[None, None, :]
-    return 1.5 * n3 / d3
+    return 1.5 * n3 / safe_denom(d3)
 
 
 def czek3_from_parts(n2_ij, n2_ik, n2_jk, np3, si, sj, sk):
     """Assemble c3 from pairwise numerators, the 3-way term and row sums."""
     n3 = n2_ij + n2_ik + n2_jk - np3
     d3 = si + sj + sk
-    return 1.5 * n3 / d3
+    return 1.5 * n3 / safe_denom(d3)
 
 
 # ---------------------------------------------------------------------------
@@ -96,7 +114,7 @@ def czek2_metric_np(V: np.ndarray) -> np.ndarray:
     V = np.asarray(V, dtype=np.float64)
     n = np.minimum(V[:, :, None], V[:, None, :]).sum(axis=0)
     s = V.sum(axis=0)
-    return 2.0 * n / (s[:, None] + s[None, :])
+    return 2.0 * n / safe_denom(s[:, None] + s[None, :])
 
 
 def czek3_metric_np(V: np.ndarray) -> np.ndarray:
@@ -108,4 +126,4 @@ def czek3_metric_np(V: np.ndarray) -> np.ndarray:
     s = V.sum(axis=0)
     n3 = n2[:, :, None] + n2[:, None, :] + n2[None, :, :] - np3
     d3 = s[:, None, None] + s[None, :, None] + s[None, None, :]
-    return 1.5 * n3 / d3
+    return 1.5 * n3 / safe_denom(d3)

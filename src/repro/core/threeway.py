@@ -37,14 +37,16 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.parallel.compat import shard_map
+
 from repro.core import checksum as ck
+from repro.core.metric_spec import CZEKANOWSKI, MetricSpec
 from repro.core.plan3 import ItemKind, ThreeWayPlan, PERMS
 from repro.core.twoway import CometConfig, pad_vectors
 
-__all__ = ["ThreeWayOutput", "czek3_distributed"]
+__all__ = ["ThreeWayOutput", "threeway_distributed", "czek3_distributed"]
 
 # lookup: (rank_own, rank_J, rank_K) base-3 -> permutation index (plan3.PERMS)
 _PERM_LUT = np.zeros(27, np.int32)
@@ -63,28 +65,32 @@ def _vol_rule_traced(own, bj, bk):
 
 
 def _item_metrics(
-    pipe, left, right, s_p, s_l, s_r, j0, *, kind: ItemKind, L: int, mgemm, out_dtype
+    pipe, left, right, s_p, s_l, s_r, j0, *, kind: ItemKind, L: int, mgemm,
+    out_dtype, metric: MetricSpec = None
 ):
-    """Masked c3 slice (L, m, m) for one work item.
+    """Masked metric slice (L, m, m) for one work item.
 
-    pipe/left/right: (n_fp, m) field-major blocks; s_*: (m,) row sums
-    (already psummed over pf); j0: traced pipeline offset.
+    pipe/left/right: (n_fp, m) field-major blocks; s_*: (m,) per-vector
+    stats (already psummed over pf); j0: traced pipeline offset.
     """
+    metric = metric or CZEKANOWSKI
     n_fp, m = pipe.shape
     ps = jax.lax.dynamic_slice(pipe, (0, j0), (n_fp, L))  # (n_fp, L)
-    # batched 3-way term: X[q, l*L + t] = min(left[q,l], ps[q,t])
-    X = jnp.minimum(left[:, :, None], ps[:, None, :]).reshape(n_fp, m * L)
+    # batched 3-way term: X[q, l*L + t] = combine(left[q,l], ps[q,t])
+    X = metric.combine(left[:, :, None], ps[:, None, :]).reshape(n_fp, m * L)
     B = mgemm(X.T, right).reshape(m, L, right.shape[1]).transpose(1, 0, 2)
-    # pairwise numerators
-    n2_pl = mgemm(ps.T, left)  # (L, m)
-    n2_pr = mgemm(ps.T, right)  # (L, m)
-    n2_lr = mgemm(left.T, right)  # (m, m)
-    B, n2_pl, n2_pr, n2_lr = jax.lax.psum((B, n2_pl, n2_pr, n2_lr), "pf")
+    if metric.needs_pair_terms:
+        # pairwise numerators, one fused psum with the 3-way term
+        n2_pl = mgemm(ps.T, left)  # (L, m)
+        n2_pr = mgemm(ps.T, right)  # (L, m)
+        n2_lr = mgemm(left.T, right)  # (m, m)
+        B, n2_pl, n2_pr, n2_lr = jax.lax.psum((B, n2_pl, n2_pr, n2_lr), "pf")
+    else:
+        n2_pl = n2_pr = n2_lr = None
+        B = jax.lax.psum(B, "pf")
 
     sp = jax.lax.dynamic_slice(s_p, (j0,), (L,))
-    n3 = n2_pl[:, :, None] + n2_pr[:, None, :] + n2_lr[None, :, :] - B
-    d3 = sp[:, None, None] + s_l[None, :, None] + s_r[None, None, :]
-    c3 = 1.5 * n3 / jnp.maximum(d3, 1e-30)
+    c3 = metric.assemble3(B, n2_pl, n2_pr, n2_lr, sp, s_l, s_r)
 
     jg = j0 + jnp.arange(L)  # global-in-block pipeline indices
     li = jnp.arange(m)
@@ -99,19 +105,23 @@ def _item_metrics(
     return jnp.where(mask, c3, 0).astype(out_dtype)
 
 
-def _threeway_program(Vl, *, cfg: CometConfig, plan: ThreeWayPlan, stage: int, out_dtype):
+def _threeway_program(
+    Vl, *, cfg: CometConfig, plan: ThreeWayPlan, stage: int, out_dtype,
+    metric: MetricSpec = None
+):
+    metric = metric or CZEKANOWSKI
     n_pv, n_pr, n_st = cfg.n_pv, cfg.n_pr, cfg.n_st
     n_fp, m = Vl.shape
     assert m % (6 * n_st) == 0, "n_vp must divide 6*n_st"
     L = m // (6 * n_st)
-    mgemm = cfg.impl_fn()
+    mgemm = metric.contract_fn(cfg)
     slots = plan.slots_per_rank
 
     pv = jax.lax.axis_index("pv")
     pr = jax.lax.axis_index("pr")
     perm = [((i + 1) % n_pv, i) for i in range(n_pv)]  # receive from upward
 
-    s_own = jax.lax.psum(Vl.astype(jnp.float32).sum(axis=0), "pf")
+    s_own = jax.lax.psum(metric.stat(Vl), "pf")
     out0 = jnp.zeros((slots, L, m, m), out_dtype)
 
     def j0_of(idx):
@@ -140,6 +150,7 @@ def _threeway_program(Vl, *, cfg: CometConfig, plan: ThreeWayPlan, stage: int, o
             lambda s=s: _item_metrics(
                 Vl, Vl, Vl, s_own, s_own, s_own, j0_of(s),
                 kind=ItemKind.DIAG, L=L, mgemm=mgemm, out_dtype=out_dtype,
+                metric=metric,
             ),
         )
 
@@ -158,6 +169,7 @@ def _threeway_program(Vl, *, cfg: CometConfig, plan: ThreeWayPlan, stage: int, o
                 lambda s=s, bufj=bufj, sbj=sbj: _item_metrics(
                     bufj, Vl, bufj, sbj, s_own, sbj, j0_of(s),
                     kind=ItemKind.FACE, L=L, mgemm=mgemm, out_dtype=out_dtype,
+                    metric=metric,
                 ),
             )
         return bufj, sbj, out
@@ -207,6 +219,7 @@ def _threeway_program(Vl, *, cfg: CometConfig, plan: ThreeWayPlan, stage: int, o
             return _item_metrics(
                 pipe, left, right, s_p, s_l, s_r, j0,
                 kind=ItemKind.VOL, L=L, mgemm=mgemm, out_dtype=out_dtype,
+                metric=metric,
             )
 
         out = emit(out, sb, execute, thunk)
@@ -296,10 +309,12 @@ class ThreeWayOutput:
         return sum(len(I) for I, _, _, _ in self.entries())
 
 
-def czek3_distributed(
-    V: np.ndarray, mesh: Mesh, cfg: CometConfig, stage: int = 0
+def threeway_distributed(
+    V: np.ndarray, mesh: Mesh, cfg: CometConfig, stage: int = 0,
+    metric: MetricSpec = None,
 ) -> ThreeWayOutput:
     """Compute one stage of the unique 3-way metrics of V's columns."""
+    metric = metric or CZEKANOWSKI
     n_v = V.shape[1]
     V = np.asarray(V)
     # Algorithm 3's pipeline geometry needs the per-rank block size to split
@@ -315,11 +330,12 @@ def czek3_distributed(
     out_dtype = jnp.dtype(cfg.out_dtype)
 
     fn = shard_map(
-        partial(_threeway_program, cfg=cfg, plan=plan, stage=stage, out_dtype=out_dtype),
+        partial(_threeway_program, cfg=cfg, plan=plan, stage=stage,
+                out_dtype=out_dtype, metric=metric),
         mesh=mesh,
         in_specs=P("pf", "pv"),
         out_specs=P("pv", "pr", None, None, None, None),
-        check_vma=False,
+        check=False,
     )
     blocks = jax.jit(fn, static_argnames=())(
         jnp.asarray(Vp, dtype=jnp.dtype(cfg.ring_dtype))
@@ -329,3 +345,10 @@ def czek3_distributed(
         cfg.n_pv, cfg.n_pr, plan.slots_per_rank, L, n_vp, n_vp
     )
     return ThreeWayOutput(blocks=blocks, plan=plan, n_v=n_v, n_vp=n_vp, stage=stage)
+
+
+def czek3_distributed(
+    V: np.ndarray, mesh: Mesh, cfg: CometConfig, stage: int = 0
+) -> ThreeWayOutput:
+    """Proportional Similarity 3-way campaign (pre-registry entry point)."""
+    return threeway_distributed(V, mesh, cfg, stage=stage, metric=CZEKANOWSKI)

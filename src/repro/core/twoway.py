@@ -30,13 +30,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+from repro.parallel.compat import shard_map
 
 from repro.core import checksum as ck
+from repro.core.metric_spec import CZEKANOWSKI, MetricSpec
 from repro.core.mgemm import get_impl
 from repro.core.plan2 import TwoWayPlan, global_pairs_of_block
 
-__all__ = ["CometConfig", "TwoWayOutput", "czek2_distributed", "pad_vectors"]
+__all__ = [
+    "CometConfig",
+    "TwoWayOutput",
+    "twoway_distributed",
+    "czek2_distributed",
+    "pad_vectors",
+]
 
 
 @dataclass(frozen=True)
@@ -54,6 +62,8 @@ class CometConfig:
     # traffic of the V ring — EXACT for integer data with values <= 127
     # (SNP {0,1,2} codes); metric math still accumulates in fp32.
     ring_dtype: str = "float32"
+    # contraction-axis chunk of the XLA mgemm (memory/speed trade-off)
+    chunk: int = 128
 
     @property
     def n_ranks(self) -> int:
@@ -63,6 +73,8 @@ class CometConfig:
         fn = get_impl(self.impl)
         if self.impl.startswith("levels"):
             return partial(fn, levels=self.levels)
+        if self.impl == "xla":
+            return partial(fn, chunk=self.chunk)
         return fn
 
 
@@ -118,12 +130,15 @@ class TwoWayOutput:
         return sum(len(I) for I, _, _ in self.entries())
 
 
-def _twoway_program(Vl, *, cfg: CometConfig, plan: TwoWayPlan, out_dtype):
+def _twoway_program(
+    Vl, *, cfg: CometConfig, plan: TwoWayPlan, out_dtype, metric: MetricSpec = None
+):
     """Per-device program (inside shard_map). Vl: (n_f/n_pf, n_vp)."""
+    metric = metric or CZEKANOWSKI
     n_pv, n_pr = cfg.n_pv, cfg.n_pr
     m = Vl.shape[1]
-    mgemm = cfg.impl_fn()
-    s_own = jax.lax.psum(Vl.astype(jnp.float32).sum(axis=0), "pf")  # (m,)
+    contract = metric.contract_fn(cfg)
+    s_own = jax.lax.psum(metric.stat(Vl), "pf")  # (m,)
     pv = jax.lax.axis_index("pv")
     pr = jax.lax.axis_index("pr")
     # receive from upward neighbour: src (i+1) -> dst i
@@ -141,19 +156,21 @@ def _twoway_program(Vl, *, cfg: CometConfig, plan: TwoWayPlan, out_dtype):
             execute = jnp.logical_and(execute, pv < n_pv // 2)
 
         def compute(o, Vr=Vr, sr=sr, d=d):
-            n2 = jax.lax.psum(mgemm(Vl.T, Vr).astype(jnp.float32), "pf")
-            denom = jnp.maximum(s_own[:, None] + sr[None, :], 1e-30)
-            metric = (2.0 * n2 / denom).astype(out_dtype)
+            n2 = jax.lax.psum(contract(Vl.T, Vr).astype(jnp.float32), "pf")
+            vals = metric.assemble2(n2, s_own[:, None], sr[None, :]).astype(out_dtype)
             if d == 0:
-                metric = jnp.where(tri, metric, 0)
-            return o.at[d // n_pr].set(metric)
+                vals = jnp.where(tri, vals, 0)
+            return o.at[d // n_pr].set(vals)
 
         out = jax.lax.cond(execute, compute, lambda o: o, out)
     return out[None, None]  # leading (pv=1, pr=1) device dims
 
 
-def czek2_distributed(V: np.ndarray, mesh: Mesh, cfg: CometConfig) -> TwoWayOutput:
+def twoway_distributed(
+    V: np.ndarray, mesh: Mesh, cfg: CometConfig, metric: MetricSpec = None
+) -> TwoWayOutput:
     """Compute all unique 2-way metrics of V's columns on the mesh."""
+    metric = metric or CZEKANOWSKI
     n_v = V.shape[1]
     Vp = pad_vectors(np.asarray(V), cfg)
     n_vp = Vp.shape[1] // cfg.n_pv
@@ -161,14 +178,20 @@ def czek2_distributed(V: np.ndarray, mesh: Mesh, cfg: CometConfig) -> TwoWayOutp
     out_dtype = jnp.dtype(cfg.out_dtype)
 
     fn = shard_map(
-        partial(_twoway_program, cfg=cfg, plan=plan, out_dtype=out_dtype),
+        partial(_twoway_program, cfg=cfg, plan=plan, out_dtype=out_dtype,
+                metric=metric),
         mesh=mesh,
         in_specs=P("pf", "pv"),
         out_specs=P("pv", "pr", None, None, None),
-        check_vma=False,
+        check=False,
     )
     blocks = jax.jit(fn)(jnp.asarray(Vp, dtype=jnp.dtype(cfg.ring_dtype)))
     blocks = np.asarray(blocks).reshape(
         cfg.n_pv, cfg.n_pr, plan.slots_per_rank, n_vp, n_vp
     )
     return TwoWayOutput(blocks=blocks, plan=plan, n_v=n_v, n_vp=n_vp)
+
+
+def czek2_distributed(V: np.ndarray, mesh: Mesh, cfg: CometConfig) -> TwoWayOutput:
+    """Proportional Similarity 2-way campaign (pre-registry entry point)."""
+    return twoway_distributed(V, mesh, cfg, metric=CZEKANOWSKI)

@@ -98,7 +98,9 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
 
     print(f"== {arch} x {shape} ({'2x16x16' if multi_pod else '16x16'}) ==")
     print(compiled.memory_analysis())
-    ca = compiled.cost_analysis()
+    from repro.parallel.compat import cost_analysis_dict
+
+    ca = cost_analysis_dict(compiled)
     print({k: ca[k] for k in ("flops", "bytes accessed") if k in ca})
 
     terms = analyze_compiled(compiled, n_dev, vpu_fraction=vpu_fraction)

@@ -10,6 +10,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.parallel.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
@@ -23,9 +25,4 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"need {need} devices for the production mesh, have {len(devices)}"
             " (dry-run sets --xla_force_host_platform_device_count=512)"
         )
-    return jax.make_mesh(
-        shape,
-        axes,
-        devices=devices,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return make_mesh(shape, axes, devices=devices)

@@ -1,22 +1,24 @@
-"""Similarity-campaign launcher: the paper's workload as a CLI.
+"""Similarity-campaign launcher: the paper's workload as a CLI over the
+unified ``repro.api`` engine.
 
     python -m repro.launch.similarity --way 2 --n-f 1000 --n-v 512 \
-        --n-pv 4 --n-pr 2 --devices 8 --out /tmp/metrics
+        --n-pv 4 --n-pr 2 --devices 8 --metric czekanowski --out /tmp/metrics
 
-Computes all unique 2-way (or staged 3-way) Proportional Similarity metrics
-over a synthetic or .npy dataset, writes per-rank metric blocks + a manifest
-with the exact checksum (paper §5), and prints throughput in elementwise
-comparisons/second (the paper's headline metric).
+Builds a ``SimilarityRequest`` (any registered metric; 2-way or staged
+3-way), runs it through ``SimilarityEngine``, writes the result's block
+manifest with the exact checksum (paper §5), and prints throughput in
+elementwise comparisons/second (the paper's headline metric).
 """
 import argparse
-import json
 import os
 import sys
-import time
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
+    ap.add_argument("--metric", default="czekanowski",
+                    help="registered metric name (see --list-metrics)")
+    ap.add_argument("--list-metrics", action="store_true")
     ap.add_argument("--way", type=int, default=2, choices=(2, 3))
     ap.add_argument("--n-f", type=int, default=512)
     ap.add_argument("--n-v", type=int, default=240)
@@ -24,11 +26,19 @@ def main(argv=None):
     ap.add_argument("--n-pv", type=int, default=1)
     ap.add_argument("--n-pr", type=int, default=1)
     ap.add_argument("--n-st", type=int, default=1)
-    ap.add_argument("--stage", type=int, default=0)
+    ap.add_argument("--stage", type=int, default=0,
+                    help="3-way stage to run; -1 runs all n_st stages")
     ap.add_argument("--devices", type=int, default=0,
                     help="force host device count (set before jax init)")
     ap.add_argument("--impl", default="xla")
     ap.add_argument("--levels", type=int, default=2)
+    ap.add_argument("--out-dtype", default="float32",
+                    help="metric output dtype (e.g. float32, bfloat16)")
+    ap.add_argument("--ring-dtype", default="float32",
+                    help="ring payload dtype (int8 quarters ICI traffic, "
+                         "exact for small-integer data)")
+    ap.add_argument("--chunk", type=int, default=128,
+                    help="XLA mgemm contraction-chunk size")
     ap.add_argument("--input", default="", help=".npy (n_f, n_v) input")
     ap.add_argument("--max-value", type=int, default=15)
     ap.add_argument("--seed", type=int, default=0)
@@ -40,54 +50,55 @@ def main(argv=None):
             f"--xla_force_host_platform_device_count={args.devices} "
             + os.environ.get("XLA_FLAGS", "")
         )
-    import numpy as np
+    from repro.api import (
+        InputSpec,
+        SimilarityEngine,
+        SimilarityRequest,
+        available_metrics,
+    )
 
-    from repro.core.synthetic import random_integer_vectors
-    from repro.core.threeway import czek3_distributed
-    from repro.core.twoway import CometConfig, czek2_distributed
-    from repro.parallel.mesh import make_comet_mesh
+    if args.list_metrics:
+        for name in available_metrics():
+            print(name)
+        return 0
 
     if args.input:
-        V = np.load(args.input)
+        input_spec = InputSpec(source="npy", path=args.input)
     else:
-        V = random_integer_vectors(
-            args.n_f, args.n_v, max_value=args.max_value, seed=args.seed
+        input_spec = InputSpec(
+            source="synthetic", n_f=args.n_f, n_v=args.n_v,
+            max_value=args.max_value, seed=args.seed,
         )
-    cfg = CometConfig(
-        n_pf=args.n_pf, n_pv=args.n_pv, n_pr=args.n_pr, n_st=args.n_st,
-        impl=args.impl, levels=args.levels,
+    stages = None if (args.way == 3 and args.stage < 0) else (
+        (args.stage,) if args.way == 3 else None
     )
-    mesh = make_comet_mesh(args.n_pf, args.n_pv, args.n_pr)
-    t0 = time.time()
-    if args.way == 2:
-        out = czek2_distributed(V, mesh, cfg)
-        n_results = out.num_pairs()
-        comparisons = n_results * V.shape[0]
-    else:
-        out = czek3_distributed(V, mesh, cfg, stage=args.stage)
-        n_results = out.num_triples()
-        comparisons = n_results * V.shape[0]
-    dt = time.time() - t0
-    checksum = out.checksum()
-    print(f"way={args.way} n_f={V.shape[0]} n_v={V.shape[1]} "
-          f"decomp=({cfg.n_pf},{cfg.n_pv},{cfg.n_pr}) stage={args.stage}")
-    print(f"results={n_results} time={dt:.3f}s "
-          f"rate={comparisons / dt:.3e} comparisons/s")
+    request = SimilarityRequest(
+        metric=args.metric, way=args.way,
+        n_pf=args.n_pf, n_pv=args.n_pv, n_pr=args.n_pr, n_st=args.n_st,
+        stages=stages, impl=args.impl, levels=args.levels,
+        out_dtype=args.out_dtype, ring_dtype=args.ring_dtype,
+        chunk=args.chunk, input=input_spec,
+    )
+    from repro.api import UnknownMetricError
+
+    try:
+        result = SimilarityEngine().run(request)
+    except (UnknownMetricError, ValueError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    n_results = result.num_results()
+    comparisons = n_results * result.n_f
+    checksum = result.checksum()
+    print(f"metric={result.metric} way={result.way} "
+          f"n_f={result.n_f} n_v={result.n_v} "
+          f"decomp=({args.n_pf},{args.n_pv},{args.n_pr}) "
+          f"stages={list(result.stages)}")
+    print(f"results={n_results} time={result.seconds:.3f}s "
+          f"rate={comparisons / max(result.seconds, 1e-12):.3e} comparisons/s")
     print(f"checksum={hex(checksum)}")
     if args.out:
-        os.makedirs(args.out, exist_ok=True)
-        np.save(os.path.join(args.out, "blocks.npy"), out.blocks)
-        with open(os.path.join(args.out, "manifest.json"), "w") as f:
-            json.dump(
-                {
-                    "way": args.way, "n_f": int(V.shape[0]), "n_v": int(V.shape[1]),
-                    "decomposition": [cfg.n_pf, cfg.n_pv, cfg.n_pr],
-                    "n_st": cfg.n_st, "stage": args.stage,
-                    "results": int(n_results), "seconds": dt,
-                    "checksum": hex(checksum),
-                },
-                f, indent=2,
-            )
+        result.save(args.out)
     return 0
 
 

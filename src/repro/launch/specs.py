@@ -222,9 +222,8 @@ def build_cell(arch: str, shape_name: str, mesh: Mesh, overrides=None):
 
 def build_comet_cell(arch: str, mesh: Mesh, multi_pod: bool, overrides=None):
     """Lowerable distributed similarity engine over the pod's devices."""
-    from jax import shard_map
-
     from repro.configs.registry import get_config as _gc
+    from repro.parallel.compat import shard_map
     from repro.core.plan2 import TwoWayPlan
     from repro.core.plan3 import ThreeWayPlan
     from repro.core.threeway import _threeway_program
@@ -254,7 +253,7 @@ def build_comet_cell(arch: str, mesh: Mesh, multi_pod: bool, overrides=None):
         fn = shard_map(
             partial(_twoway_program, cfg=comet_cfg, plan=plan, out_dtype=out_dtype),
             mesh=cmesh, in_specs=P("pf", "pv"),
-            out_specs=P("pv", "pr", None, None, None), check_vma=False,
+            out_specs=P("pv", "pr", None, None, None), check=False,
         )
     else:
         plan = ThreeWayPlan(n_pv, n_pr, ccfg.n_st)
@@ -262,7 +261,7 @@ def build_comet_cell(arch: str, mesh: Mesh, multi_pod: bool, overrides=None):
             partial(_threeway_program, cfg=comet_cfg, plan=plan, stage=0,
                     out_dtype=out_dtype),
             mesh=cmesh, in_specs=P("pf", "pv"),
-            out_specs=P("pv", "pr", None, None, None, None), check_vma=False,
+            out_specs=P("pv", "pr", None, None, None, None), check=False,
         )
     # cost_analysis statically counts EVERY round-robin cond branch; a rank
     # executes only its share at runtime.  work_fraction rescales the

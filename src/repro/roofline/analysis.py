@@ -41,7 +41,9 @@ def analyze_compiled(compiled, n_devices: int, hw: Hardware = HW_V5E,
     """
     from repro.roofline.hlo import analyze_hlo
 
-    ca = compiled.cost_analysis()
+    from repro.parallel.compat import cost_analysis_dict
+
+    ca = cost_analysis_dict(compiled)
     text = compiled.as_text()
     hc = analyze_hlo(text, n_devices)
     # loop-aware HLO cost model (while bodies x trip count); XLA's own

@@ -34,6 +34,10 @@ _DTYPE_BYTES = {
 }
 
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# first operand of `op(...)`: newer XLA prints `op(%name, ...)` / `op(name,
+# ...)`, older versions inline the operand type first: `op(f32[8,8]{1,0}
+# %name, ...)` — skip the optional type prefix, capture the name.
+_OPERAND = r"(?:[a-z0-9]+\[[0-9,]*\](?:\{[0-9,]*\})?\s+)?%?([\w.\-]+)"
 _INSTR_RE = re.compile(
     r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^=]*?\)|[a-z0-9]+\[[0-9,]*\][^\s]*))\s+([\w\-]+)\("
 )
@@ -167,6 +171,8 @@ def _trip_count(cond_lines: list[str]) -> int:
 
 def analyze_hlo(hlo_text: str, total_devices: int) -> HloCost:
     comps = _split_computations(hlo_text)
+    m_entry = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo_text, re.MULTILINE)
+    entry = m_entry.group(1) if m_entry else None
 
     # call graph + while trip counts
     body_trip: dict[str, int] = {}
@@ -251,6 +257,16 @@ def analyze_hlo(hlo_text: str, total_devices: int) -> HloCost:
             iname, rshape, op = mi.group(1), mi.group(2), mi.group(3)
             base_op = re.sub(r"-(start|done)$", "", op)
 
+            # ENTRY parameters are module inputs living in HBM: their first
+            # read is real traffic no consumer op accounts for under the
+            # fusion-credit `bytes` model (consumers only price their own
+            # results).  `bytes_upper` already charges consumers for every
+            # named-operand read, parameters included — no extra term there.
+            if op == "parameter":
+                if name == entry:
+                    cost.bytes += shape_bytes(rshape)
+                continue
+
             # ---- collectives ----
             if base_op in _COLLECTIVES:
                 if op.endswith("-done"):
@@ -276,7 +292,7 @@ def analyze_hlo(hlo_text: str, total_devices: int) -> HloCost:
             if op == "dot":
                 k = 1
                 mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", l)
-                lhs = re.search(r"dot\(%?([\w.\-]+)", l)
+                lhs = re.search(r"dot\(" + _OPERAND, l)
                 if mc and lhs and lhs.group(1) in shapes:
                     dims_str = _SHAPE_RE.search(shapes[lhs.group(1)])
                     if dims_str:
@@ -289,7 +305,7 @@ def analyze_hlo(hlo_text: str, total_devices: int) -> HloCost:
                                            "or", "xor", "not"):
                 cost.flops += shape_elems(rshape) * factor
             elif op == "reduce" or op == "reduce-window":
-                ml = re.search(r"reduce(?:-window)?\(%?([\w.\-]+)", l)
+                ml = re.search(r"reduce(?:-window)?\(" + _OPERAND, l)
                 if ml and ml.group(1) in shapes:
                     cost.flops += shape_elems(shapes[ml.group(1)]) * factor
                 else:

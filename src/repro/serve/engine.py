@@ -1,15 +1,23 @@
-"""Batched serving engine: prefill + greedy/temperature decode with KV (or
-SSM-state) caches, per-sequence stopping, and a request queue.
+"""Serving engines.
 
-The decode loop is a single jit'd step over the full batch (static shapes);
-finished sequences keep decoding into a scratch slot but their outputs are
-frozen — the standard static-batch serving pattern.  Continuous batching at
-pod scale would swap finished rows for queued requests at step granularity;
-the cache layout (batch-major leaves) supports that, and `swap_row` is the
-hook (used by tests).
+Two request families share this module:
+
+* ``ServeEngine`` — batched LM generation: prefill + greedy/temperature
+  decode with KV (or SSM-state) caches and per-sequence stopping.  The
+  decode loop is a single jit'd step over the full batch (static shapes);
+  finished sequences keep decoding into a scratch slot but their outputs
+  are frozen — the standard static-batch serving pattern.
+
+* ``SimilarityService`` — similarity campaigns as a service: frozen
+  ``SimilarityRequest``s go through the SAME ``repro.api.SimilarityEngine``
+  the CLI and benchmarks use (one code path to validate), with engine reuse
+  across requests sharing a device pool and an LRU result cache keyed by
+  (request, input fingerprint) so repeated campaigns are free.
 """
 from __future__ import annotations
 
+import hashlib
+from collections import OrderedDict
 from dataclasses import dataclass
 
 import jax
@@ -82,3 +90,59 @@ class ServeEngine:
             return jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
         scaled = logits[:, -1, :] / self.scfg.temperature
         return jax.random.categorical(key, scaled)[:, None].astype(jnp.int32)
+
+
+class SimilarityService:
+    """Similarity campaigns behind a serving front-end.
+
+    Every request is executed by ``repro.api.SimilarityEngine`` — the exact
+    code path of the CLI and benchmarks — so serving never drifts from the
+    validated engines.  Results are LRU-cached by (request, input
+    fingerprint); the engine itself caches meshes per decomposition, so a
+    hot service reuses compiled programs across requests.
+    """
+
+    def __init__(self, max_cached_results: int = 16, devices=None):
+        from repro.api import SimilarityEngine
+
+        self.engine = SimilarityEngine(devices=devices)
+        self.max_cached_results = max_cached_results
+        self._results = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    @staticmethod
+    def _fingerprint(request, V) -> tuple:
+        if V is None:
+            return (request, None)
+        a = np.ascontiguousarray(V)
+        h = hashlib.sha256()
+        h.update(str(a.shape).encode())
+        h.update(str(a.dtype).encode())
+        h.update(a.tobytes())
+        return (request, h.hexdigest())
+
+    def submit(self, request, V=None):
+        """Run (or serve from cache) one campaign; returns SimilarityResult."""
+        if V is None and request.input is not None:
+            # materialize BEFORE fingerprinting: a request-only key would go
+            # stale if the backing file (or generator defaults) changed
+            V = request.input.materialize()
+        key = self._fingerprint(request, V)
+        if key in self._results:
+            self.hits += 1
+            self._results.move_to_end(key)
+            return self._results[key]
+        self.misses += 1
+        result = self.engine.run(request, V)
+        self._results[key] = result
+        while len(self._results) > self.max_cached_results:
+            self._results.popitem(last=False)
+        return result
+
+    def stats(self) -> dict:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "cached_results": len(self._results),
+        }

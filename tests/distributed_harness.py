@@ -116,12 +116,56 @@ def check_3way(V, ref_dense):
     print("  3way staging n_st=2: OK")
 
 
+def check_engine_parity(V):
+    """The unified SimilarityEngine must reproduce the exact per-campaign
+    checksums of the direct czek2/czek3 paths for several decompositions
+    (the api_redesign acceptance contract), and the registry's CCC metric
+    must be decomposition-invariant and match its numpy oracle."""
+    from repro.api import SimilarityEngine, SimilarityRequest, get_metric
+
+    engine = SimilarityEngine()
+    for n_pf, n_pv, n_pr in [(1, 1, 1), (1, 4, 1), (2, 2, 2), (1, 2, 2)]:
+        cfg = CometConfig(n_pf=n_pf, n_pv=n_pv, n_pr=n_pr)
+        mesh = make_comet_mesh(n_pf, n_pv, n_pr)
+        want2 = czek2_distributed(V, mesh, cfg).checksum()
+        got2 = engine.run(
+            SimilarityRequest(way=2, n_pf=n_pf, n_pv=n_pv, n_pr=n_pr), V
+        ).checksum()
+        assert got2 == want2, f"engine 2way checksum != direct ({n_pf},{n_pv},{n_pr})"
+        want3 = czek3_distributed(V, mesh, cfg, stage=0).checksum()
+        got3 = engine.run(
+            SimilarityRequest(way=3, n_pf=n_pf, n_pv=n_pv, n_pr=n_pr), V
+        ).checksum()
+        assert got3 == want3, f"engine 3way checksum != direct ({n_pf},{n_pv},{n_pr})"
+        print(f"  engine parity pf={n_pf} pv={n_pv} pr={n_pr}: OK")
+
+    # CCC: decomposition-invariant checksum + oracle match (fp32 tolerance)
+    ccc_ref = None
+    oracle = get_metric("ccc").oracle2(V).astype(np.float32)
+    iu = np.triu_indices(V.shape[1], 1)
+    for n_pf, n_pv, n_pr in [(1, 1, 1), (1, 4, 1), (2, 2, 2)]:
+        out = engine.run(
+            SimilarityRequest(metric="ccc", way=2,
+                              n_pf=n_pf, n_pv=n_pv, n_pr=n_pr), V
+        )
+        d = out.dense()
+        np.testing.assert_allclose(d[iu], oracle[iu], rtol=1e-5,
+                                   err_msg=f"ccc ({n_pf},{n_pv},{n_pr})")
+        c = out.checksum()
+        if ccc_ref is None:
+            ccc_ref = c
+        assert c == ccc_ref, "ccc checksum varies with decomposition"
+        print(f"  ccc pf={n_pf} pv={n_pv} pr={n_pr}: OK ({hex(c)[:14]})")
+
+
 def main():
     V = random_integer_vectors(N_F, N_V, max_value=15, seed=42)
     print("2-way decomposition invariance:")
     check_2way(V, czek2_metric_np(V).astype(np.float32))
     print("3-way decomposition invariance:")
     check_3way(V, czek3_metric_np(V).astype(np.float32))
+    print("unified engine parity (api redesign contract):")
+    check_engine_parity(V)
     print("ALL DISTRIBUTED CHECKS PASSED")
 
 

@@ -1,0 +1,240 @@
+"""Tests for the unified repro.api subsystem: registry round-trip, request
+validation, engine parity with the direct paths, streaming results,
+save/load manifests, CCC oracle parity, and the zero-denominator guard."""
+import numpy as np
+import pytest
+
+from repro.api import (
+    InputSpec,
+    MetricSpec,
+    SimilarityEngine,
+    SimilarityRequest,
+    SimilarityResult,
+    UnknownMetricError,
+    available_metrics,
+    get_metric,
+    register_metric,
+)
+from repro.core.metrics import czek2_metric_np, safe_denom
+from repro.core.synthetic import random_integer_vectors
+from repro.core.threeway import czek3_distributed
+from repro.core.twoway import CometConfig, czek2_distributed
+from repro.parallel.mesh import make_comet_mesh
+
+
+@pytest.fixture(scope="module")
+def engine():
+    return SimilarityEngine()
+
+
+@pytest.fixture(scope="module")
+def V():
+    return random_integer_vectors(40, 18, max_value=15, seed=3)
+
+
+# ---------------------------------------------------------------- registry --
+
+def test_registry_roundtrip():
+    names = available_metrics()
+    assert "czekanowski" in names and "ccc" in names
+    for name in names:
+        spec = get_metric(name)
+        assert spec.name == name
+        assert 2 in spec.ways
+
+
+def test_unknown_metric_error_lists_available():
+    with pytest.raises(UnknownMetricError) as ei:
+        get_metric("sorensen")
+    assert "sorensen" in str(ei.value)
+    assert "czekanowski" in str(ei.value)
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError):
+        register_metric(get_metric("ccc"))
+
+
+def test_custom_metric_plugs_in(engine, V):
+    """A user-defined metric runs through the whole engine untouched."""
+    import jax.numpy as jnp
+
+    overlap = MetricSpec(
+        name="test-overlap",
+        description="unnormalized min overlap",
+        ways=(2,),
+        combine=jnp.minimum,
+        stat=lambda Vl: Vl.astype(jnp.float32).sum(axis=0),
+        assemble2=lambda n2, si, sj: n2,
+        uses_mgemm=True,
+    )
+    try:
+        register_metric(overlap)
+        out = engine.run(SimilarityRequest(metric="test-overlap", way=2), V)
+        n2 = np.minimum(V[:, :, None], V[:, None, :]).sum(axis=0)
+        iu = np.triu_indices(V.shape[1], 1)
+        np.testing.assert_allclose(out.dense()[iu], n2[iu], rtol=1e-6)
+    finally:
+        from repro.api import registry
+
+        registry._METRICS.pop("test-overlap", None)
+
+
+# -------------------------------------------------------------- validation --
+
+def test_request_validation_bad_way():
+    with pytest.raises(ValueError, match="way"):
+        SimilarityRequest(way=4).validate()
+
+
+def test_request_validation_decomposition_vs_devices(engine, V):
+    req = SimilarityRequest(way=2, n_pv=4, n_pr=4)  # 16 ranks on 1 device
+    with pytest.raises(ValueError, match="devices"):
+        engine.run(req, V)
+
+
+def test_request_validation_stages():
+    with pytest.raises(ValueError, match="stages"):
+        SimilarityRequest(way=3, n_st=2, stages=(2,)).validate()
+    with pytest.raises(ValueError, match="3-way"):
+        SimilarityRequest(way=2, stages=(0,)).validate()
+    with pytest.raises(ValueError, match="staging"):
+        SimilarityRequest(way=2, n_st=2).validate()
+
+
+def test_unknown_metric_via_engine(engine, V):
+    with pytest.raises(UnknownMetricError):
+        engine.run(SimilarityRequest(metric="nope"), V)
+
+
+def test_input_spec_materialize(engine):
+    req = SimilarityRequest(
+        way=2, input=InputSpec(source="synthetic", n_f=32, n_v=10, seed=1)
+    )
+    out = engine.run(req)
+    assert out.num_results() == 10 * 9 // 2
+
+
+# ------------------------------------------------------------------ parity --
+
+def test_engine_matches_direct_czek2(engine, V):
+    direct = czek2_distributed(V, make_comet_mesh(1, 1, 1), CometConfig())
+    out = engine.run(SimilarityRequest(metric="czekanowski", way=2), V)
+    assert out.checksum() == direct.checksum()
+    assert out.num_results() == direct.num_pairs()
+
+
+def test_engine_matches_direct_czek3(engine, V):
+    direct = czek3_distributed(
+        V[:, :12], make_comet_mesh(1, 1, 1), CometConfig(), stage=0
+    )
+    out = engine.run(SimilarityRequest(metric="czekanowski", way=3), V[:, :12])
+    assert out.checksum() == direct.checksum()
+
+
+def test_engine_staged_3way_unions_all_triples(engine, V):
+    out = engine.run(
+        SimilarityRequest(way=3, n_st=2, stages=None), V[:, :12]
+    )
+    assert out.stages == (0, 1)
+    assert out.num_results() == 12 * 11 * 10 // 6
+    # staged union checksum == single-stage run checksum
+    single = engine.run(SimilarityRequest(way=3), V[:, :12])
+    assert out.checksum() == single.checksum()
+
+
+def test_ccc_matches_numpy_oracle_2way(engine, V):
+    out = engine.run(SimilarityRequest(metric="ccc", way=2), V)
+    ref = get_metric("ccc").oracle2(V).astype(np.float32)
+    iu = np.triu_indices(V.shape[1], 1)
+    np.testing.assert_allclose(out.dense()[iu], ref[iu], rtol=1e-5)
+
+
+def test_ccc_matches_numpy_oracle_3way(engine, V):
+    W = V[:, :10]
+    out = engine.run(SimilarityRequest(metric="ccc", way=3), W)
+    ref = get_metric("ccc").oracle3(W).astype(np.float32)
+    d = out.dense()
+    for i in range(10):
+        for j in range(i + 1, 10):
+            for k in range(j + 1, 10):
+                np.testing.assert_allclose(d[i, j, k], ref[i, j, k], rtol=2e-5)
+
+
+# ------------------------------------------------------------------ result --
+
+def test_tiles_stream_covers_entries(engine, V):
+    out = engine.run(SimilarityRequest(way=2), V)
+    from_tiles = sum(len(t) for t in out.tiles())
+    assert from_tiles == out.num_results() == V.shape[1] * (V.shape[1] - 1) // 2
+    for tile in out.tiles():
+        assert tile.way == 2
+        assert len(tile.index) == 2
+        assert len(tile.index[0]) == len(tile.values)
+
+
+def test_save_load_checksum_equality_2way(engine, V, tmp_path):
+    out = engine.run(SimilarityRequest(way=2), V)
+    out.save(str(tmp_path / "c2"))
+    back = SimilarityResult.load(str(tmp_path / "c2"))
+    assert back.checksum() == out.checksum()
+    assert back.metric == "czekanowski"
+    np.testing.assert_array_equal(back.dense(), out.dense())
+
+
+def test_save_load_checksum_equality_3way_staged(engine, V, tmp_path):
+    out = engine.run(SimilarityRequest(way=3, n_st=2, stages=None), V[:, :12])
+    out.save(str(tmp_path / "c3"))
+    back = SimilarityResult.load(str(tmp_path / "c3"))
+    assert back.checksum() == out.checksum()
+    assert back.stages == (0, 1)
+
+
+def test_load_detects_corruption(engine, V, tmp_path):
+    out = engine.run(SimilarityRequest(way=2), V)
+    out.save(str(tmp_path / "c"))
+    blocks = np.load(tmp_path / "c" / "blocks_s0.npy")
+    blocks[blocks > 0] *= np.float32(0.5)
+    np.save(tmp_path / "c" / "blocks_s0.npy", blocks)
+    with pytest.raises(ValueError, match="checksum"):
+        SimilarityResult.load(str(tmp_path / "c"))
+
+
+# ------------------------------------------------------- zero-denominators --
+
+def test_all_zero_vector_yields_zero_not_nan(engine, V):
+    Vz = V.copy()
+    Vz[:, 4] = 0
+    for metric in available_metrics():
+        out = engine.run(SimilarityRequest(metric=metric, way=2), Vz)
+        d = out.dense()
+        assert np.isfinite(d).all(), f"{metric}: non-finite metric values"
+        assert (d[4] == 0).all() and (d[:, 4] == 0).all(), metric
+    # oracles agree (safe_denom unification)
+    ref = czek2_metric_np(Vz)
+    assert np.isfinite(ref).all()
+    assert (ref[4, :4] == 0).all()
+
+
+def test_safe_denom_identity_on_nonzero():
+    d = np.array([1e-3, 2.0, 7.5])
+    np.testing.assert_array_equal(safe_denom(d), d)
+
+
+# ----------------------------------------------------------------- serving --
+
+def test_similarity_service_routes_through_engine(V):
+    from repro.serve import SimilarityService
+
+    svc = SimilarityService(max_cached_results=2)
+    req = SimilarityRequest(metric="czekanowski", way=2)
+    r1 = svc.submit(req, V)
+    r2 = svc.submit(req, V)  # identical request+input -> cache hit
+    assert r2 is r1
+    assert svc.stats() == {"hits": 1, "misses": 1, "cached_results": 1}
+    direct = czek2_distributed(V, make_comet_mesh(1, 1, 1), CometConfig())
+    assert r1.checksum() == direct.checksum()
+    # different input -> distinct result
+    r3 = svc.submit(req, V + 1)
+    assert r3.checksum() != r1.checksum()
+    assert svc.stats()["misses"] == 2
