@@ -23,6 +23,53 @@ M = N = 1280
 K = 1536
 
 
+# -- BENCH_kernels.json sweep (perf trajectory) -----------------------------
+#
+# impl × size grid timing the 2-way contraction kernels, plus the fused
+# metric kernel ("pallas_fused": contraction + in-kernel epilogue — the
+# TileExecutor hot path).  GiB/s counts the operand reads + result write;
+# comparisons/s is the paper's element-op rate (m*k*n combines per call).
+
+SWEEP_SHAPES = [(128, 256, 128), (256, 512, 256)]
+
+
+def _sweep_callables(A, B, sa, sb, levels):
+    from repro.core.mgemm import get_impl
+    from repro.kernels.mgemm import czek2_metric
+
+    xla = get_impl("xla")
+    lvl = get_impl("levels_xla")
+    pallas = get_impl("pallas")
+    return {
+        "xla": lambda: xla(A, B),
+        "levels_xla": lambda: lvl(A, B, levels=levels),
+        "pallas": lambda: pallas(A, B),
+        "pallas_fused": lambda: czek2_metric(A, B, sa, sb),
+    }
+
+
+def kernel_sweep(shapes=SWEEP_SHAPES, max_value=3):
+    """Entries for BENCH_kernels.json: impl × size × GiB/s, comparisons/s."""
+    entries = []
+    rng = np.random.default_rng(0)
+    for m, k, n in shapes:
+        A = jnp.asarray(rng.integers(0, max_value + 1, (m, k)).astype(np.float32))
+        B = jnp.asarray(rng.integers(0, max_value + 1, (k, n)).astype(np.float32))
+        sa = A.sum(axis=1)
+        sb = B.sum(axis=0)
+        bytes_moved = (m * k + k * n + m * n) * 4
+        for impl, fn in _sweep_callables(A, B, sa, sb, max_value).items():
+            t = time_fn(lambda fn=fn: fn())
+            entries.append({
+                "impl": impl,
+                "m": m, "k": k, "n": n,
+                "seconds": t,
+                "gib_per_s": bytes_moved / t / 2**30,
+                "comparisons_per_s": m * k * n / t,
+            })
+    return entries
+
+
 def main():
     rng = np.random.default_rng(0)
     A = jnp.asarray(rng.integers(0, 3, (M, K)).astype(np.float32))

@@ -8,7 +8,6 @@ output mode (paper §6.8 writes u8 metrics).
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.util import row, time_fn
 from repro.core.mgemm import mgemm_xla

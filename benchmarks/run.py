@@ -5,11 +5,38 @@ Prints ``name,us_per_call,derived`` CSV.  Scaling (Figs 6-10) runs in a
 subprocess with 8 virtual devices; everything else runs on this process's
 single device.  Dry-run-derived rows appear when results/dryrun is populated
 (python -m repro.launch.dryrun --all).
+
+Also writes ``BENCH_kernels.json`` at the repo root — the impl × size kernel
+sweep (GiB/s and comparisons/s per entry) that anchors the perf trajectory:
+future PRs regress their kernel changes against the last committed numbers.
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 import traceback
+
+BENCH_KERNELS = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_kernels.json",
+)
+
+
+def write_bench_kernels() -> str:
+    import jax
+
+    from benchmarks.bench_kernel import kernel_sweep
+
+    payload = {
+        "backend": jax.default_backend(),
+        "note": "pallas* entries run in interpret mode off-TPU",
+        "entries": kernel_sweep(),
+    }
+    with open(BENCH_KERNELS, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return BENCH_KERNELS
 
 
 def main() -> None:
@@ -44,6 +71,12 @@ def main() -> None:
         except Exception:
             traceback.print_exc()
             failed.append(name)
+    try:
+        path = write_bench_kernels()
+        print(f"wrote {path}")
+    except Exception:
+        traceback.print_exc()
+        failed.append("bench-kernels-json")
     if failed:
         print(f"FAILED: {failed}")
         sys.exit(1)

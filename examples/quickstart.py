@@ -2,7 +2,6 @@
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
 
 from repro.api import SimilarityEngine, SimilarityRequest, available_metrics
 from repro.core.synthetic import random_integer_vectors

@@ -89,6 +89,8 @@ class SimilarityEngine:
         t0 = time.perf_counter()
         if request.way == 2:
             outputs = [twoway_distributed(V, mesh, cfg, metric=spec)]
+            if request.packed:
+                outputs = [o.pack() for o in outputs]
         else:
             outputs = [
                 threeway_distributed(V, mesh, cfg, stage=s, metric=spec)

@@ -85,6 +85,11 @@ def _ccc_assemble2(n2, si, sj):
     return n2 / safe_denom(jnp.sqrt(si * sj))
 
 
+# Pallas-composable: elementwise sqrt/divide on the accumulator tile, same
+# fp ops as _ccc_assemble2 so fused and out-of-kernel paths agree bitwise.
+_ccc_assemble_tile = _ccc_assemble2
+
+
 def _ccc_assemble3(b3, n2_pl, n2_pr, n2_lr, sp, sl, sr):
     d3 = jnp.sqrt(sp[:, None, None] * sl[None, :, None] * sr[None, None, :])
     return b3 / safe_denom(d3)
@@ -114,6 +119,8 @@ CCC = register_metric(MetricSpec(
     contract=_ccc_contract,
     assemble2=_ccc_assemble2,
     assemble3=_ccc_assemble3,
+    assemble_tile=_ccc_assemble_tile,
+    combine_sum_contract=True,  # jnp.dot == Σ products, the combine-sum
     uses_mgemm=False,
     needs_pair_terms=False,
     oracle2=_ccc_oracle2,

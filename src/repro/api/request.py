@@ -66,6 +66,11 @@ class SimilarityRequest:
     out_dtype: str = "float32"
     ring_dtype: str = "float32"
     chunk: int = 128
+    #: store 2-way result blocks in packed upper-triangular form (the
+    #: diagonal block keeps only its strict upper triangle — roughly halves
+    #: slot-buffer memory for small decompositions); values and checksum
+    #: are unchanged
+    packed: bool = False
     #: optional input description (run() can also take V directly)
     input: InputSpec = None
 
@@ -113,6 +118,8 @@ class SimilarityRequest:
             )
         if self.way == 2 and self.n_st != 1:
             raise ValueError("staging (n_st > 1) applies to 3-way only")
+        if self.packed and self.way != 2:
+            raise ValueError("packed triangular storage applies to 2-way only")
         if self.stages is not None:
             if self.way == 2:
                 raise ValueError("stages apply to 3-way requests only")

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import json
 import os
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import numpy as np
 
@@ -120,6 +120,28 @@ class SimilarityResult:
             self._num_results = sum(len(t) for t in self.tiles())
         return self._num_results
 
+    # -- storage modes -----------------------------------------------------
+
+    @property
+    def storage(self) -> str:
+        """"dense" | "packed" (2-way only; 3-way outputs are always dense)."""
+        if self.way == 2 and self.outputs:
+            return self.outputs[0].storage
+        return "dense"
+
+    def pack(self) -> "SimilarityResult":
+        """Return a result with 2-way outputs in packed upper-triangular
+        block storage (``self`` is left untouched, like
+        ``TwoWayOutput.pack()``).
+
+        Values, entries and checksum are unchanged (the packed form drops
+        only the never-computed lower triangle of diagonal blocks); the
+        retained result memory for the slot buffer roughly halves on
+        diagonal-dominated decompositions."""
+        if self.way != 2 or self.storage == "packed":
+            return self
+        return replace(self, outputs=[o.pack() for o in self.outputs])
+
     # -- persistence -------------------------------------------------------
 
     def save(self, path: str) -> dict:
@@ -137,6 +159,7 @@ class SimilarityResult:
             "decomposition": list(self.decomposition),
             "n_st": self.n_st,
             "stages": list(self.stages),
+            "storage": self.storage,
             "out_dtype": self.out_dtype,
             "results": int(self.num_results()),
             "seconds": self.seconds,
@@ -160,6 +183,7 @@ class SimilarityResult:
                 outputs.append(TwoWayOutput(
                     blocks=blocks, plan=TwoWayPlan(n_pv, n_pr),
                     n_v=m["n_v"], n_vp=m["n_vp"],
+                    storage=m.get("storage", "dense"),
                 ))
             else:
                 outputs.append(ThreeWayOutput(

@@ -16,6 +16,16 @@ different metric — so the machinery is parameterized here by a ``MetricSpec``:
                   through the mgemm impl registry (XLA / Pallas / levels),
                   dot-product metrics hit the plain MXU GEMM.
 * ``assemble2`` / ``assemble3`` — numerator(s) + stats -> metric values.
+* ``assemble_tile`` — the Pallas-composable 2-way epilogue: the same
+                  arithmetic as ``assemble2`` restricted to ops that lower
+                  inside a kernel flush (elementwise jnp on the accumulator
+                  tile and broadcast-ready stat tiles).  When present (and
+                  ``combine_sum_contract`` holds) the ``TileExecutor``
+                  generates the fused metric kernel for the metric — the
+                  numerator tile is divided in VMEM and never round-trips
+                  through HBM.  Denominators MUST go through ``safe_denom``
+                  so the kernel path guards all-zero vectors identically to
+                  the XLA path.
 
 The Czekanowski spec below reproduces the pre-refactor engines' arithmetic
 op-for-op, so every campaign checksum is bit-identical to the inlined code it
@@ -34,7 +44,7 @@ import jax.numpy as jnp
 
 from repro.core.metrics import safe_denom
 
-__all__ = ["MetricSpec", "CZEKANOWSKI"]
+__all__ = ["MetricSpec", "CZEKANOWSKI", "czek_assemble_tile"]
 
 
 @dataclass(frozen=True)
@@ -52,6 +62,20 @@ class MetricSpec:
     assemble2: Callable = None
     #: (b3, n2_pl, n2_pr, n2_lr, s_p, s_l, s_r) -> (L, m, m) 3-way values
     assemble3: Callable = None
+    #: (acc, sa, sb) -> 2-way values, composable inside a Pallas kernel
+    #: flush (acc (bm, bn) fp32, sa (bm, 1), sb (1, bn)); None disables the
+    #: fused-epilogue path for this metric
+    assemble_tile: Callable = None
+    #: the numerator contraction equals the plain sum-over-combine reduction
+    #: ``sum_q combine(A[i, q], B[q, j])`` — true for min-plus (Czekanowski)
+    #: and dot-product (CCC) metrics; required for the fused Pallas kernels,
+    #: which realize the contraction exactly that way.  ``None`` (default)
+    #: auto-derives: True iff the metric has no custom ``contract`` (mgemm
+    #: dispatch and the generic combine-sum fallback both qualify), so a
+    #: registered metric with an unrelated contraction is never silently
+    #: routed to the fused kernels; set True explicitly when the custom
+    #: contract IS a combine-sum (e.g. a plain dot).
+    combine_sum_contract: bool = None
     #: route the contraction through the mgemm impl registry (CometConfig.impl)
     uses_mgemm: bool = False
     #: fixed contraction when not using the registry (e.g. a plain dot)
@@ -62,6 +86,13 @@ class MetricSpec:
     #: numpy float64 references, (n_f, n_v) -> (n_v, n_v) / (n_v,)*3
     oracle2: Callable = None
     oracle3: Callable = None
+
+    @property
+    def contract_is_combine_sum(self) -> bool:
+        """Whether the fused Pallas kernels may realize this contraction."""
+        if self.combine_sum_contract is not None:
+            return self.combine_sum_contract
+        return self.uses_mgemm or self.contract is None
 
     def contract_fn(self, cfg) -> Callable:
         """Numerator contraction for this metric under a CometConfig.
@@ -92,6 +123,12 @@ def _czek_assemble2(n2, si, sj):
     return 2.0 * n2 / safe_denom(si + sj)
 
 
+#: Same fp ops as ``_czek_assemble2`` — the fused kernel path stays
+#: bit-identical to the out-of-kernel assembly (both divide the exact fp32
+#: integer numerator by the safe_denom-guarded sum).
+czek_assemble_tile = _czek_assemble2
+
+
 def _czek_assemble3(b3, n2_pl, n2_pr, n2_lr, sp, sl, sr):
     n3 = n2_pl[:, :, None] + n2_pr[:, None, :] + n2_lr[None, :, :] - b3
     d3 = sp[:, None, None] + sl[None, :, None] + sr[None, None, :]
@@ -118,6 +155,7 @@ CZEKANOWSKI = MetricSpec(
     stat=_czek_stat,
     assemble2=_czek_assemble2,
     assemble3=_czek_assemble3,
+    assemble_tile=czek_assemble_tile,
     uses_mgemm=True,
     needs_pair_terms=True,
     oracle2=_czek_oracle2,

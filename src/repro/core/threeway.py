@@ -11,17 +11,19 @@ stage ``s_t`` of the tetrahedral schedule in ``repro.core.plan3``:
            communication pipeline — computing ONE oriented 1/6-slice per
            block (middle-id rule, ``plan3.vol_slice_rule``).
 
-Each slice runs Algorithm 3's inner pipeline as a *single batched mGEMM*:
-the pipeline axis (length L = n_vp/(6 n_st)) is folded into the GEMM M
-dimension via X[q, (l, t)] = min(left[q, l], pipe[q, j0 + t]), so
+Each slice runs Algorithm 3's inner pipeline through the ``TileExecutor``:
+on the XLA path the pipeline axis (length L = n_vp/(6 n_st)) is folded into
+the GEMM M dimension via X[q, (l, t)] = min(left[q, l], pipe[q, j0 + t]), so
 
     B[t, l, r] = sum_q min(pipe[q, j0+t], left[q, l], right[q, r])
 
 is one (m*L, n_fp) x (n_fp, m) min-plus GEMM — the TPU-friendly realization
 of the paper's "sequence of 2-way operations" that maximizes mGEMM size
-(their stated goal for the staging knob).  Pairwise numerators for the
-metric assembly are two (L, m) sliced mGEMMs + one (m, m) full mGEMM; all
-partials are psummed over "pf" in one fused collective per item.
+(their stated goal for the staging knob).  On the Pallas path the executor
+instead runs the fused X_j kernel per pipeline column, so X never touches
+HBM (kernels/czek3).  Pairwise numerators for the metric assembly are two
+(L, m) sliced contractions + one (m, m) full contraction; all partials are
+psummed over "pf" in one fused collective per item.
 
 Round-robin: item sb executes iff sb % n_pr == p_r (lax.cond — compute is
 skipped, not masked).  Phases B/C run under ``lax.fori_loop`` with the ring
@@ -30,7 +32,6 @@ skipped, not masked).  Phases B/C run under ``lax.fori_loop`` with the ring
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 from functools import partial
 
@@ -44,7 +45,8 @@ from repro.parallel.compat import shard_map
 from repro.core import checksum as ck
 from repro.core.metric_spec import CZEKANOWSKI, MetricSpec
 from repro.core.plan3 import ItemKind, ThreeWayPlan, PERMS
-from repro.core.twoway import CometConfig, pad_vectors
+from repro.core.tile_executor import TileExecutor
+from repro.core.twoway import CometConfig
 
 __all__ = ["ThreeWayOutput", "threeway_distributed", "czek3_distributed"]
 
@@ -65,8 +67,8 @@ def _vol_rule_traced(own, bj, bk):
 
 
 def _item_metrics(
-    pipe, left, right, s_p, s_l, s_r, j0, *, kind: ItemKind, L: int, mgemm,
-    out_dtype, metric: MetricSpec = None
+    pipe, left, right, s_p, s_l, s_r, j0, *, kind: ItemKind, L: int,
+    executor: TileExecutor, out_dtype, metric: MetricSpec = None
 ):
     """Masked metric slice (L, m, m) for one work item.
 
@@ -76,14 +78,13 @@ def _item_metrics(
     metric = metric or CZEKANOWSKI
     n_fp, m = pipe.shape
     ps = jax.lax.dynamic_slice(pipe, (0, j0), (n_fp, L))  # (n_fp, L)
-    # batched 3-way term: X[q, l*L + t] = combine(left[q,l], ps[q,t])
-    X = metric.combine(left[:, :, None], ps[:, None, :]).reshape(n_fp, m * L)
-    B = mgemm(X.T, right).reshape(m, L, right.shape[1]).transpose(1, 0, 2)
+    # 3-way term B[t, l, r] via the executor (fused X_j kernel on pallas)
+    B = executor.threeway_slice(ps, left, right)
     if metric.needs_pair_terms:
         # pairwise numerators, one fused psum with the 3-way term
-        n2_pl = mgemm(ps.T, left)  # (L, m)
-        n2_pr = mgemm(ps.T, right)  # (L, m)
-        n2_lr = mgemm(left.T, right)  # (m, m)
+        n2_pl = executor.contract(ps.T, left)  # (L, m)
+        n2_pr = executor.contract(ps.T, right)  # (L, m)
+        n2_lr = executor.contract(left.T, right)  # (m, m)
         B, n2_pl, n2_pr, n2_lr = jax.lax.psum((B, n2_pl, n2_pr, n2_lr), "pf")
     else:
         n2_pl = n2_pr = n2_lr = None
@@ -114,7 +115,8 @@ def _threeway_program(
     n_fp, m = Vl.shape
     assert m % (6 * n_st) == 0, "n_vp must divide 6*n_st"
     L = m // (6 * n_st)
-    mgemm = metric.contract_fn(cfg)
+    executor = TileExecutor(cfg=cfg, metric=metric, out_dtype=out_dtype,
+                            axis="pf")
     slots = plan.slots_per_rank
 
     pv = jax.lax.axis_index("pv")
@@ -149,8 +151,8 @@ def _threeway_program(
             execute,
             lambda s=s: _item_metrics(
                 Vl, Vl, Vl, s_own, s_own, s_own, j0_of(s),
-                kind=ItemKind.DIAG, L=L, mgemm=mgemm, out_dtype=out_dtype,
-                metric=metric,
+                kind=ItemKind.DIAG, L=L, executor=executor,
+                out_dtype=out_dtype, metric=metric,
             ),
         )
 
@@ -168,8 +170,8 @@ def _threeway_program(
                 execute,
                 lambda s=s, bufj=bufj, sbj=sbj: _item_metrics(
                     bufj, Vl, bufj, sbj, s_own, sbj, j0_of(s),
-                    kind=ItemKind.FACE, L=L, mgemm=mgemm, out_dtype=out_dtype,
-                    metric=metric,
+                    kind=ItemKind.FACE, L=L, executor=executor,
+                    out_dtype=out_dtype, metric=metric,
                 ),
             )
         return bufj, sbj, out
@@ -218,8 +220,8 @@ def _threeway_program(
             )
             return _item_metrics(
                 pipe, left, right, s_p, s_l, s_r, j0,
-                kind=ItemKind.VOL, L=L, mgemm=mgemm, out_dtype=out_dtype,
-                metric=metric,
+                kind=ItemKind.VOL, L=L, executor=executor,
+                out_dtype=out_dtype, metric=metric,
             )
 
         out = emit(out, sb, execute, thunk)

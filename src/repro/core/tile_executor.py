@@ -1,0 +1,184 @@
+"""TileExecutor — the single tiled hot path under both distributed engines.
+
+Before this layer existed, ``_twoway_program`` / ``_threeway_program`` built
+their own contraction pipelines: a plain mGEMM via ``cfg.impl_fn()``, the
+metric assembly in XLA *outside* the kernel (one HBM round-trip of every
+numerator block), and diagonal blocks computed in full before masking one
+triangle with ``jnp.where``.  The executor owns all of that now:
+
+* **Kernel dispatch** across the implementation registry (``xla`` /
+  ``pallas`` / ``levels*``) plus the *generated fused path*: any metric with
+  a Pallas-composable ``assemble_tile`` epilogue and a combine-sum
+  contraction gets the fused kernel of ``repro.kernels.mgemm`` — the
+  numerator tile is divided in VMEM and never written to HBM (paper §3.1's
+  epilogue fusion, for every registered metric instead of a hard-coded
+  Czekanowski one-off).
+* **In-kernel symmetry elimination** (paper §5): diagonal blocks run the
+  triangular tile schedule — the Pallas grid enumerates only tiles with
+  ``tj >= ti`` — replacing compute-both-then-mask.
+* **Block padding / tile selection**: operands are padded to tile multiples
+  inside the kernels; tile sizes adapt to the block shape (capped at the
+  TPU-sized defaults, 8-aligned for the VPU register shape) so interpret
+  mode on CPU does not pay for 128x512 padding of a 12-vector test block.
+
+Bit-exactness contract: the fused path performs op-for-op the same fp32
+arithmetic as the out-of-kernel assembly (exact integer numerators, then
+``assemble_tile`` == ``assemble2`` division), so every campaign checksum is
+bit-identical across ``impl="xla"`` and ``impl="pallas"`` on integer data —
+verified in tests/distributed_harness.py and tests/test_fused_epilogue.py.
+
+The fused epilogue needs the *complete* numerator at flush time, so it
+engages only when the contraction is not split over ranks (``n_pf == 1``);
+otherwise the executor falls back to contraction + psum + out-of-kernel
+assembly, unchanged from the pre-executor engines.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.metric_spec import CZEKANOWSKI, MetricSpec
+
+__all__ = ["TileExecutor"]
+
+_TILE_ALIGN = 8  # VPU sublane multiple; real TPU tiles stay (8k, 128)-shaped
+
+
+def _auto_tile(extent: int, cap: int) -> int:
+    """Smallest 8-aligned tile covering ``extent``, capped at the default."""
+    return int(min(cap, -(-extent // _TILE_ALIGN) * _TILE_ALIGN))
+
+
+@dataclass(frozen=True)
+class TileExecutor:
+    """Tile-level kernel dispatch for one (config, metric, out_dtype) triple.
+
+    ``axis`` is the mesh axis numerator partials are psummed over on the
+    unfused path ("pf" inside the distributed programs); ``None`` outside
+    shard_map (single-process tests, benchmarks).
+    """
+
+    cfg: Any  # CometConfig (duck-typed to avoid a core.twoway import cycle)
+    metric: MetricSpec = None
+    out_dtype: Any = jnp.float32
+    axis: Optional[str] = "pf"
+
+    def __post_init__(self):
+        if self.metric is None:
+            object.__setattr__(self, "metric", CZEKANOWSKI)
+
+    # -- dispatch predicates ------------------------------------------------
+
+    @property
+    def fused(self) -> bool:
+        """True when 2-way blocks run the fused-epilogue Pallas kernel."""
+        return (
+            self.cfg.impl == "pallas"
+            and self.cfg.n_pf == 1
+            and self.metric.assemble_tile is not None
+            and self.metric.contract_is_combine_sum
+        )
+
+    @property
+    def fused3(self) -> bool:
+        """True when 3-way pipeline steps run the fused X_j Pallas kernel."""
+        return self.cfg.impl == "pallas" and self.metric.contract_is_combine_sum
+
+    # -- internals ----------------------------------------------------------
+
+    def _psum(self, x):
+        return jax.lax.psum(x, self.axis) if self.axis is not None else x
+
+    def contract(self, A, B):
+        """Numerator contraction via the metric's registry dispatch."""
+        return self.metric.contract_fn(self.cfg)(A, B)
+
+    # -- 2-way --------------------------------------------------------------
+
+    def pair_block(self, Va, sa, Vb, sb, *, diagonal: bool = False):
+        """One (m, n) block of 2-way metric values.
+
+        Va (n_fp, m) / Vb (n_fp, n) field-major vector blocks; sa / sb the
+        psummed per-vector stats.  ``diagonal`` marks Va and Vb as the same
+        block: only the strict upper triangle is returned (zeros elsewhere),
+        computed on the triangular tile schedule on the fused path.
+        """
+        k, m = Va.shape
+        n = Vb.shape[1]
+        if self.fused:
+            # late import: kernels register against core.mgemm at import time
+            from repro.kernels.mgemm import (
+                metric2_tiles,
+                metric2_tri,
+                unpack_tri_tiles,
+            )
+            from repro.kernels.mgemm.kernel import (
+                DEFAULT_BK,
+                DEFAULT_BM,
+                DEFAULT_BN,
+            )
+
+            kw = dict(
+                combine=self.metric.combine,
+                epilogue=self.metric.assemble_tile,
+                bk=_auto_tile(k, DEFAULT_BK),
+                out_dtype=jnp.dtype(self.out_dtype),
+            )
+            if diagonal:
+                bt = _auto_tile(m, DEFAULT_BM)
+                packed = metric2_tri(Va.T, Vb, sa, sb, bt=bt, **kw)
+                return unpack_tri_tiles(packed, m, bt)
+            return metric2_tiles(
+                Va.T, Vb, sa, sb,
+                bm=_auto_tile(m, DEFAULT_BM), bn=_auto_tile(n, DEFAULT_BN),
+                **kw,
+            )
+        # unfused: contraction (registry impl) + psum + out-of-kernel
+        # assembly — op-for-op the pre-executor engine arithmetic.
+        n2 = self._psum(self.contract(Va.T, Vb).astype(jnp.float32))
+        vals = self.metric.assemble2(n2, sa[:, None], sb[None, :]).astype(
+            self.out_dtype
+        )
+        if diagonal:
+            tri = jnp.triu(jnp.ones((m, n), bool), k=1)
+            vals = jnp.where(tri, vals, 0)
+        return vals
+
+    # -- 3-way --------------------------------------------------------------
+
+    def threeway_slice(self, ps, left, right):
+        """Batched 3-way numerator B[t, l, r] = Σ_q combine(ps_t, left_l,
+        right_r) for one pipeline slice.  NOT psummed — the caller fuses the
+        psum with the pairwise terms into one collective.
+
+        Fused path: one batched ``threeway_batch`` launch (the pipeline axis
+        is a kernel grid dimension, so trace/compile cost is O(1) in L), the
+        X_j = combine(left, ps_t) tiles built in VMEM (never HBM).  Unfused:
+        the pipeline axis folds into the GEMM M dimension (one batched
+        contraction), exactly the pre-executor formulation.
+        """
+        n_fp, L = ps.shape
+        m = left.shape[1]
+        n = right.shape[1]
+        if self.fused3:
+            from repro.kernels.czek3 import threeway_batch
+            from repro.kernels.czek3.kernel import (
+                DEFAULT_BK,
+                DEFAULT_BM,
+                DEFAULT_BN,
+            )
+
+            return threeway_batch(
+                left, ps, right,
+                combine=self.metric.combine,
+                bm=_auto_tile(m, DEFAULT_BM),
+                bn=_auto_tile(n, DEFAULT_BN),
+                bk=_auto_tile(n_fp, DEFAULT_BK),
+            )
+        X = self.metric.combine(left[:, :, None], ps[:, None, :]).reshape(
+            n_fp, m * L
+        )
+        return self.contract(X.T, right).reshape(m, L, n).transpose(1, 0, 2)

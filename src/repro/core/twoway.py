@@ -15,15 +15,19 @@ SPMD mapping (shard_map over a ("pf", "pv", "pr") mesh):
 * "pf" reduction: numerator partials are ``psum`` over "pf"; row-sum
   denominators are psummed once and ring-carried alongside V.
 
+Per-block compute is owned by the ``TileExecutor`` (kernel dispatch, fused
+metric epilogues, triangular diagonal-block schedule) — see
+``repro.core.tile_executor``.
+
 Bit-exactness contract (paper §5): with integer-valued inputs every
 numerator is an exact fp integer regardless of summation order, so any
-(n_pf, n_pv, n_pr) decomposition produces bit-identical metric values —
-verified by checksum in tests/distributed_harness.py.
+(n_pf, n_pv, n_pr) decomposition — and any executor path — produces
+bit-identical metric values, verified by checksum in
+tests/distributed_harness.py.
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, replace
+from dataclasses import dataclass
 from functools import partial
 
 import jax
@@ -37,6 +41,7 @@ from repro.core import checksum as ck
 from repro.core.metric_spec import CZEKANOWSKI, MetricSpec
 from repro.core.mgemm import get_impl
 from repro.core.plan2 import TwoWayPlan, global_pairs_of_block
+from repro.core.tile_executor import TileExecutor
 
 __all__ = [
     "CometConfig",
@@ -93,12 +98,87 @@ def pad_vectors(V: np.ndarray, cfg: CometConfig) -> np.ndarray:
 
 @dataclass
 class TwoWayOutput:
-    """Per-rank metric blocks + the metadata to read them."""
+    """Per-rank metric blocks + the metadata to read them.
 
-    blocks: np.ndarray  # (n_pv, n_pr, slots, m, m)
+    Two storage modes:
+
+    * ``dense`` — ``blocks`` is (n_pv, n_pr, slots, m, m), one full square
+      per computed ring step (what the device program emits).
+    * ``packed`` — ``blocks`` is (n_pv, n_pr, packed_len): each rank's
+      computed steps concatenated, the diagonal block (step 0, where only
+      the strict upper triangle carries results) stored as its m(m-1)/2
+      packed triangle values and off-diagonal blocks as flat m*m squares.
+      The layout is derived from the plan, so nothing beyond the flat array
+      needs persisting.  Packing is a HOST-side storage transform (the
+      device program still emits dense slots; ``pack()`` converts after the
+      transfer), so the saving applies to the retained / persisted result
+      buffer — roughly half for diagonal-dominated small-``n_pv`` runs (one
+      slot, one diagonal block) — not to peak device memory.
+    """
+
+    blocks: np.ndarray
     plan: TwoWayPlan
     n_v: int  # true (unpadded) vector count
     n_vp: int  # padded block size
+    storage: str = "dense"  # "dense" | "packed"
+
+    # -- packed layout (deterministic from the plan) -----------------------
+
+    def _packed_layout(self, p_r: int):
+        """[(d, offset, size)] for one round-robin rank's packed buffer."""
+        m = self.n_vp
+        tri = m * (m - 1) // 2
+        out, off = [], 0
+        for d in self.plan.steps_of_pr(p_r):
+            size = tri if d == 0 else m * m
+            out.append((d, off, size))
+            off += size
+        return out
+
+    def _block_values(self, p_v: int, p_r: int, d: int) -> np.ndarray:
+        """(m, m) values of the block rank (p_v, p_r) computed at step d."""
+        m = self.n_vp
+        if self.storage == "dense":
+            return self.blocks[p_v, p_r, d // self.plan.n_pr]
+        off, size = next(
+            (o, s) for dd, o, s in self._packed_layout(p_r) if dd == d
+        )
+        flat = self.blocks[p_v, p_r, off:off + size]
+        if d == 0:
+            out = np.zeros((m, m), flat.dtype)
+            out[np.triu_indices(m, 1)] = flat
+            return out
+        return flat.reshape(m, m)
+
+    def pack(self) -> "TwoWayOutput":
+        """Convert to packed upper-triangular storage (values unchanged —
+        identical entries and checksum, verified in tests)."""
+        if self.storage == "packed":
+            return self
+        m = self.n_vp
+        iu = np.triu_indices(m, 1)
+        layouts = [self._packed_layout(p_r) for p_r in range(self.plan.n_pr)]
+        length = max((lay[-1][1] + lay[-1][2]) if lay else 0 for lay in layouts)
+        packed = np.zeros(
+            (self.plan.n_pv, self.plan.n_pr, length), self.blocks.dtype
+        )
+        for p_v in range(self.plan.n_pv):
+            for p_r in range(self.plan.n_pr):
+                for d, off, size in layouts[p_r]:
+                    blk = self.blocks[p_v, p_r, d // self.plan.n_pr]
+                    packed[p_v, p_r, off:off + size] = (
+                        blk[iu] if d == 0 else blk.ravel()
+                    )
+        return TwoWayOutput(
+            blocks=packed, plan=self.plan, n_v=self.n_v, n_vp=self.n_vp,
+            storage="packed",
+        )
+
+    @property
+    def nbytes(self) -> int:
+        return self.blocks.nbytes
+
+    # -- reads --------------------------------------------------------------
 
     def entries(self):
         """Yield (i, j, value) for every unique computed pair (i < j)."""
@@ -111,7 +191,7 @@ class TwoWayOutput:
                     row, col = self.plan.block_of(p_v, d)
                     I, J, mask = global_pairs_of_block(row, col, self.n_vp)
                     mask = mask & (I < self.n_v) & (J < self.n_v)
-                    vals = self.blocks[p_v, p_r, d // n_pr]
+                    vals = self._block_values(p_v, p_r, d)
                     yield I[mask], J[mask], vals[mask]
 
     def dense(self) -> np.ndarray:
@@ -133,17 +213,22 @@ class TwoWayOutput:
 def _twoway_program(
     Vl, *, cfg: CometConfig, plan: TwoWayPlan, out_dtype, metric: MetricSpec = None
 ):
-    """Per-device program (inside shard_map). Vl: (n_f/n_pf, n_vp)."""
+    """Per-device program (inside shard_map). Vl: (n_f/n_pf, n_vp).
+
+    All block compute goes through the TileExecutor: on the fused Pallas
+    path the metric epilogue runs in-kernel (no dense numerator block in
+    HBM) and the step-0 diagonal block runs the triangular tile schedule
+    (only ``tj >= ti`` tiles enumerated, per paper §5)."""
     metric = metric or CZEKANOWSKI
+    executor = TileExecutor(cfg=cfg, metric=metric, out_dtype=out_dtype,
+                            axis="pf")
     n_pv, n_pr = cfg.n_pv, cfg.n_pr
     m = Vl.shape[1]
-    contract = metric.contract_fn(cfg)
     s_own = jax.lax.psum(metric.stat(Vl), "pf")  # (m,)
     pv = jax.lax.axis_index("pv")
     pr = jax.lax.axis_index("pr")
     # receive from upward neighbour: src (i+1) -> dst i
     perm = [((i + 1) % n_pv, i) for i in range(n_pv)]
-    tri = jnp.triu(jnp.ones((m, m), bool), k=1)
 
     Vr, sr = Vl, s_own
     out = jnp.zeros((plan.slots_per_rank, m, m), out_dtype)
@@ -156,10 +241,7 @@ def _twoway_program(
             execute = jnp.logical_and(execute, pv < n_pv // 2)
 
         def compute(o, Vr=Vr, sr=sr, d=d):
-            n2 = jax.lax.psum(contract(Vl.T, Vr).astype(jnp.float32), "pf")
-            vals = metric.assemble2(n2, s_own[:, None], sr[None, :]).astype(out_dtype)
-            if d == 0:
-                vals = jnp.where(tri, vals, 0)
+            vals = executor.pair_block(Vl, s_own, Vr, sr, diagonal=(d == 0))
             return o.at[d // n_pr].set(vals)
 
         out = jax.lax.cond(execute, compute, lambda o: o, out)

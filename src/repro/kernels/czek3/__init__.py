@@ -1,2 +1,2 @@
-from .ops import czek3_step  # noqa: F401
+from .ops import czek3_step, threeway_batch, threeway_step  # noqa: F401
 from .ref import czek3_step_ref  # noqa: F401

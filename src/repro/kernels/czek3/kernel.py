@@ -2,13 +2,17 @@
 
 One pipeline step of the 3-way computation:
 
-    B_j[i, k] = sum_q min(own[q, i], x[q], right[q, k])
+    B_j[i, k] = sum_q combine(own[q, i], x[q], right[q, k])
 
-where ``x = pipe[:, j]`` is the current pipeline column.  The paper
-materializes X_j = min(V, v_j) and then runs a 2-way mGEMM; this kernel fuses
-the X_j construction into the contraction so X_j never touches HBM —
-eliminating one full (n_f x n_vp) HBM write + read per pipeline step
-(recorded as a §Perf memory-term win).
+where ``x = pipe[:, j]`` is the current pipeline column and ``combine`` is
+the metric's elementwise pairing op (``min`` for Czekanowski, ``*`` for the
+correlation family).  The paper materializes X_j = combine(V, v_j) and then
+runs a 2-way mGEMM; this kernel fuses the X_j construction into the
+contraction so X_j never touches HBM — eliminating one full (n_f x n_vp)
+HBM write + read per pipeline step.  The ``TileExecutor`` routes the 3-way
+pipeline step of the distributed engine through this kernel whenever
+``impl="pallas"`` is requested, so the fusion is what the hot path actually
+executes (not a stand-alone demonstration kernel).
 
 Operands arrive field-major ((n_f, m) blocks), matching how the distributed
 engine stores vector blocks, so the kernel contracts over the *leading* axis.
@@ -28,7 +32,9 @@ DEFAULT_BK = 512
 K_CHUNK = 8
 
 
-def _czek3_kernel(own_ref, x_ref, right_ref, o_ref, acc_ref, *, n_k_steps, k_chunk):
+def _threeway_kernel(
+    own_ref, x_ref, right_ref, o_ref, acc_ref, *, n_k_steps, k_chunk, combine
+):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -38,12 +44,12 @@ def _czek3_kernel(own_ref, x_ref, right_ref, o_ref, acc_ref, *, n_k_steps, k_chu
     right = right_ref[...]  # (bk, bn)
     bk, bm = own.shape
     bn = right.shape[1]
-    xo = jnp.minimum(own, x)  # fused X_j tile — never written to HBM
+    xo = combine(own, x)  # fused X_j tile — never written to HBM
 
     def body(t, acc):
         a_sub = jax.lax.dynamic_slice(xo, (t * k_chunk, 0), (k_chunk, bm))
         b_sub = jax.lax.dynamic_slice(right, (t * k_chunk, 0), (k_chunk, bn))
-        m = jnp.minimum(a_sub[:, :, None], b_sub[:, None, :]).astype(jnp.float32)
+        m = combine(a_sub[:, :, None], b_sub[:, None, :]).astype(jnp.float32)
         return acc + m.sum(axis=0)
 
     acc_ref[...] += jax.lax.fori_loop(
@@ -56,13 +62,16 @@ def _czek3_kernel(own_ref, x_ref, right_ref, o_ref, acc_ref, *, n_k_steps, k_chu
 
 
 @functools.partial(
-    jax.jit, static_argnames=("bm", "bn", "bk", "k_chunk", "interpret", "out_dtype")
+    jax.jit,
+    static_argnames=("combine", "bm", "bn", "bk", "k_chunk", "interpret",
+                     "out_dtype"),
 )
-def czek3_step_pallas(
+def threeway_step_pallas(
     own,
     x,
     right,
     *,
+    combine,
     bm: int = DEFAULT_BM,
     bn: int = DEFAULT_BN,
     bk: int = DEFAULT_BK,
@@ -70,9 +79,11 @@ def czek3_step_pallas(
     interpret: bool = False,
     out_dtype=jnp.float32,
 ):
-    """B[i, k] = sum_q min(own[q, i], x[q], right[q, k]).
+    """B[i, k] = sum_q combine(own[q, i], x[q], right[q, k]).
 
-    own (n_f, m), x (n_f,) or (n_f, 1), right (n_f, n)."""
+    own (n_f, m), x (n_f,) or (n_f, 1), right (n_f, n).  Valid for any
+    metric whose 3-way term chains its elementwise ``combine`` (min-plus and
+    product metrics both do — ``MetricSpec.combine_sum_contract``)."""
     if x.ndim == 1:
         x = x[:, None]
     k, m = own.shape
@@ -89,7 +100,10 @@ def czek3_step_pallas(
     n_k_steps = K // bk
     grid = (M // bm, N // bn, n_k_steps)
     out = pl.pallas_call(
-        functools.partial(_czek3_kernel, n_k_steps=n_k_steps, k_chunk=k_chunk),
+        functools.partial(
+            _threeway_kernel, n_k_steps=n_k_steps, k_chunk=k_chunk,
+            combine=combine,
+        ),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bk, bm), lambda i, j, t: (t, i)),
@@ -102,3 +116,92 @@ def czek3_step_pallas(
         interpret=interpret,
     )(own, x, right)
     return out[:m, :n]
+
+
+def _threeway_batch_kernel(
+    own_ref, x_ref, right_ref, o_ref, acc_ref, *, n_k_steps, k_chunk, combine
+):
+    """Batched variant: grid axis 0 walks the pipeline columns, so a whole
+    (n_fp, L) slice runs as ONE kernel launch (the accumulator still lives
+    across the innermost K axis only)."""
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    own = own_ref[...]  # (bk, bm)
+    x = x_ref[...]  # (bk, 1) — this grid step's pipeline column
+    right = right_ref[...]  # (bk, bn)
+    bk, bm = own.shape
+    bn = right.shape[1]
+    xo = combine(own, x)  # fused X_j tile — never written to HBM
+
+    def body(t, acc):
+        a_sub = jax.lax.dynamic_slice(xo, (t * k_chunk, 0), (k_chunk, bm))
+        b_sub = jax.lax.dynamic_slice(right, (t * k_chunk, 0), (k_chunk, bn))
+        m = combine(a_sub[:, :, None], b_sub[:, None, :]).astype(jnp.float32)
+        return acc + m.sum(axis=0)
+
+    acc_ref[...] += jax.lax.fori_loop(
+        0, bk // k_chunk, body, jnp.zeros((bm, bn), jnp.float32)
+    )
+
+    @pl.when(pl.program_id(3) == n_k_steps - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("combine", "bm", "bn", "bk", "k_chunk", "interpret",
+                     "out_dtype"),
+)
+def threeway_batch_pallas(
+    own,
+    X,
+    right,
+    *,
+    combine,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    k_chunk: int = K_CHUNK,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+):
+    """B[t, i, k] = sum_q combine(own[q, i], X[q, t], right[q, k]).
+
+    own (n_f, m), X (n_f, L) pipeline columns, right (n_f, n) -> (L, m, n).
+    One launch for the whole pipeline slice: the grid is (L, m/bm, n/bn,
+    K/bk), so trace/compile cost is O(1) in L instead of L separate
+    pallas_calls."""
+    k, m = own.shape
+    L = X.shape[1]
+    n = right.shape[1]
+    mp, np_, kp = (-m) % bm, (-n) % bn, (-k) % bk
+    if mp or kp:
+        own = jnp.pad(own, ((0, kp), (0, mp)))
+    if kp:
+        X = jnp.pad(X, ((0, kp), (0, 0)))
+    if np_ or kp:
+        right = jnp.pad(right, ((0, kp), (0, np_)))
+    K, M = own.shape
+    N = right.shape[1]
+    n_k_steps = K // bk
+    grid = (L, M // bm, N // bn, n_k_steps)
+    out = pl.pallas_call(
+        functools.partial(
+            _threeway_batch_kernel, n_k_steps=n_k_steps, k_chunk=k_chunk,
+            combine=combine,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, bm), lambda l, i, j, t: (t, i)),
+            pl.BlockSpec((bk, 1), lambda l, i, j, t: (t, l)),
+            pl.BlockSpec((bk, bn), lambda l, i, j, t: (t, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda l, i, j, t: (l, i, j)),
+        out_shape=jax.ShapeDtypeStruct((L, M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(own, X, right)
+    return out[:, :m, :n]

@@ -2,14 +2,27 @@
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
-from .kernel import czek3_step_pallas
+from .kernel import threeway_batch_pallas, threeway_step_pallas
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def czek3_step(own, x, right, **kw):
+def threeway_step(own, x, right, *, combine, **kw):
+    """Metric-generic fused 3-way pipeline step (X_j never touches HBM)."""
     kw.setdefault("interpret", not _on_tpu())
-    return czek3_step_pallas(own, x, right, **kw)
+    return threeway_step_pallas(own, x, right, combine=combine, **kw)
+
+
+def threeway_batch(own, X, right, *, combine, **kw):
+    """All L pipeline columns of one slice in a single fused launch."""
+    kw.setdefault("interpret", not _on_tpu())
+    return threeway_batch_pallas(own, X, right, combine=combine, **kw)
+
+
+def czek3_step(own, x, right, **kw):
+    kw.setdefault("combine", jnp.minimum)
+    return threeway_step(own, x, right, **kw)

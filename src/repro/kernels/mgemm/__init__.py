@@ -1,2 +1,3 @@
-from .ops import czek2_metric, mgemm  # noqa: F401
+from .kernel import tri_tile_coords, unpack_tri_tiles  # noqa: F401
+from .ops import czek2_metric, metric2_tiles, metric2_tri, mgemm  # noqa: F401
 from .ref import czek2_metric_ref, mgemm_ref  # noqa: F401

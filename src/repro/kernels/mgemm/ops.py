@@ -1,11 +1,20 @@
-"""jit'd public wrappers for the mGEMM Pallas kernel + impl registration."""
+"""jit'd public wrappers for the mGEMM Pallas kernels + impl registration.
+
+Wrappers interpret automatically off-TPU (kernel-body-on-CPU), which is how
+the CPU test harness and CI drive every kernel path.
+"""
 from __future__ import annotations
 
 import jax
 
 from repro.core.mgemm import register_impl
 
-from .kernel import czek2_metric_pallas, mgemm_pallas
+from .kernel import (
+    czek2_metric_pallas,
+    metric2_pallas,
+    metric2_tri_pallas,
+    mgemm_pallas,
+)
 
 
 def _on_tpu() -> bool:
@@ -21,6 +30,20 @@ def mgemm(A, B, **kw):
 def czek2_metric(A, B, sa, sb, **kw):
     kw.setdefault("interpret", not _on_tpu())
     return czek2_metric_pallas(A, B, sa, sb, **kw)
+
+
+def metric2_tiles(A, B, sa, sb, *, combine, epilogue, **kw):
+    """Generated fused metric kernel, rectangular tile grid."""
+    kw.setdefault("interpret", not _on_tpu())
+    return metric2_pallas(A, B, sa, sb, combine=combine, epilogue=epilogue, **kw)
+
+
+def metric2_tri(A, B, sa, sb, *, combine, epilogue, **kw):
+    """Generated fused metric kernel, triangular (diagonal-block) grid.
+
+    Returns packed (P, bt, bt) tiles; see ``unpack_tri_tiles``."""
+    kw.setdefault("interpret", not _on_tpu())
+    return metric2_tri_pallas(A, B, sa, sb, combine=combine, epilogue=epilogue, **kw)
 
 
 register_impl("pallas", mgemm)

@@ -28,7 +28,6 @@ def main(argv=None):
 
     from repro.configs.registry import get_config, get_smoke_config
     from repro.models.common import param_count
-    from repro.models import api
     from repro.optim.adamw import AdamWConfig
     from repro.optim.schedule import warmup_cosine
     from repro.train.trainer import Trainer, TrainerConfig

@@ -2,8 +2,6 @@
 serving engine, and the dry-run."""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 
 from repro.models import encdec as encdec_mod
 from repro.models import transformer as tf_mod

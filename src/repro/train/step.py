@@ -1,10 +1,8 @@
 """jit'd train/serve step factories (shared by trainer, launcher, dry-run)."""
 from __future__ import annotations
 
-from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from repro.models import api
 from repro.models.common import ModelConfig

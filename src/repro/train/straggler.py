@@ -11,7 +11,6 @@ batches make it safe for a replacement host to take over a shard mid-run.
 """
 from __future__ import annotations
 
-import time
 from collections import deque
 from dataclasses import dataclass, field
 

@@ -11,11 +11,10 @@ Features (each covered by tests):
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable
 
 import jax
-import numpy as np
 
 from repro.checkpoint.ckpt import CheckpointManager
 from repro.data.tokens import PrefetchIterator, SyntheticTokens

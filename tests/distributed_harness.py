@@ -11,7 +11,6 @@ parallel decompositions (n_pf, n_pv, n_pr, n_st), and asserts
 Invoked by tests/test_distributed.py; standalone: python distributed_harness.py
 """
 import os
-import sys
 
 os.environ["XLA_FLAGS"] = (
     "--xla_force_host_platform_device_count=8 " + os.environ.get("XLA_FLAGS", "")
@@ -58,11 +57,21 @@ def check_2way(V, ref_dense):
             ref_checksum = c
         assert c == ref_checksum, f"2way checksum mismatch for {cfg}"
         print(f"  2way pf={n_pf} pv={n_pv} pr={n_pr}: OK ({hex(c)[:14]})")
-    # pallas kernel inside the distributed engine (interpret mode)
-    cfg = CometConfig(n_pf=1, n_pv=2, n_pr=1, impl="pallas")
-    out = czek2_distributed(V, make_comet_mesh(1, 2, 1), cfg)
-    assert out.checksum() == ref_checksum, "pallas impl changed results"
-    print("  2way pallas impl: OK")
+    # pallas fused-epilogue path inside the distributed engine (interpret
+    # mode): in-kernel assembly + triangular diagonal-block schedule must be
+    # bit-identical to the XLA out-of-kernel path
+    for n_pf, n_pv, n_pr in [(1, 2, 1), (1, 4, 1), (1, 2, 2)]:
+        cfg = CometConfig(n_pf=n_pf, n_pv=n_pv, n_pr=n_pr, impl="pallas")
+        out = czek2_distributed(V, make_comet_mesh(n_pf, n_pv, n_pr), cfg)
+        assert out.checksum() == ref_checksum, (
+            f"pallas impl changed results ({n_pf},{n_pv},{n_pr})"
+        )
+        print(f"  2way pallas impl pv={n_pv} pr={n_pr}: OK")
+    # packed upper-triangular storage: same entries, same checksum
+    packed = out.pack()
+    assert packed.storage == "packed"
+    assert packed.checksum() == ref_checksum, "packing changed results"
+    print("  2way packed storage: OK")
     # levels impl is exact for small-integer data
     cfg = CometConfig(n_pf=1, n_pv=2, n_pr=1, impl="levels_xla", levels=15)
     out = czek2_distributed(V, make_comet_mesh(1, 2, 1), cfg)
@@ -101,6 +110,12 @@ def check_3way(V, ref_dense):
             ref_checksum = c
         assert c == ref_checksum, f"3way checksum mismatch for {cfg}"
         print(f"  3way pf={n_pf} pv={n_pv} pr={n_pr}: OK ({hex(c)[:14]})")
+
+    # pallas path: fused X_j pipeline-step kernels, bit-identical numerators
+    cfg = CometConfig(n_pf=1, n_pv=2, n_pr=1, impl="pallas")
+    out = czek3_distributed(V, make_comet_mesh(1, 2, 1), cfg, stage=0)
+    assert out.checksum() == ref_checksum, "3way pallas impl changed results"
+    print("  3way pallas impl: OK")
 
     # staging: union over stages == the full result set, bit-identical
     cfg = CometConfig(n_pf=1, n_pv=2, n_pr=1, n_st=2)
@@ -156,6 +171,14 @@ def check_engine_parity(V):
             ccc_ref = c
         assert c == ccc_ref, "ccc checksum varies with decomposition"
         print(f"  ccc pf={n_pf} pv={n_pv} pr={n_pr}: OK ({hex(c)[:14]})")
+
+    # the generated fused kernel serves CCC too (metric-generic epilogue):
+    # integer data -> exact numerators -> bit-identical to the XLA path
+    out = engine.run(
+        SimilarityRequest(metric="ccc", way=2, n_pv=2, impl="pallas"), V
+    )
+    assert out.checksum() == ccc_ref, "ccc pallas fused path changed results"
+    print("  ccc pallas fused epilogue: OK")
 
 
 def main():

@@ -190,6 +190,25 @@ def test_save_load_checksum_equality_3way_staged(engine, V, tmp_path):
     assert back.stages == (0, 1)
 
 
+def test_save_load_packed_storage(engine, V, tmp_path):
+    """packed=True: smaller blocks on disk, identical checksum after load."""
+    dense = engine.run(SimilarityRequest(way=2), V)
+    packed = engine.run(SimilarityRequest(way=2, packed=True), V)
+    assert packed.storage == "packed"
+    assert packed.checksum() == dense.checksum()
+    assert packed.outputs[0].nbytes < dense.outputs[0].nbytes
+    packed.save(str(tmp_path / "cp"))
+    back = SimilarityResult.load(str(tmp_path / "cp"))
+    assert back.storage == "packed"
+    assert back.checksum() == dense.checksum()
+    np.testing.assert_array_equal(back.dense(), dense.dense())
+
+
+def test_packed_request_rejected_for_3way():
+    with pytest.raises(ValueError, match="packed"):
+        SimilarityRequest(way=3, packed=True).validate()
+
+
 def test_load_detects_corruption(engine, V, tmp_path):
     out = engine.run(SimilarityRequest(way=2), V)
     out.save(str(tmp_path / "c"))

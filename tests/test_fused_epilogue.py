@@ -1,0 +1,183 @@
+"""Fused-epilogue and triangular-schedule parity (interpret mode).
+
+The TileExecutor contract: for every registered metric, the generated
+fused Pallas kernel (contraction + in-kernel ``assemble_tile`` epilogue)
+must be BIT-identical to the unfused path (mGEMM-style contraction + out-of-
+kernel ``assemble2``), for rectangular tiles and for the triangular
+diagonal-block schedule, across out_dtypes.  Integer inputs make every
+numerator fp-exact, so both paths perform literally the same divisions.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api.registry import available_metrics, get_metric
+from repro.core.synthetic import random_integer_vectors
+from repro.core.tile_executor import TileExecutor
+from repro.core.twoway import CometConfig, czek2_distributed
+from repro.kernels.mgemm import (
+    czek2_metric,
+    metric2_tri,
+    tri_tile_coords,
+    unpack_tri_tiles,
+)
+from repro.kernels.mgemm.kernel import _tri_decode
+from repro.parallel.mesh import make_comet_mesh
+
+OUT_DTYPES = ["float32", "bfloat16"]
+
+
+def _executors(metric_name, out_dtype):
+    spec = get_metric(metric_name)
+    dt = jnp.dtype(out_dtype)
+    fused = TileExecutor(cfg=CometConfig(impl="pallas"), metric=spec,
+                         out_dtype=dt, axis=None)
+    unfused = TileExecutor(cfg=CometConfig(impl="xla"), metric=spec,
+                           out_dtype=dt, axis=None)
+    return spec, fused, unfused
+
+
+@pytest.mark.parametrize("out_dtype", OUT_DTYPES)
+@pytest.mark.parametrize("metric_name", sorted(available_metrics()))
+def test_rectangular_fused_parity(metric_name, out_dtype):
+    """Off-diagonal (rectangular) block: fused == contraction + assembly."""
+    spec, fused, unfused = _executors(metric_name, out_dtype)
+    if spec.assemble_tile is None:
+        pytest.skip("metric has no Pallas-composable epilogue")
+    assert fused.fused and not unfused.fused
+    V = random_integer_vectors(40, 23, max_value=15, seed=11)
+    Va = jnp.asarray(V[:, :11])
+    Vb = jnp.asarray(V[:, 11:])
+    sa = jnp.asarray(np.asarray(spec.stat(Va)))
+    sb = jnp.asarray(np.asarray(spec.stat(Vb)))
+    got = fused.pair_block(Va, sa, Vb, sb, diagonal=False)
+    want = unfused.pair_block(Va, sa, Vb, sb, diagonal=False)
+    assert got.dtype == want.dtype == jnp.dtype(out_dtype)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+@pytest.mark.parametrize("out_dtype", OUT_DTYPES)
+@pytest.mark.parametrize("metric_name", sorted(available_metrics()))
+# one-tile, ragged, one-tile-exact, multi-tile T>1 through the executor's
+# auto tile (200 > DEFAULT_BM=128 -> T=2, exercising _tri_decode + unpack)
+@pytest.mark.parametrize("m", [8, 11, 24, 200])
+def test_triangular_fused_parity(metric_name, out_dtype, m):
+    """Diagonal block on the triangular schedule == compute-then-mask."""
+    spec, fused, unfused = _executors(metric_name, out_dtype)
+    if spec.assemble_tile is None:
+        pytest.skip("metric has no Pallas-composable epilogue")
+    V = jnp.asarray(random_integer_vectors(32, m, max_value=15, seed=m))
+    s = jnp.asarray(np.asarray(spec.stat(V)))
+    got = fused.pair_block(V, s, V, s, diagonal=True)
+    want = unfused.pair_block(V, s, V, s, diagonal=True)
+    assert (np.asarray(got) == np.asarray(want)).all()
+    # strict upper triangle only — the lower half was never computed
+    assert (np.asarray(got)[np.tril_indices(m)] == 0).all()
+
+
+@pytest.mark.parametrize("metric_name", sorted(available_metrics()))
+def test_threeway_slice_fused_parity(metric_name):
+    """Fused per-column X_j kernels == batched XLA contraction (3-way)."""
+    spec, fused, unfused = _executors(metric_name, "float32")
+    if not spec.contract_is_combine_sum:
+        pytest.skip("metric contraction is not a combine-sum")
+    rng = np.random.default_rng(9)
+    n_f, m, L = 24, 10, 3
+    pipe = jnp.asarray(rng.integers(0, 8, (n_f, m)).astype(np.float32))
+    left = jnp.asarray(rng.integers(0, 8, (n_f, m)).astype(np.float32))
+    right = jnp.asarray(rng.integers(0, 8, (n_f, m)).astype(np.float32))
+    ps = pipe[:, :L]
+    got = fused.threeway_slice(ps, left, right)
+    want = unfused.threeway_slice(ps, left, right)
+    assert got.shape == want.shape == (L, m, m)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_triangular_schedule_enumerates_half():
+    """The grid visits exactly T(T+1)/2 tiles, each unordered pair once."""
+    for T in [1, 2, 3, 7, 64, 513]:
+        ti, tj = tri_tile_coords(T)
+        assert len(ti) == T * (T + 1) // 2
+        assert (tj >= ti).all()
+        assert len({(a, b) for a, b in zip(ti, tj)}) == len(ti)
+        # the in-kernel arithmetic decode matches the host schedule exactly
+        di, dj = _tri_decode(jnp.arange(len(ti)), T)
+        assert (np.asarray(di) == ti).all() and (np.asarray(dj) == tj).all()
+
+
+def test_packed_tri_kernel_storage_is_half():
+    """Packed (P, bt, bt) output holds ~half the dense block's tiles."""
+    spec = get_metric("czekanowski")
+    V = jnp.asarray(random_integer_vectors(16, 32, max_value=7, seed=2))
+    s = jnp.asarray(np.asarray(spec.stat(V)))
+    bt = 8
+    packed = metric2_tri(V.T, V, s, s, combine=spec.combine,
+                         epilogue=spec.assemble_tile, bt=bt, bk=16)
+    T = 32 // bt
+    assert packed.shape == (T * (T + 1) // 2, bt, bt)  # 10 tiles, not 16
+    dense = unpack_tri_tiles(packed, 32, bt)
+    want = np.asarray(spec.assemble2(
+        jnp.minimum(V[:, :, None], V[:, None, :]).astype(jnp.float32).sum(0),
+        s[:, None], s[None, :],
+    ))
+    want = np.where(np.triu(np.ones((32, 32), bool), 1), want, 0)
+    assert (np.asarray(dense) == want.astype(np.float32)).all()
+
+
+def test_fused_kernel_zero_denominator_guarded():
+    """All-zero vectors: kernel path must yield 0 (safe_denom), not NaN.
+
+    Regression for the pre-refactor czek2_metric_pallas, which padded
+    row-sums with 1.0 and divided raw — real all-zero columns hit 0/0."""
+    V = np.zeros((16, 4), np.float32)
+    V[:, 0] = 1.0  # one live column, three all-zero
+    Vj = jnp.asarray(V)
+    s = Vj.sum(axis=0)
+    got = np.asarray(czek2_metric(Vj.T, Vj, s, s, bm=8, bn=8, bk=8))
+    assert np.isfinite(got).all(), "0/0 leaked through the kernel epilogue"
+    # all-zero x all-zero and all-zero x live pairs are 0, live diag is 1
+    assert got[0, 0] == 1.0
+    assert (got[1:, :] == 0).all() and (got[:, 1:] == 0).all()
+
+
+def test_packed_output_roundtrip_and_memory():
+    """pack(): identical entries + checksum, ~half slot-buffer memory."""
+    V = random_integer_vectors(32, 20, max_value=15, seed=6)
+    out = czek2_distributed(V, make_comet_mesh(1, 1, 1), CometConfig())
+    packed = out.pack()
+    assert packed.storage == "packed"
+    assert packed.checksum() == out.checksum()
+    assert (packed.dense() == out.dense()).all()
+    m = out.n_vp
+    assert packed.nbytes == out.nbytes * (m - 1) // (2 * m)  # tri/full ratio
+    assert packed.pack() is packed  # idempotent
+
+
+def test_custom_contract_metric_never_silently_fused():
+    """A metric with a custom (non-combine-sum) contraction must stay off
+    the fused kernels unless it opts in explicitly — impl='pallas' would
+    otherwise silently compute the wrong numerators."""
+    from repro.core.metric_spec import MetricSpec
+
+    custom = MetricSpec(name="weird", combine=jnp.minimum,
+                        contract=lambda A, B: A @ B + 1.0)
+    assert not custom.contract_is_combine_sum
+    ex = TileExecutor(cfg=CometConfig(impl="pallas"), metric=custom)
+    assert not ex.fused and not ex.fused3
+    # mgemm-dispatch and generic-fallback metrics auto-qualify; explicit
+    # opt-in (CCC's dot) is honored
+    assert get_metric("czekanowski").contract_is_combine_sum
+    assert get_metric("ccc").contract_is_combine_sum
+    assert MetricSpec(name="generic", combine=jnp.minimum).contract_is_combine_sum
+
+
+def test_executor_fusion_predicate():
+    """The fused epilogue needs the complete numerator: n_pf splits the
+    contraction over ranks, so fusion must disengage."""
+    spec = get_metric("czekanowski")
+    assert TileExecutor(cfg=CometConfig(impl="pallas"), metric=spec).fused
+    assert not TileExecutor(cfg=CometConfig(impl="pallas", n_pf=2),
+                            metric=spec).fused
+    assert not TileExecutor(cfg=CometConfig(impl="xla"), metric=spec).fused
+    assert not TileExecutor(cfg=CometConfig(impl="levels_xla"),
+                            metric=spec).fused

@@ -6,14 +6,14 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import checksum as ck
-from repro.core.mgemm import mgemm_xla
-from repro.core.metrics import czek2_metric_np
-from repro.core.plan2 import TwoWayPlan, global_pairs_of_block
-from repro.core.plan3 import ThreeWayPlan
-from repro.core.synthetic import analytic_window_vectors
-from repro.kernels.mgemm_levels.ref import mgemm_levels_ref
-from repro.optim.compression import dequantize, quantize
+from repro.core import checksum as ck  # noqa: E402
+from repro.core.mgemm import mgemm_xla  # noqa: E402
+from repro.core.metrics import czek2_metric_np  # noqa: E402
+from repro.core.plan2 import TwoWayPlan, global_pairs_of_block  # noqa: E402
+from repro.core.plan3 import ThreeWayPlan  # noqa: E402
+from repro.core.synthetic import analytic_window_vectors  # noqa: E402
+from repro.kernels.mgemm_levels.ref import mgemm_levels_ref  # noqa: E402
+from repro.optim.compression import dequantize, quantize  # noqa: E402
 
 DIMS = st.integers(2, 12)
 
