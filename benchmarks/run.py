@@ -9,9 +9,15 @@ single device.  Dry-run-derived rows appear when results/dryrun is populated
 Also writes ``BENCH_kernels.json`` at the repo root — the impl × size kernel
 sweep (GiB/s and comparisons/s per entry) that anchors the perf trajectory:
 future PRs regress their kernel changes against the last committed numbers.
+
+CLI (so CI can smoke the sweep at tiny shapes and validate the schema):
+
+    python -m benchmarks.run --kernels-only --shapes 32,64,32 --out /tmp/b.json
+    python -m benchmarks.run --validate BENCH_kernels.json
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
@@ -22,24 +28,101 @@ BENCH_KERNELS = os.path.join(
     "BENCH_kernels.json",
 )
 
+#: every impl the sweep may emit; --validate rejects anything else so the
+#: perf-trajectory file cannot silently rot
+KNOWN_IMPLS = {
+    "xla", "levels_xla", "levels_xla_hoisted", "levels",
+    "pallas", "pallas_fused", "fused-levels",
+}
+_ENTRY_NUMBER_KEYS = ("seconds", "gib_per_s", "comparisons_per_s")
+_ENTRY_INT_KEYS = ("m", "k", "n")
 
-def write_bench_kernels() -> str:
+
+def validate_bench_kernels(path: str) -> None:
+    """Raise ValueError unless ``path`` is a well-formed kernel-sweep file."""
+    with open(path) as f:
+        payload = json.load(f)
+    for key in ("backend", "note", "entries"):
+        if key not in payload:
+            raise ValueError(f"{path}: missing top-level key {key!r}")
+    if not isinstance(payload["entries"], list) or not payload["entries"]:
+        raise ValueError(f"{path}: 'entries' must be a non-empty list")
+    for i, e in enumerate(payload["entries"]):
+        if e.get("impl") not in KNOWN_IMPLS:
+            raise ValueError(
+                f"{path}: entries[{i}] impl {e.get('impl')!r} not in "
+                f"{sorted(KNOWN_IMPLS)}"
+            )
+        for key in _ENTRY_INT_KEYS:
+            if not isinstance(e.get(key), int) or e[key] <= 0:
+                raise ValueError(f"{path}: entries[{i}].{key} must be a "
+                                 f"positive int, got {e.get(key)!r}")
+        for key in _ENTRY_NUMBER_KEYS:
+            v = e.get(key)
+            if not isinstance(v, (int, float)) or not v > 0:
+                raise ValueError(f"{path}: entries[{i}].{key} must be a "
+                                 f"positive number, got {v!r}")
+
+
+def _parse_shapes(text: str):
+    """'m,k,n[;m,k,n...]' -> [(m, k, n), ...]"""
+    shapes = []
+    for part in text.split(";"):
+        dims = tuple(int(x) for x in part.split(","))
+        if len(dims) != 3:
+            raise ValueError(f"shape {part!r} is not m,k,n")
+        shapes.append(dims)
+    return shapes
+
+
+def write_bench_kernels(shapes=None, out: str = BENCH_KERNELS,
+                        max_value: int = 3) -> str:
     import jax
 
-    from benchmarks.bench_kernel import kernel_sweep
+    from benchmarks.bench_kernel import SWEEP_SHAPES, kernel_sweep
 
     payload = {
         "backend": jax.default_backend(),
         "note": "pallas* entries run in interpret mode off-TPU",
-        "entries": kernel_sweep(),
+        "entries": kernel_sweep(shapes or SWEEP_SHAPES, max_value=max_value),
     }
-    with open(BENCH_KERNELS, "w") as f:
+    with open(out, "w") as f:
         json.dump(payload, f, indent=2)
         f.write("\n")
-    return BENCH_KERNELS
+    return out
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shapes", default="",
+                    help="kernel-sweep shapes m,k,n[;m,k,n...] "
+                         "(default: the built-in grid)")
+    ap.add_argument("--max-value", type=int, default=3,
+                    help="synthetic integer level ceiling for the sweep")
+    ap.add_argument("--out", default=BENCH_KERNELS,
+                    help="where to write the kernel-sweep JSON")
+    ap.add_argument("--kernels-only", action="store_true",
+                    help="only run the kernel sweep (skip paper tables)")
+    ap.add_argument("--validate", metavar="PATH", default="",
+                    help="validate a kernel-sweep JSON schema and exit")
+    args = ap.parse_args(argv)
+
+    if args.validate:
+        validate_bench_kernels(args.validate)
+        print(f"{args.validate}: schema OK")
+        return
+
+    shapes = _parse_shapes(args.shapes) if args.shapes else None
+    if args.kernels_only:
+        path = write_bench_kernels(shapes, args.out, args.max_value)
+        validate_bench_kernels(path)
+        print(f"wrote {path}")
+        return
+
+    _run_all(shapes, args.out, args.max_value)
+
+
+def _run_all(shapes, out, max_value) -> None:
     from benchmarks import (
         bench_accel_ratio,
         bench_kernel,
@@ -72,7 +155,8 @@ def main() -> None:
             traceback.print_exc()
             failed.append(name)
     try:
-        path = write_bench_kernels()
+        path = write_bench_kernels(shapes, out, max_value)
+        validate_bench_kernels(path)
         print(f"wrote {path}")
     except Exception:
         traceback.print_exc()

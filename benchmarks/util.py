@@ -6,8 +6,13 @@ import time
 import jax
 
 
-def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
-    """Median wall seconds per call (blocks on jax outputs)."""
+def time_fn(fn, *args, warmup: int = 1, iters: int = 3,
+            reduce: str = "median") -> float:
+    """Wall seconds per call (blocks on jax outputs).
+
+    ``reduce="median"`` (default) suits one-off table rows; ``"min"`` is the
+    low-noise estimator used for the BENCH_kernels.json trajectory entries,
+    where scheduler interference must not read as a kernel regression."""
     for _ in range(warmup):
         out = fn(*args)
         jax.block_until_ready(out)
@@ -18,7 +23,7 @@ def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
         jax.block_until_ready(out)
         times.append(time.perf_counter() - t0)
     times.sort()
-    return times[len(times) // 2]
+    return times[0] if reduce == "min" else times[len(times) // 2]
 
 
 def row(name: str, seconds: float, derived: str = "") -> tuple[str, float, str]:

@@ -64,7 +64,12 @@ class SimilarityRequest:
     impl: str = "xla"
     levels: int = 2
     out_dtype: str = "float32"
-    ring_dtype: str = "float32"
+    #: "auto" ring-carries int8 when the data is integer-valued with
+    #: |values| <= 127 (4x less ICI wire than fp32); "float32" opts out
+    ring_dtype: str = "auto"
+    #: bit-plane pre-encoding for the levels path: "auto" | "bitplane" |
+    #: "none" — see CometConfig.encoding
+    encoding: str = "auto"
     chunk: int = 128
     #: store 2-way result blocks in packed upper-triangular form (the
     #: diagonal block keeps only its strict upper triangle — roughly halves
@@ -90,7 +95,7 @@ class SimilarityRequest:
             n_pf=self.n_pf, n_pv=self.n_pv, n_pr=self.n_pr, n_st=self.n_st,
             impl=self.impl, levels=self.levels,
             out_dtype=self.out_dtype, ring_dtype=self.ring_dtype,
-            chunk=self.chunk,
+            encoding=self.encoding, chunk=self.chunk,
         )
 
     def with_decomposition(self, n_pf: int, n_pv: int, n_pr: int) -> "SimilarityRequest":
@@ -118,6 +123,11 @@ class SimilarityRequest:
             )
         if self.way == 2 and self.n_st != 1:
             raise ValueError("staging (n_st > 1) applies to 3-way only")
+        if self.encoding not in ("auto", "bitplane", "none"):
+            raise ValueError(
+                f"encoding must be 'auto', 'bitplane' or 'none', "
+                f"got {self.encoding!r}"
+            )
         if self.packed and self.way != 2:
             raise ValueError("packed triangular storage applies to 2-way only")
         if self.stages is not None:

@@ -110,6 +110,12 @@ class MetricSpec:
         comb = self.combine
 
         def generic(A, B):
+            # cast BEFORE combining: ring_dtype="auto" ships int8 payloads
+            # for small-integer data, and a multiply-like combine would
+            # overflow in int8 (cf. _ccc_combine, which casts for the same
+            # reason inside its own definition)
+            A = A.astype(jnp.float32)
+            B = B.astype(jnp.float32)
             return comb(A[:, :, None], B[None, :, :]).astype(jnp.float32).sum(1)
 
         return generic

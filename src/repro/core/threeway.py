@@ -319,6 +319,14 @@ def threeway_distributed(
     metric = metric or CZEKANOWSKI
     n_v = V.shape[1]
     V = np.asarray(V)
+    # Resolve 'auto' knobs.  The 3-way ring still carries V (the executor's
+    # level-decomposed slice kernel encodes planes per pipeline slice, no
+    # worse than the per-contraction ``(X >= t)`` it replaces); carrying
+    # packed planes through the doubly-nested ring is a ROADMAP open item.
+    # int8 auto-selection already quarters the wire traffic here.
+    from repro.core.twoway import resolve_config
+
+    cfg = resolve_config(cfg, V, metric)
     # Algorithm 3's pipeline geometry needs the per-rank block size to split
     # into 6 sixths x n_st stages: round n_vp up to a multiple of 6*n_st and
     # zero-pad.  All pad columns land at the global tail, so global index ==

@@ -7,12 +7,16 @@ numerator block), and diagonal blocks computed in full before masking one
 triangle with ``jnp.where``.  The executor owns all of that now:
 
 * **Kernel dispatch** across the implementation registry (``xla`` /
-  ``pallas`` / ``levels*``) plus the *generated fused path*: any metric with
-  a Pallas-composable ``assemble_tile`` epilogue and a combine-sum
-  contraction gets the fused kernel of ``repro.kernels.mgemm`` — the
+  ``pallas`` / ``levels*``) plus the *generated fused paths*: any metric
+  with a Pallas-composable ``assemble_tile`` epilogue and a combine-sum
+  contraction gets a fused kernel — the VPU kernel of
+  ``repro.kernels.mgemm`` under ``impl="pallas"`` (``path ==
+  "fused-vpu"``), or the packed bit-plane MXU kernel of
+  ``repro.kernels.mgemm_levels`` under ``impl="levels"`` with a
+  min-combine metric (``path == "fused-levels"``).  Either way the
   numerator tile is divided in VMEM and never written to HBM (paper §3.1's
   epilogue fusion, for every registered metric instead of a hard-coded
-  Czekanowski one-off).
+  Czekanowski one-off).  ``path`` / ``path_reason`` surface the decision.
 * **In-kernel symmetry elimination** (paper §5): diagonal blocks run the
   triangular tile schedule — the Pallas grid enumerates only tiles with
   ``tj >= ti`` — replacing compute-both-then-mask.
@@ -72,20 +76,80 @@ class TileExecutor:
 
     # -- dispatch predicates ------------------------------------------------
 
+    def _path_decision(self) -> tuple:
+        """(path, reason): which 2-way kernel family serves this executor.
+
+        ``path`` is ``"fused-vpu"`` (combine-sum VPU kernel + in-kernel
+        epilogue), ``"fused-levels"`` (bit-plane MXU kernel + in-kernel
+        epilogue) or ``"unfused"``; ``reason`` says why fusion was declined
+        (empty on the fused paths), so silent fallbacks are inspectable
+        (``launch.similarity --dry-run``)."""
+        if self.metric.assemble_tile is None:
+            return "unfused", (
+                "metric has no Pallas-composable assemble_tile epilogue"
+            )
+        if not self.metric.contract_is_combine_sum:
+            return "unfused", "metric contraction is not a combine-sum"
+        if self.cfg.n_pf > 1:
+            return "unfused", (
+                f"n_pf={self.cfg.n_pf} splits the contraction across ranks; "
+                "the in-kernel epilogue needs the complete numerator"
+            )
+        if self.cfg.impl == "pallas":
+            return "fused-vpu", ""
+        if self.cfg.impl == "levels":
+            if self.metric.combine is not jnp.minimum:
+                return "unfused", (
+                    "level decomposition is exact only for combine == min"
+                )
+            return "fused-levels", ""
+        return "unfused", f"impl={self.cfg.impl!r} has no fused kernel"
+
+    @property
+    def path(self) -> str:
+        """'fused-levels' | 'fused-vpu' | 'unfused' for 2-way blocks."""
+        return self._path_decision()[0]
+
+    @property
+    def path_reason(self) -> str:
+        """Why fusion was declined ('' when a fused path is active)."""
+        return self._path_decision()[1]
+
     @property
     def fused(self) -> bool:
-        """True when 2-way blocks run the fused-epilogue Pallas kernel."""
-        return (
-            self.cfg.impl == "pallas"
-            and self.cfg.n_pf == 1
-            and self.metric.assemble_tile is not None
-            and self.metric.contract_is_combine_sum
-        )
+        """True when 2-way blocks run a fused-epilogue Pallas kernel."""
+        return self.path != "unfused"
+
+    def _path3_decision(self) -> tuple:
+        """(path, reason) for the 3-way pipeline slice.  Unlike 2-way, no
+        ``n_pf`` condition: the slice kernel emits a non-psummed numerator
+        and the assembly runs outside the kernel either way."""
+        if not self.metric.contract_is_combine_sum:
+            return "unfused", "metric contraction is not a combine-sum"
+        if self.cfg.impl == "pallas":
+            return "fused-vpu", ""
+        if self.cfg.impl == "levels":
+            if self.metric.combine is not jnp.minimum:
+                return "unfused", (
+                    "level decomposition is exact only for combine == min"
+                )
+            return "fused-levels", ""
+        return "unfused", f"impl={self.cfg.impl!r} has no fused kernel"
+
+    @property
+    def path3(self) -> str:
+        """'fused-levels' | 'fused-vpu' | 'unfused' for 3-way slices."""
+        return self._path3_decision()[0]
+
+    @property
+    def path3_reason(self) -> str:
+        return self._path3_decision()[1]
 
     @property
     def fused3(self) -> bool:
-        """True when 3-way pipeline steps run the fused X_j Pallas kernel."""
-        return self.cfg.impl == "pallas" and self.metric.contract_is_combine_sum
+        """True when 3-way pipeline steps run a fused X_j Pallas kernel."""
+        return self.path3 != "unfused"
+
 
     # -- internals ----------------------------------------------------------
 
@@ -98,17 +162,35 @@ class TileExecutor:
 
     # -- 2-way --------------------------------------------------------------
 
+    def _pair_planes(self, Va, Vb):
+        """Packed bit-planes of the two operand blocks.
+
+        Accepts either pre-encoded planes (3-D uint8 — the campaign path,
+        where encoding happened once before the ring) or raw field-major
+        value blocks (standalone/benchmark calls), encoded on the fly."""
+        from repro.kernels.mgemm_levels import encode_bitplanes
+
+        if Va.ndim == 3:
+            return Va, Vb
+        Pa = encode_bitplanes(Va, self.cfg.levels)
+        Pb = Pa if Vb is Va else encode_bitplanes(Vb, self.cfg.levels)
+        return Pa, Pb
+
     def pair_block(self, Va, sa, Vb, sb, *, diagonal: bool = False):
         """One (m, n) block of 2-way metric values.
 
-        Va (n_fp, m) / Vb (n_fp, n) field-major vector blocks; sa / sb the
-        psummed per-vector stats.  ``diagonal`` marks Va and Vb as the same
-        block: only the strict upper triangle is returned (zeros elsewhere),
-        computed on the triangular tile schedule on the fused path.
+        Va / Vb are field-major vector blocks — (n_fp, m) / (n_fp, n) values,
+        or (levels, kb, m) / (levels, kb, n) packed bit-planes when the
+        campaign pre-encoded them (``cfg.encoding == "bitplane"``, resolved
+        by ``core.twoway.resolve_config``).  sa / sb the psummed
+        per-vector stats.  ``diagonal`` marks Va and Vb as the same block:
+        only the strict upper triangle is returned (zeros elsewhere),
+        computed on the triangular tile schedule on the fused paths.
         """
-        k, m = Va.shape
-        n = Vb.shape[1]
-        if self.fused:
+        m = Va.shape[-1]
+        n = Vb.shape[-1]
+        path = self.path
+        if path == "fused-vpu":
             # late import: kernels register against core.mgemm at import time
             from repro.kernels.mgemm import (
                 metric2_tiles,
@@ -121,6 +203,7 @@ class TileExecutor:
                 DEFAULT_BN,
             )
 
+            k = Va.shape[0]
             kw = dict(
                 combine=self.metric.combine,
                 epilogue=self.metric.assemble_tile,
@@ -136,9 +219,41 @@ class TileExecutor:
                 bm=_auto_tile(m, DEFAULT_BM), bn=_auto_tile(n, DEFAULT_BN),
                 **kw,
             )
-        # unfused: contraction (registry impl) + psum + out-of-kernel
-        # assembly — op-for-op the pre-executor engine arithmetic.
-        n2 = self._psum(self.contract(Va.T, Vb).astype(jnp.float32))
+        if path == "fused-levels":
+            from repro.kernels.mgemm import unpack_tri_tiles
+            from repro.kernels.mgemm_levels import (
+                metric2_levels,
+                metric2_levels_tri,
+            )
+            from repro.kernels.mgemm_levels.kernel import (
+                DEFAULT_BKB,
+                DEFAULT_BM as LEVELS_BM,
+                DEFAULT_BN as LEVELS_BN,
+            )
+
+            Pa, Pb = self._pair_planes(Va, Vb if not diagonal else Va)
+            kw = dict(
+                epilogue=self.metric.assemble_tile,
+                bkb=max(1, min(DEFAULT_BKB, Pa.shape[1])),
+                out_dtype=jnp.dtype(self.out_dtype),
+            )
+            if diagonal:
+                bt = _auto_tile(m, LEVELS_BM)
+                packed = metric2_levels_tri(Pa, sa, bt=bt, **kw)
+                return unpack_tri_tiles(packed, m, bt)
+            return metric2_levels(
+                Pa, Pb, sa, sb,
+                bm=_auto_tile(m, LEVELS_BM), bn=_auto_tile(n, LEVELS_BN),
+                **kw,
+            )
+        # unfused: contraction (registry impl, or the hoisted plane
+        # contraction when the campaign pre-encoded bit-planes) + psum +
+        # out-of-kernel assembly — op-for-op the pre-executor arithmetic.
+        if Va.ndim == 3:
+            n2 = self._contract_planes(Va, Vb)
+        else:
+            n2 = self.contract(Va.T, Vb)
+        n2 = self._psum(n2.astype(jnp.float32))
         vals = self.metric.assemble2(n2, sa[:, None], sb[None, :]).astype(
             self.out_dtype
         )
@@ -146,6 +261,21 @@ class TileExecutor:
             tri = jnp.triu(jnp.ones((m, n), bool), k=1)
             vals = jnp.where(tri, vals, 0)
         return vals
+
+    def _contract_planes(self, Pa, Pb):
+        """Unfused numerator from pre-encoded planes: the per-ring-step
+        ``(V >= t)`` indicator construction is gone from the hot loop."""
+        if self.cfg.impl == "levels":
+            from repro.kernels.mgemm_levels import mgemm_levels_planes
+
+            from repro.kernels.mgemm_levels.kernel import DEFAULT_BKB
+
+            return mgemm_levels_planes(
+                Pa, Pb, bkb=max(1, min(DEFAULT_BKB, Pa.shape[1]))
+            )
+        from repro.kernels.mgemm_levels import mgemm_levels_planes_xla
+
+        return mgemm_levels_planes_xla(Pa, Pb)
 
     # -- 3-way --------------------------------------------------------------
 
@@ -167,10 +297,27 @@ class TileExecutor:
             from repro.kernels.czek3 import threeway_batch
             from repro.kernels.czek3.kernel import (
                 DEFAULT_BK,
+                DEFAULT_BKB,
                 DEFAULT_BM,
                 DEFAULT_BN,
             )
 
+            if self.cfg.impl == "levels":
+                # level-decomposed slice: X_j is a packed AND of plane
+                # bytes, the contraction L MXU dot_generals per K-tile
+                from repro.kernels.czek3 import threeway_batch_levels
+                from repro.kernels.mgemm_levels import encode_bitplanes
+
+                lv = self.cfg.levels
+                Pl = encode_bitplanes(left, lv)
+                Pp = encode_bitplanes(ps, lv)
+                Pr = Pl if right is left else encode_bitplanes(right, lv)
+                return threeway_batch_levels(
+                    Pl, Pp, Pr,
+                    bm=_auto_tile(m, DEFAULT_BM),
+                    bn=_auto_tile(n, DEFAULT_BN),
+                    bkb=max(1, min(DEFAULT_BKB, Pl.shape[1])),
+                )
             return threeway_batch(
                 left, ps, right,
                 combine=self.metric.combine,

@@ -49,6 +49,7 @@ __all__ = [
     "twoway_distributed",
     "czek2_distributed",
     "pad_vectors",
+    "resolve_config",
 ]
 
 
@@ -66,9 +67,18 @@ class CometConfig:
     # ring payload dtype (beyond-paper §Perf): int8 quarters the ICI wire
     # traffic of the V ring — EXACT for integer data with values <= 127
     # (SNP {0,1,2} codes); metric math still accumulates in fp32.
-    ring_dtype: str = "float32"
+    # "auto" (default) selects int8 whenever the input is integer-valued
+    # with |values| <= 127, instead of silently ring-carrying fp32; pass
+    # ring_dtype="float32" to opt out explicitly.
+    ring_dtype: str = "auto"
     # contraction-axis chunk of the XLA mgemm (memory/speed trade-off)
     chunk: int = 128
+    # bit-plane pre-encoding for the levels path: "auto" encodes V once
+    # into packed uint8 planes (8 plane-bits/byte) and ring-carries THOSE
+    # whenever impl='levels*', the metric combine is min, and the data is
+    # integer-valued in [0, levels]; "bitplane" forces it (ValueError if
+    # ineligible); "none" keeps the per-step (V >= t) construction.
+    encoding: str = "auto"
 
     @property
     def n_ranks(self) -> int:
@@ -83,17 +93,81 @@ class CometConfig:
         return fn
 
 
-def pad_vectors(V: np.ndarray, cfg: CometConfig) -> np.ndarray:
+def pad_vectors(
+    V: np.ndarray, cfg: CometConfig, *, field_align: int = 1
+) -> np.ndarray:
     """Pad fields to n_pf multiple and vectors to n_pv multiple with zeros.
 
     Zero padding is inert: pad vectors produce zero numerators and are
-    excluded by index bookkeeping on the host side."""
+    excluded by index bookkeeping on the host side.  ``field_align`` further
+    aligns the field count (8*n_pf for the packed bit-plane payload, whose
+    byte axis must split evenly over "pf")."""
     n_f, n_v = V.shape
-    fp = (-n_f) % cfg.n_pf
+    fp = (-n_f) % (cfg.n_pf * field_align)
     vp = (-n_v) % cfg.n_pv
     if fp or vp:
         V = np.pad(V, ((0, fp), (0, vp)))
     return V
+
+
+def _values_int8_safe(V: np.ndarray) -> bool:
+    """True when ring-carrying V as int8 is value-exact."""
+    if V.size == 0:
+        return False
+    if not np.issubdtype(V.dtype, np.integer):
+        if not np.isfinite(V).all() or not (V == np.floor(V)).all():
+            return False
+    return bool(V.min() >= -128 and V.max() <= 127)
+
+
+def _values_leveled(V: np.ndarray, levels: int) -> bool:
+    """True when V is integer-valued in [0, levels] — the exactness domain
+    of the level decomposition AND of the bit-plane encoding."""
+    if V.size == 0:
+        return False
+    if not np.issubdtype(V.dtype, np.integer):
+        if not np.isfinite(V).all() or not (V == np.floor(V)).all():
+            return False
+    return bool(V.min() >= 0 and V.max() <= levels)
+
+
+def resolve_config(
+    cfg: CometConfig, V: np.ndarray, metric: MetricSpec
+) -> CometConfig:
+    """Resolve the 'auto' knobs (ring_dtype, encoding) against actual data.
+
+    The distributed entry points call this once per campaign, so the device
+    programs and the TileExecutor only ever see concrete settings."""
+    from dataclasses import replace
+
+    V = np.asarray(V)
+    ring = cfg.ring_dtype
+    if ring == "auto":
+        ring = "int8" if _values_int8_safe(V) else "float32"
+    enc = cfg.encoding
+    if enc not in ("auto", "bitplane", "none"):
+        raise ValueError(f"unknown encoding {enc!r}")
+    if enc != "none":
+        eligible = (
+            cfg.impl in ("levels", "levels_xla")
+            and metric.combine is jnp.minimum
+        )
+        leveled = _values_leveled(V, cfg.levels)
+        if enc == "bitplane":
+            if not eligible:
+                raise ValueError(
+                    "encoding='bitplane' needs impl='levels'/'levels_xla' "
+                    "and a min-combine metric "
+                    f"(got impl={cfg.impl!r}, metric={metric.name!r})"
+                )
+            if not leveled:
+                raise ValueError(
+                    "encoding='bitplane' needs integer data in "
+                    f"[0, levels={cfg.levels}]"
+                )
+        else:
+            enc = "bitplane" if (eligible and leveled) else "none"
+    return replace(cfg, ring_dtype=ring, encoding=enc)
 
 
 @dataclass
@@ -211,20 +285,31 @@ class TwoWayOutput:
 
 
 def _twoway_program(
-    Vl, *, cfg: CometConfig, plan: TwoWayPlan, out_dtype, metric: MetricSpec = None
+    Vl, *, cfg: CometConfig, plan: TwoWayPlan, out_dtype,
+    metric: MetricSpec = None, planes: bool = False,
 ):
-    """Per-device program (inside shard_map). Vl: (n_f/n_pf, n_vp).
+    """Per-device program (inside shard_map). Vl: (n_f/n_pf, n_vp) values,
+    or — on the bit-plane campaign path (``planes=True``) — the rank's
+    packed plane shard (levels, n_fb/n_pf, n_vp) uint8.
 
     All block compute goes through the TileExecutor: on the fused Pallas
-    path the metric epilogue runs in-kernel (no dense numerator block in
+    paths the metric epilogue runs in-kernel (no dense numerator block in
     HBM) and the step-0 diagonal block runs the triangular tile schedule
-    (only ``tj >= ti`` tiles enumerated, per paper §5)."""
+    (only ``tj >= ti`` tiles enumerated, per paper §5).  With planes, the
+    ring carries the packed representation — L/32 of the fp32 wire volume —
+    and ``(V >= t)`` never runs inside the ring loop."""
     metric = metric or CZEKANOWSKI
     executor = TileExecutor(cfg=cfg, metric=metric, out_dtype=out_dtype,
                             axis="pf")
     n_pv, n_pr = cfg.n_pv, cfg.n_pr
-    m = Vl.shape[1]
-    s_own = jax.lax.psum(metric.stat(Vl), "pf")  # (m,)
+    m = Vl.shape[-1]
+    if planes:
+        # stats from the exact value reconstruction V = sum_t plane_t
+        from repro.kernels.mgemm_levels import values_from_planes
+
+        s_own = jax.lax.psum(metric.stat(values_from_planes(Vl)), "pf")
+    else:
+        s_own = jax.lax.psum(metric.stat(Vl), "pf")  # (m,)
     pv = jax.lax.axis_index("pv")
     pr = jax.lax.axis_index("pr")
     # receive from upward neighbour: src (i+1) -> dst i
@@ -254,20 +339,33 @@ def twoway_distributed(
     """Compute all unique 2-way metrics of V's columns on the mesh."""
     metric = metric or CZEKANOWSKI
     n_v = V.shape[1]
-    Vp = pad_vectors(np.asarray(V), cfg)
+    V = np.asarray(V)
+    cfg = resolve_config(cfg, V, metric)
+    planes = cfg.encoding == "bitplane"
+    if planes:
+        # encode ONCE before shard_map; the byte axis shards over "pf"
+        from repro.kernels.mgemm_levels import encode_bitplanes_np
+
+        Vp = pad_vectors(V, cfg, field_align=8)
+        arg = jnp.asarray(encode_bitplanes_np(Vp, cfg.levels))
+        in_specs = P(None, "pf", "pv")
+    else:
+        Vp = pad_vectors(V, cfg)
+        arg = jnp.asarray(Vp, dtype=jnp.dtype(cfg.ring_dtype))
+        in_specs = P("pf", "pv")
     n_vp = Vp.shape[1] // cfg.n_pv
     plan = TwoWayPlan(cfg.n_pv, cfg.n_pr)
     out_dtype = jnp.dtype(cfg.out_dtype)
 
     fn = shard_map(
         partial(_twoway_program, cfg=cfg, plan=plan, out_dtype=out_dtype,
-                metric=metric),
+                metric=metric, planes=planes),
         mesh=mesh,
-        in_specs=P("pf", "pv"),
+        in_specs=in_specs,
         out_specs=P("pv", "pr", None, None, None),
         check=False,
     )
-    blocks = jax.jit(fn)(jnp.asarray(Vp, dtype=jnp.dtype(cfg.ring_dtype)))
+    blocks = jax.jit(fn)(arg)
     blocks = np.asarray(blocks).reshape(
         cfg.n_pv, cfg.n_pr, plan.slots_per_rank, n_vp, n_vp
     )

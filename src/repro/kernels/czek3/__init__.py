@@ -1,2 +1,7 @@
-from .ops import czek3_step, threeway_batch, threeway_step  # noqa: F401
+from .ops import (  # noqa: F401
+    czek3_step,
+    threeway_batch,
+    threeway_batch_levels,
+    threeway_step,
+)
 from .ref import czek3_step_ref  # noqa: F401

@@ -26,6 +26,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# shared with the 2-way plane kernels so the bit layout and the MXU
+# accumulation (dot shape, preferred_element_type) can never drift
+from repro.kernels.mgemm_levels.kernel import DEFAULT_BKB, _plane_matmuls
+
 DEFAULT_BM = 128
 DEFAULT_BN = 128
 DEFAULT_BK = 512
@@ -204,4 +208,82 @@ def threeway_batch_pallas(
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(own, X, right)
+    return out[:, :m, :n]
+
+
+# -- packed bit-plane variant (level-decomposed min on the MXU) --------------
+#
+# For leveled integer data, min(a, x, b) = sum_t 1[a>=t] 1[x>=t] 1[b>=t]:
+# the X_j = min(own, x) tile is a bitwise AND of *packed* plane bytes (one
+# VPU op per 8 fields, still never written to HBM), and the contraction is
+# ``levels`` MXU dot_generals per K-tile — the 3-way analogue of
+# ``mgemm_levels.metric2_levels_pallas``, sharing its unpack helper
+# (imported at top) so the plane kernels can never disagree on bit layout.
+
+
+def _threeway_levels_kernel(
+    own_ref, x_ref, right_ref, o_ref, acc_ref, *, n_k_steps, levels
+):
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # packed AND == plane of min(own, x); x (levels, bkb, 1) broadcasts
+    xo = own_ref[...] & x_ref[...]
+    acc_ref[...] += _plane_matmuls(xo, right_ref[...], levels)
+
+    @pl.when(pl.program_id(3) == n_k_steps - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bn", "bkb", "interpret", "out_dtype"),
+)
+def threeway_batch_levels_pallas(
+    Pown,
+    PX,
+    Pright,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bkb: int = DEFAULT_BKB,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+):
+    """B[t, i, k] = sum_q min(own[q, i], X[q, t], right[q, k]) on packed
+    bit-planes.
+
+    Pown (levels, kb, m), PX (levels, kb, L) pipeline columns, Pright
+    (levels, kb, n) -> (L, m, n).  Exact for leveled integer data; one
+    launch for the whole pipeline slice like ``threeway_batch_pallas``."""
+    levels, kb, m = Pown.shape
+    L = PX.shape[2]
+    n = Pright.shape[2]
+    mp, np_, kbp = (-m) % bm, (-n) % bn, (-kb) % bkb
+    if mp or kbp:
+        Pown = jnp.pad(Pown, ((0, 0), (0, kbp), (0, mp)))
+    if kbp:
+        PX = jnp.pad(PX, ((0, 0), (0, kbp), (0, 0)))
+    if np_ or kbp:
+        Pright = jnp.pad(Pright, ((0, 0), (0, kbp), (0, np_)))
+    M, N, KB = m + mp, n + np_, kb + kbp
+    n_k_steps = KB // bkb
+    grid = (L, M // bm, N // bn, n_k_steps)
+    out = pl.pallas_call(
+        functools.partial(
+            _threeway_levels_kernel, n_k_steps=n_k_steps, levels=levels,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((levels, bkb, bm), lambda l, i, j, t: (0, t, i)),
+            pl.BlockSpec((levels, bkb, 1), lambda l, i, j, t: (0, t, l)),
+            pl.BlockSpec((levels, bkb, bn), lambda l, i, j, t: (0, t, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda l, i, j, t: (l, i, j)),
+        out_shape=jax.ShapeDtypeStruct((L, M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(Pown, PX, Pright)
     return out[:, :m, :n]

@@ -4,7 +4,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .kernel import threeway_batch_pallas, threeway_step_pallas
+from .kernel import (
+    threeway_batch_levels_pallas,
+    threeway_batch_pallas,
+    threeway_step_pallas,
+)
 
 
 def _on_tpu() -> bool:
@@ -21,6 +25,13 @@ def threeway_batch(own, X, right, *, combine, **kw):
     """All L pipeline columns of one slice in a single fused launch."""
     kw.setdefault("interpret", not _on_tpu())
     return threeway_batch_pallas(own, X, right, combine=combine, **kw)
+
+
+def threeway_batch_levels(Pown, PX, Pright, **kw):
+    """Level-decomposed batched slice on packed bit-planes (min combine):
+    the X_j plane is a packed AND in VMEM, the contraction runs on the MXU."""
+    kw.setdefault("interpret", not _on_tpu())
+    return threeway_batch_levels_pallas(Pown, PX, Pright, **kw)
 
 
 def czek3_step(own, x, right, **kw):

@@ -1,2 +1,16 @@
-from .ops import mgemm_levels, mgemm_levels_xla  # noqa: F401
-from .ref import mgemm_levels_ref  # noqa: F401
+from .ops import (  # noqa: F401
+    metric2_levels,
+    metric2_levels_tri,
+    mgemm_levels,
+    mgemm_levels_planes,
+    mgemm_levels_planes_xla,
+    mgemm_levels_xla,
+)
+from .planes import (  # noqa: F401
+    decode_bitplanes,
+    encode_bitplanes,
+    encode_bitplanes_np,
+    planes_nbytes,
+    values_from_planes,
+)
+from .ref import metric2_levels_planes_ref, mgemm_levels_ref  # noqa: F401

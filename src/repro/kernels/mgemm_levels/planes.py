@@ -1,0 +1,85 @@
+"""Bit-plane encoding for the level-decomposition path.
+
+For integer data quantized to levels {0, 1, ..., L} the indicator planes
+``plane_t = 1[V >= t]`` (t = 1..L) fully describe V: each plane is one bit
+per element and ``V = sum_t plane_t``.  This module packs the planes along
+the *field* (contraction) axis, 8 plane-bits per byte, LSB-first — byte r
+of a plane covers fields ``8r .. 8r+7`` with bit j holding field ``8r+j``.
+
+Why pack: the packed representation is what the distributed engines
+ring-carry and what the fused MXU kernels consume.  For SNP {0,1,2} data
+(L=2) the packed planes are ``2 * n_f/8`` bytes per vector vs ``4 * n_f``
+for the fp32 ring payload — 16x less ICI wire traffic and HBM read volume —
+and encoding happens ONCE per campaign instead of ``(V >= t)`` being
+recomputed from fp32 data at every ring step.
+
+All zero-padding is inert: a zero field has bit 0 in every plane, so it
+contributes nothing to any plane GEMM, exactly like the engines' existing
+zero-padding of V.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "encode_bitplanes",
+    "encode_bitplanes_np",
+    "decode_bitplanes",
+    "values_from_planes",
+    "planes_nbytes",
+]
+
+
+def encode_bitplanes_np(V, levels: int, *, field_align: int = 1) -> np.ndarray:
+    """Host-side packer: (k, n) leveled values -> (levels, kb, n) uint8.
+
+    ``field_align``: pad the field count to a multiple of ``8 * field_align``
+    so the *byte* axis splits evenly over ``field_align`` ranks (the "pf"
+    sharding of the packed ring payload).
+    """
+    V = np.asarray(V)
+    k, n = V.shape
+    kp = (-k) % (8 * max(1, field_align))
+    if kp:
+        V = np.pad(V, ((0, kp), (0, 0)))
+    thresholds = np.arange(1, levels + 1).reshape(-1, 1, 1).astype(V.dtype)
+    planes = V[None, :, :] >= thresholds  # (levels, K, n) bool
+    return np.packbits(planes, axis=1, bitorder="little")
+
+
+def encode_bitplanes(V, levels: int):
+    """jnp packer (jit-composable): (k, n) -> (levels, ceil(k/8), n) uint8."""
+    V = jnp.asarray(V)
+    k, n = V.shape
+    kp = (-k) % 8
+    if kp:
+        V = jnp.pad(V, ((0, kp), (0, 0)))
+    K = k + kp
+    thresholds = jnp.arange(1, levels + 1, dtype=jnp.int32).astype(V.dtype)
+    planes = (V[None] >= thresholds[:, None, None]).astype(jnp.int32)
+    shifts = jnp.arange(8, dtype=jnp.int32).reshape(1, 1, 8, 1)
+    packed = (planes.reshape(levels, K // 8, 8, n) << shifts).sum(axis=2)
+    return packed.astype(jnp.uint8)
+
+
+def decode_bitplanes(P):
+    """(levels, kb, n) uint8 -> (levels, 8*kb, n) int32 {0, 1} planes."""
+    P = jnp.asarray(P)
+    levels, kb, n = P.shape
+    shifts = jnp.arange(8, dtype=jnp.int32).reshape(1, 1, 8, 1)
+    bits = (P.astype(jnp.int32)[:, :, None, :] >> shifts) & 1
+    return bits.reshape(levels, kb * 8, n)
+
+
+def values_from_planes(P, dtype=jnp.float32):
+    """Exact value reconstruction V = sum_t plane_t for leveled data.
+
+    Returns (8*kb, n); rows past the true field count are the zero padding.
+    """
+    return decode_bitplanes(P).sum(axis=0).astype(dtype)
+
+
+def planes_nbytes(n_f: int, n_v: int, levels: int) -> int:
+    """Packed payload size — the ring-traffic accounting used in docs/bench."""
+    return levels * (-(-n_f // 8)) * n_v

@@ -1,5 +1,6 @@
-"""Pure-jnp oracle for the level-decomposition mGEMM."""
+"""Pure-jnp / numpy oracles for the level-decomposition mGEMM."""
 import jax.numpy as jnp
+import numpy as np
 
 
 def mgemm_levels_ref(A, B, *, levels: int, out_dtype=jnp.float32):
@@ -8,3 +9,15 @@ def mgemm_levels_ref(A, B, *, levels: int, out_dtype=jnp.float32):
     for t in range(1, levels + 1):
         acc += (A >= t).astype(jnp.float32) @ (B >= t).astype(jnp.float32)
     return acc.astype(out_dtype)
+
+
+def metric2_levels_planes_ref(Pa, Pb):
+    """Numpy oracle for the field-major packed-plane contraction.
+
+    Pa (levels, kb, m), Pb (levels, kb, n) uint8 -> (m, n) float64 numerator.
+    Unpacks LSB-first along the byte axis, like ``planes.decode_bitplanes``.
+    """
+    Pa, Pb = np.asarray(Pa), np.asarray(Pb)
+    at = np.unpackbits(Pa, axis=1, bitorder="little").astype(np.float64)
+    bt = np.unpackbits(Pb, axis=1, bitorder="little").astype(np.float64)
+    return np.einsum("tqm,tqn->mn", at, bt)

@@ -34,9 +34,20 @@ def main(argv=None):
     ap.add_argument("--levels", type=int, default=2)
     ap.add_argument("--out-dtype", default="float32",
                     help="metric output dtype (e.g. float32, bfloat16)")
-    ap.add_argument("--ring-dtype", default="float32",
-                    help="ring payload dtype (int8 quarters ICI traffic, "
-                         "exact for small-integer data)")
+    ap.add_argument("--ring-dtype", default="auto",
+                    help="ring payload dtype; 'auto' picks int8 for "
+                         "small-integer data (4x less ICI traffic), "
+                         "'float32' opts out")
+    ap.add_argument("--encoding", default="auto",
+                    choices=("auto", "bitplane", "none"),
+                    help="bit-plane pre-encoding for the levels path: "
+                         "encode V once into packed uint8 planes and "
+                         "ring-carry those (up to 16x less wire for SNP "
+                         "{0,1,2} data)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="print the resolved execution path (fused-levels / "
+                         "fused-vpu / unfused + reason), encoding and ring "
+                         "dtype, then exit without running the campaign")
     ap.add_argument("--chunk", type=int, default=128,
                     help="XLA mgemm contraction-chunk size")
     ap.add_argument("--input", default="", help=".npy (n_f, n_v) input")
@@ -77,9 +88,42 @@ def main(argv=None):
         n_pf=args.n_pf, n_pv=args.n_pv, n_pr=args.n_pr, n_st=args.n_st,
         stages=stages, impl=args.impl, levels=args.levels,
         out_dtype=args.out_dtype, ring_dtype=args.ring_dtype,
-        chunk=args.chunk, input=input_spec,
+        encoding=args.encoding, chunk=args.chunk, input=input_spec,
     )
     from repro.api import UnknownMetricError
+
+    if args.dry_run:
+        # surface the executor's chosen path so silent fallbacks (e.g. a
+        # fused request declined because n_pf > 1) become visible
+        import jax.numpy as jnp
+
+        from repro.api.registry import get_metric
+        from repro.core.tile_executor import TileExecutor
+        from repro.core.twoway import resolve_config
+
+        try:
+            spec = get_metric(args.metric)
+            request.validate(metric_spec=spec)
+            cfg = resolve_config(
+                request.to_comet_config(), request.input.materialize(), spec
+            )
+        except (UnknownMetricError, ValueError) as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 2
+        ex = TileExecutor(cfg=cfg, metric=spec,
+                          out_dtype=jnp.dtype(args.out_dtype), axis=None)
+        path, why = ((ex.path, ex.path_reason) if args.way == 2
+                     else (ex.path3, ex.path3_reason))
+        reason = f" ({why})" if why else ""
+        enc = cfg.encoding
+        if args.way == 3 and enc == "bitplane":
+            # the 3-way ring carries values; planes are encoded per slice
+            # inside the kernel path, not pre-encoded and ring-carried
+            enc = "bitplane (per-slice; ring carries values)"
+        print(f"path={path}{reason}")
+        print(f"encoding={enc} ring_dtype={cfg.ring_dtype} "
+              f"impl={cfg.impl} levels={cfg.levels}")
+        return 0
 
     try:
         result = SimilarityEngine().run(request)

@@ -77,6 +77,18 @@ def check_2way(V, ref_dense):
     out = czek2_distributed(V, make_comet_mesh(1, 2, 1), cfg)
     assert out.checksum() == ref_checksum, "levels impl not bit-exact"
     print("  2way levels impl: OK")
+    # fused-levels campaign path: packed bit-planes encoded once, ring-
+    # carried, MXU plane kernels with in-kernel epilogue + triangular
+    # diagonal schedule; n_pf=2 exercises the unfused plane contraction
+    # (hoisted encode + psum).  All bit-identical to the xla reference.
+    for n_pf, n_pv, n_pr in [(1, 2, 1), (1, 4, 1), (1, 2, 2), (2, 2, 1)]:
+        cfg = CometConfig(n_pf=n_pf, n_pv=n_pv, n_pr=n_pr, impl="levels",
+                          levels=15)
+        out = czek2_distributed(V, make_comet_mesh(n_pf, n_pv, n_pr), cfg)
+        assert out.checksum() == ref_checksum, (
+            f"fused-levels changed results ({n_pf},{n_pv},{n_pr})"
+        )
+        print(f"  2way fused-levels pf={n_pf} pv={n_pv} pr={n_pr}: OK")
 
 
 def check_3way(V, ref_dense):
@@ -116,6 +128,17 @@ def check_3way(V, ref_dense):
     out = czek3_distributed(V, make_comet_mesh(1, 2, 1), cfg, stage=0)
     assert out.checksum() == ref_checksum, "3way pallas impl changed results"
     print("  3way pallas impl: OK")
+
+    # level-decomposed slice kernels (packed-AND X_j planes on the MXU)
+    for n_pf, n_pv, n_pr in [(1, 2, 1), (2, 2, 1), (1, 2, 2)]:
+        cfg = CometConfig(n_pf=n_pf, n_pv=n_pv, n_pr=n_pr, impl="levels",
+                          levels=15)
+        out = czek3_distributed(V, make_comet_mesh(n_pf, n_pv, n_pr), cfg,
+                                stage=0)
+        assert out.checksum() == ref_checksum, (
+            f"3way fused-levels changed results ({n_pf},{n_pv},{n_pr})"
+        )
+        print(f"  3way fused-levels pf={n_pf} pv={n_pv} pr={n_pr}: OK")
 
     # staging: union over stages == the full result set, bit-identical
     cfg = CometConfig(n_pf=1, n_pv=2, n_pr=1, n_st=2)

@@ -1,0 +1,335 @@
+"""Bit-plane encoding + fused levels path (interpret mode).
+
+Contract under test (the packed bit-plane campaign path):
+
+1. encode/pack/unpack round-trips exactly — including non-multiple-of-8
+   field counts, where the padding remainder bits must be zero (inert),
+2. the plane contraction (XLA and MXU-kernel realizations) equals the
+   min-plus numerator bit-for-bit on leveled integer data,
+3. the fused levels kernels (rectangular + triangular diagonal schedule)
+   are bit-identical to the unfused contraction + out-of-kernel assembly,
+4. the executor's path/encoding dispatch resolves as documented, and
+5. campaign checksums are bit-identical across impl in {xla, levels,
+   levels_xla} on {0,1,2} data, 2-way and 3-way (single-device here;
+   multi-device decompositions live in distributed_harness.py).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.metric_spec import CZEKANOWSKI
+from repro.core.mgemm import mgemm_xla
+from repro.core.synthetic import random_integer_vectors
+from repro.core.tile_executor import TileExecutor
+from repro.core.twoway import (
+    CometConfig,
+    czek2_distributed,
+    resolve_config,
+)
+from repro.core.threeway import czek3_distributed
+from repro.kernels.czek3 import threeway_batch_levels
+from repro.kernels.mgemm import unpack_tri_tiles
+from repro.kernels.mgemm_levels import (
+    decode_bitplanes,
+    encode_bitplanes,
+    encode_bitplanes_np,
+    metric2_levels,
+    metric2_levels_planes_ref,
+    metric2_levels_tri,
+    mgemm_levels_planes,
+    mgemm_levels_planes_xla,
+    values_from_planes,
+)
+from repro.parallel.mesh import make_comet_mesh
+
+try:  # property tests run under hypothesis when present (CI installs it);
+    # a deterministic case sweep below keeps coverage without it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+# -- encode / pack / unpack round-trips -------------------------------------
+
+
+def _check_roundtrip(k, n, levels, seed):
+    rng = np.random.default_rng(seed)
+    V = rng.integers(0, levels + 1, (k, n)).astype(np.float32)
+    P = encode_bitplanes_np(V, levels)
+    kb = -(-k // 8)
+    assert P.shape == (levels, kb, n) and P.dtype == np.uint8
+    # jnp encoder agrees byte-for-byte with the numpy packer
+    assert (np.asarray(encode_bitplanes(jnp.asarray(V), levels)) == P).all()
+    # planes decode to the exact indicators, padding remainder bits zero
+    dec = np.asarray(decode_bitplanes(jnp.asarray(P)))
+    Vpad = np.pad(V, ((0, kb * 8 - k), (0, 0)))
+    for t in range(1, levels + 1):
+        assert (dec[t - 1] == (Vpad >= t)).all()
+    # V = sum_t plane_t reconstructs values exactly
+    vals = np.asarray(values_from_planes(jnp.asarray(P)))
+    assert (vals[:k] == V).all()
+    assert (vals[k:] == 0).all()
+
+
+# non-multiple-of-8 field counts and padding remainders, deterministically
+@pytest.mark.parametrize(
+    "k,n,levels,seed",
+    [(1, 1, 1, 0), (7, 3, 2, 1), (8, 4, 2, 2), (13, 5, 3, 3),
+     (40, 12, 5, 4), (33, 2, 4, 5)],
+)
+def test_encode_decode_roundtrip_cases(k, n, levels, seed):
+    _check_roundtrip(k, n, levels, seed)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(
+        k=st.integers(1, 40),   # includes non-multiple-of-8 field counts
+        n=st.integers(1, 12),
+        levels=st.integers(1, 5),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_encode_decode_roundtrip_property(k, n, levels, seed):
+        _check_roundtrip(k, n, levels, seed)
+
+
+def test_encode_field_align_shards_bytes():
+    """field_align pads fields to 8*align so the byte axis splits evenly."""
+    V = np.ones((13, 3), np.float32)
+    P = encode_bitplanes_np(V, 2, field_align=4)
+    assert P.shape[1] % 4 == 0
+    assert (np.asarray(values_from_planes(jnp.asarray(P)))[:13] == 1).all()
+
+
+def _check_plane_contraction(m, k, n, levels, seed):
+    """sum_t plane_t(A)^T plane_t(B) == sum_q min(a, b), bit-for-bit."""
+    rng = np.random.default_rng(seed)
+    Va = rng.integers(0, levels + 1, (k, m)).astype(np.float32)
+    Vb = rng.integers(0, levels + 1, (k, n)).astype(np.float32)
+    Pa = encode_bitplanes_np(Va, levels)
+    Pb = encode_bitplanes_np(Vb, levels)
+    want = np.asarray(mgemm_xla(jnp.asarray(Va.T), jnp.asarray(Vb)))
+    assert (metric2_levels_planes_ref(Pa, Pb) == want).all()
+    got_xla = np.asarray(mgemm_levels_planes_xla(jnp.asarray(Pa), jnp.asarray(Pb)))
+    assert (got_xla == want).all()
+    got_mxu = np.asarray(mgemm_levels_planes(
+        jnp.asarray(Pa), jnp.asarray(Pb), bm=8, bn=8, bkb=2))
+    assert (got_mxu == want).all()
+
+
+@pytest.mark.parametrize(
+    "m,k,n,levels,seed",
+    [(1, 1, 1, 1, 0), (5, 7, 4, 2, 1), (8, 32, 8, 2, 2), (10, 40, 9, 4, 3),
+     (3, 17, 6, 3, 4)],
+)
+def test_plane_contraction_is_minplus_cases(m, k, n, levels, seed):
+    _check_plane_contraction(m, k, n, levels, seed)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.integers(1, 10),
+        k=st.integers(1, 40),
+        n=st.integers(1, 10),
+        levels=st.integers(1, 4),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_plane_contraction_is_minplus_property(m, k, n, levels, seed):
+        _check_plane_contraction(m, k, n, levels, seed)
+
+
+# -- fused kernels vs unfused assembly --------------------------------------
+
+
+def _blocks(k, m, n, levels, seed):
+    rng = np.random.default_rng(seed)
+    Va = rng.integers(0, levels + 1, (k, m)).astype(np.float32)
+    Vb = rng.integers(0, levels + 1, (k, n)).astype(np.float32)
+    return jnp.asarray(Va), jnp.asarray(Vb)
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 32, 16), (11, 45, 7), (24, 96, 33)])
+@pytest.mark.parametrize("out_dtype", ["float32", "bfloat16"])
+def test_fused_levels_rectangular_parity(m, k, n, out_dtype):
+    spec = CZEKANOWSKI
+    dt = jnp.dtype(out_dtype)
+    fused = TileExecutor(cfg=CometConfig(impl="levels", levels=2),
+                         metric=spec, out_dtype=dt, axis=None)
+    unfused = TileExecutor(cfg=CometConfig(impl="xla"), metric=spec,
+                           out_dtype=dt, axis=None)
+    assert fused.path == "fused-levels" and unfused.path == "unfused"
+    Va, Vb = _blocks(k, m, n, 2, seed=m * k + n)
+    sa = jnp.asarray(np.asarray(spec.stat(Va)))
+    sb = jnp.asarray(np.asarray(spec.stat(Vb)))
+    got = fused.pair_block(Va, sa, Vb, sb, diagonal=False)
+    want = unfused.pair_block(Va, sa, Vb, sb, diagonal=False)
+    assert got.dtype == want.dtype == dt
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+@pytest.mark.parametrize("m", [8, 11, 24, 200])
+def test_fused_levels_triangular_parity(m):
+    """Diagonal block on the triangular plane schedule == compute-then-mask
+    (m=200 > the 128-capped auto tile exercises multi-tile decode)."""
+    spec = CZEKANOWSKI
+    fused = TileExecutor(cfg=CometConfig(impl="levels", levels=2),
+                         metric=spec, out_dtype=jnp.float32, axis=None)
+    unfused = TileExecutor(cfg=CometConfig(impl="xla"), metric=spec,
+                           out_dtype=jnp.float32, axis=None)
+    V = jnp.asarray(random_integer_vectors(32, m, max_value=2, seed=m))
+    s = jnp.asarray(np.asarray(spec.stat(V)))
+    got = fused.pair_block(V, s, V, s, diagonal=True)
+    want = unfused.pair_block(V, s, V, s, diagonal=True)
+    assert (np.asarray(got) == np.asarray(want)).all()
+    assert (np.asarray(got)[np.tril_indices(m)] == 0).all()
+
+
+def test_fused_levels_accepts_pre_encoded_planes():
+    """The campaign path feeds packed planes straight into pair_block."""
+    spec = CZEKANOWSKI
+    ex = TileExecutor(cfg=CometConfig(impl="levels", levels=2,
+                                      encoding="bitplane"),
+                      metric=spec, out_dtype=jnp.float32, axis=None)
+    Va, Vb = _blocks(40, 9, 13, 2, seed=5)
+    sa = jnp.asarray(np.asarray(spec.stat(Va)))
+    sb = jnp.asarray(np.asarray(spec.stat(Vb)))
+    from_values = ex.pair_block(Va, sa, Vb, sb)
+    from_planes = ex.pair_block(
+        encode_bitplanes(Va, 2), sa, encode_bitplanes(Vb, 2), sb
+    )
+    assert (np.asarray(from_values) == np.asarray(from_planes)).all()
+
+
+def test_fused_levels_zero_denominator_guarded():
+    """All-zero vectors must yield 0 through the in-kernel epilogue."""
+    V = np.zeros((16, 4), np.float32)
+    V[:, 0] = 1.0
+    P = encode_bitplanes_np(V, 1)
+    s = jnp.asarray(V.sum(axis=0))
+    got = np.asarray(metric2_levels(
+        jnp.asarray(P), jnp.asarray(P), s, s,
+        epilogue=CZEKANOWSKI.assemble_tile, bm=8, bn=8, bkb=1))
+    assert np.isfinite(got).all()
+    assert got[0, 0] == 1.0
+    assert (got[1:, :] == 0).all() and (got[:, 1:] == 0).all()
+
+
+def test_tri_plane_kernel_packed_storage():
+    """Triangular plane kernel emits only the T(T+1)/2 upper tiles."""
+    V = jnp.asarray(random_integer_vectors(16, 32, max_value=2, seed=2))
+    P = encode_bitplanes(V, 2)
+    s = jnp.asarray(np.asarray(CZEKANOWSKI.stat(V)))
+    packed = metric2_levels_tri(P, s, epilogue=CZEKANOWSKI.assemble_tile,
+                                bt=8, bkb=1)
+    T = 32 // 8
+    assert packed.shape == (T * (T + 1) // 2, 8, 8)
+    dense = unpack_tri_tiles(packed, 32, 8)
+    num = jnp.minimum(V[:, :, None], V[:, None, :]).astype(jnp.float32).sum(0)
+    want = np.asarray(CZEKANOWSKI.assemble2(num, s[:, None], s[None, :]))
+    want = np.where(np.triu(np.ones((32, 32), bool), 1), want, 0)
+    assert (np.asarray(dense) == want.astype(np.float32)).all()
+
+
+def test_threeway_levels_batch_parity():
+    """Packed-AND 3-way slice kernel == chained-min XLA formulation."""
+    rng = np.random.default_rng(9)
+    n_f, m, L, lv = 24, 10, 3, 2
+    own = rng.integers(0, lv + 1, (n_f, m)).astype(np.float32)
+    X = rng.integers(0, lv + 1, (n_f, L)).astype(np.float32)
+    right = rng.integers(0, lv + 1, (n_f, m)).astype(np.float32)
+    got = np.asarray(threeway_batch_levels(
+        encode_bitplanes(jnp.asarray(own), lv),
+        encode_bitplanes(jnp.asarray(X), lv),
+        encode_bitplanes(jnp.asarray(right), lv),
+        bm=8, bn=8, bkb=1,
+    ))
+    want = np.zeros((L, m, m), np.float32)
+    for t in range(L):
+        Xo = np.minimum(own, X[:, t:t + 1])  # (n_f, m)
+        want[t] = np.minimum(Xo[:, :, None], right[:, None, :]).sum(axis=0)
+    assert (got == want).all()
+
+
+# -- executor dispatch / path surfacing -------------------------------------
+
+
+def test_executor_path_property():
+    spec = CZEKANOWSKI
+    cases = [
+        (CometConfig(impl="pallas"), "fused-vpu"),
+        (CometConfig(impl="levels"), "fused-levels"),
+        (CometConfig(impl="levels_xla"), "unfused"),
+        (CometConfig(impl="xla"), "unfused"),
+        (CometConfig(impl="levels", n_pf=2), "unfused"),
+        (CometConfig(impl="pallas", n_pf=2), "unfused"),
+    ]
+    for cfg, want in cases:
+        ex = TileExecutor(cfg=cfg, metric=spec)
+        assert ex.path == want, (cfg.impl, cfg.n_pf, ex.path)
+        assert ex.fused == (want != "unfused")
+        assert (ex.path_reason == "") == ex.fused
+    # a product-combine metric cannot take the level decomposition
+    from repro.api.registry import get_metric
+
+    ccc = get_metric("ccc")
+    ex = TileExecutor(cfg=CometConfig(impl="levels"), metric=ccc)
+    assert ex.path == "unfused" and "min" in ex.path_reason
+
+
+def test_resolve_config_auto_knobs():
+    V012 = random_integer_vectors(16, 6, max_value=2, seed=0)
+    spec = CZEKANOWSKI
+    r = resolve_config(CometConfig(impl="levels", levels=2), V012, spec)
+    assert r.ring_dtype == "int8" and r.encoding == "bitplane"
+    # explicit float32 opt-out survives resolution
+    r = resolve_config(
+        CometConfig(impl="levels", levels=2, ring_dtype="float32"), V012, spec)
+    assert r.ring_dtype == "float32"
+    # out-of-range data: auto falls back, explicit bitplane raises
+    Vbig = random_integer_vectors(16, 6, max_value=9, seed=0)
+    r = resolve_config(CometConfig(impl="levels", levels=2), Vbig, spec)
+    assert r.encoding == "none"
+    with pytest.raises(ValueError):
+        resolve_config(
+            CometConfig(impl="levels", levels=2, encoding="bitplane"),
+            Vbig, spec)
+    # non-integer data: no int8 ring, no bitplane
+    Vf = np.random.default_rng(0).random((16, 6)).astype(np.float32)
+    r = resolve_config(CometConfig(impl="levels", levels=2), Vf, spec)
+    assert r.ring_dtype == "float32" and r.encoding == "none"
+    # bitplane is a levels-path knob
+    with pytest.raises(ValueError):
+        resolve_config(CometConfig(impl="xla", encoding="bitplane"),
+                       V012, spec)
+
+
+# -- campaign checksum parity (single device; multi-device in harness) ------
+
+
+def test_campaign_checksum_parity_2way_and_3way():
+    """impl in {xla, levels, levels_xla} x encoding settings: bit-identical
+    checksums on {0,1,2} SNP-style data."""
+    V = random_integer_vectors(40, 18, max_value=2, seed=7)
+    mesh = make_comet_mesh(1, 1, 1)
+    ref = czek2_distributed(
+        V, mesh, CometConfig(ring_dtype="float32", encoding="none")
+    ).checksum()
+    for cfg in [
+        CometConfig(impl="levels", levels=2),
+        CometConfig(impl="levels_xla", levels=2),
+        CometConfig(impl="levels", levels=2, encoding="none"),
+        CometConfig(impl="levels_xla", levels=2, encoding="bitplane"),
+    ]:
+        assert czek2_distributed(V, mesh, cfg).checksum() == ref, cfg
+
+    V3 = V[:, :12]
+    ref3 = czek3_distributed(
+        V3, mesh, CometConfig(ring_dtype="float32"), stage=0
+    ).checksum()
+    for cfg in [
+        CometConfig(impl="levels", levels=2),
+        CometConfig(impl="levels_xla", levels=2),
+    ]:
+        assert czek3_distributed(V3, mesh, cfg, stage=0).checksum() == ref3, cfg
