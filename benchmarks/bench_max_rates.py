@@ -1,7 +1,8 @@
 """Paper Tables 3/4: maximum operation + comparison rates.
 
 Measured on CPU (this container) and MODELED for the v5e target from the
-dry-run roofline artifacts (results/dryrun/comet_*.json): rate =
+committed dry-run roofline artifacts (results/comet/comet_*.json —
+see results/README.md for the directory contract): rate =
 comparisons_per_step / max(t_compute, t_memory, t_collective).  The paper's
 headline: 2-way 4.29e15 cmp/s SP (17472 K20X nodes), 3-way 5.70e15 cmp/s.
 """
@@ -18,7 +19,7 @@ from repro.core.mgemm import mgemm_xla
 from repro.core.synthetic import random_integer_vectors
 
 HERE = os.path.dirname(os.path.abspath(__file__))
-DRYRUN = os.path.join(HERE, "..", "results", "dryrun")
+COMET_RESULTS = os.path.join(HERE, "..", "results", "comet")
 
 
 def main():
@@ -32,7 +33,7 @@ def main():
     rows.append(row("table3/cpu_core_2way", t, f"{comps / t:.3e}_cmp/s"))
 
     # modeled v5e pod rates from dry-run artifacts
-    for path in sorted(glob.glob(os.path.join(DRYRUN, "comet_*.json"))):
+    for path in sorted(glob.glob(os.path.join(COMET_RESULTS, "comet_*.json"))):
         with open(path) as f:
             r = json.load(f)
         terms = r["roofline"]

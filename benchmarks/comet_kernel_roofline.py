@@ -22,7 +22,8 @@ import os
 from repro.roofline.analysis import HW_V5E
 
 HERE = os.path.dirname(os.path.abspath(__file__))
-OUT = os.path.join(HERE, "..", "results", "dryrun")
+# comet artifacts are committed under results/comet (see results/README.md)
+OUT = os.path.join(HERE, "..", "results", "comet")
 
 # comet_2way single-pod decomposition (configs/comet.py): n_pv=64, n_pr=4
 N_F = 10000

@@ -29,6 +29,15 @@ Round-robin: item sb executes iff sb % n_pr == p_r (lax.cond — compute is
 skipped, not masked).  Phases B/C run under ``lax.fori_loop`` with the ring
 ``ppermute`` in the loop body, so the compiled program size is O(1) in n_pv
 (306 items at n_pv=16 compile as two nested loops).
+
+Packed bit-plane ring (resolved ``encoding == "bitplane"``): V is encoded
+ONCE into packed uint8 planes before ``shard_map`` and the doubly-nested
+ring carries the (levels, kb, n_vp) plane shards themselves — 1/16 of the
+fp32 wire volume for {0,1,2} SNP data.  Pipeline slices are byte-range
+views along the vector axis (packing is along the FIELD axis, so no bit
+surgery is ever needed) and feed the level-decomposed slice kernels
+directly; nothing re-encodes inside the ring loop.  Wire/storage layout:
+docs/BITPLANE_FORMAT.md.
 """
 from __future__ import annotations
 
@@ -72,19 +81,30 @@ def _item_metrics(
 ):
     """Masked metric slice (L, m, m) for one work item.
 
-    pipe/left/right: (n_fp, m) field-major blocks; s_*: (m,) per-vector
-    stats (already psummed over pf); j0: traced pipeline offset.
+    pipe/left/right: (n_fp, m) field-major value blocks, or (levels, kb, m)
+    packed uint8 bit-planes on the plane ring (docs/BITPLANE_FORMAT.md);
+    s_*: (m,) per-vector stats (already psummed over pf); j0: traced
+    pipeline offset.
     """
     metric = metric or CZEKANOWSKI
-    n_fp, m = pipe.shape
-    ps = jax.lax.dynamic_slice(pipe, (0, j0), (n_fp, L))  # (n_fp, L)
+    m = pipe.shape[-1]
+    if pipe.ndim == 3:
+        # packed bit-plane ring: pipeline slicing along the vector axis is
+        # a plain byte-range view of the (levels, kb, m) payload — the
+        # field axis (where bits pack 8-per-byte) is untouched
+        from repro.kernels.mgemm_levels import slice_planes_vectors
+
+        ps = slice_planes_vectors(pipe, j0, L)
+    else:
+        n_fp = pipe.shape[0]
+        ps = jax.lax.dynamic_slice(pipe, (0, j0), (n_fp, L))  # (n_fp, L)
     # 3-way term B[t, l, r] via the executor (fused X_j kernel on pallas)
     B = executor.threeway_slice(ps, left, right)
     if metric.needs_pair_terms:
         # pairwise numerators, one fused psum with the 3-way term
-        n2_pl = executor.contract(ps.T, left)  # (L, m)
-        n2_pr = executor.contract(ps.T, right)  # (L, m)
-        n2_lr = executor.contract(left.T, right)  # (m, m)
+        n2_pl = executor.pair_numerator(ps, left)  # (L, m)
+        n2_pr = executor.pair_numerator(ps, right)  # (L, m)
+        n2_lr = executor.pair_numerator(left, right)  # (m, m)
         B, n2_pl, n2_pr, n2_lr = jax.lax.psum((B, n2_pl, n2_pr, n2_lr), "pf")
     else:
         n2_pl = n2_pr = n2_lr = None
@@ -108,11 +128,19 @@ def _item_metrics(
 
 def _threeway_program(
     Vl, *, cfg: CometConfig, plan: ThreeWayPlan, stage: int, out_dtype,
-    metric: MetricSpec = None
+    metric: MetricSpec = None,
 ):
+    """Per-device program. Vl: (n_f/n_pf, n_vp) values, or — on the plane
+    ring (resolved ``encoding == "bitplane"``) — the rank's packed plane
+    shard (levels, n_fb/n_pf, n_vp) uint8.  With planes, Phases B and C
+    ring-carry the packed payload itself (the same ``ppermute``s, 8 fields
+    per byte per plane on the wire) and every pipeline slice is a
+    byte-range view fed straight to the level-decomposed kernels — no
+    per-slice re-encode."""
     metric = metric or CZEKANOWSKI
+    planes = Vl.ndim == 3  # plane shards are 3-D, value shards 2-D
     n_pv, n_pr, n_st = cfg.n_pv, cfg.n_pr, cfg.n_st
-    n_fp, m = Vl.shape
+    m = Vl.shape[-1]
     assert m % (6 * n_st) == 0, "n_vp must divide 6*n_st"
     L = m // (6 * n_st)
     executor = TileExecutor(cfg=cfg, metric=metric, out_dtype=out_dtype,
@@ -123,7 +151,13 @@ def _threeway_program(
     pr = jax.lax.axis_index("pr")
     perm = [((i + 1) % n_pv, i) for i in range(n_pv)]  # receive from upward
 
-    s_own = jax.lax.psum(metric.stat(Vl), "pf")
+    if planes:
+        # stats from the exact value reconstruction V = sum_t plane_t
+        from repro.kernels.mgemm_levels import values_from_planes
+
+        s_own = jax.lax.psum(metric.stat(values_from_planes(Vl)), "pf")
+    else:
+        s_own = jax.lax.psum(metric.stat(Vl), "pf")
     out0 = jnp.zeros((slots, L, m, m), out_dtype)
 
     def j0_of(idx):
@@ -319,14 +353,16 @@ def threeway_distributed(
     metric = metric or CZEKANOWSKI
     n_v = V.shape[1]
     V = np.asarray(V)
-    # Resolve 'auto' knobs.  The 3-way ring still carries V (the executor's
-    # level-decomposed slice kernel encodes planes per pipeline slice, no
-    # worse than the per-contraction ``(X >= t)`` it replaces); carrying
-    # packed planes through the doubly-nested ring is a ROADMAP open item.
-    # int8 auto-selection already quarters the wire traffic here.
+    # Resolve 'auto' knobs.  With the resolved ``encoding == "bitplane"``
+    # the campaign encodes packed bit-planes ONCE here and the doubly-
+    # nested ring carries THEM through Phases B/C (for {0,1,2} SNP data
+    # 1/16 of the fp32 wire volume; see docs/BITPLANE_FORMAT.md) —
+    # otherwise the ring carries values (int8 auto-selection still
+    # quarters the fp32 wire traffic).
     from repro.core.twoway import resolve_config
 
     cfg = resolve_config(cfg, V, metric)
+    planes = cfg.encoding == "bitplane"
     # Algorithm 3's pipeline geometry needs the per-rank block size to split
     # into 6 sixths x n_st stages: round n_vp up to a multiple of 6*n_st and
     # zero-pad.  All pad columns land at the global tail, so global index ==
@@ -336,6 +372,18 @@ def threeway_distributed(
     n_vp += (-n_vp) % unit
     fp = (-V.shape[0]) % cfg.n_pf
     Vp = np.pad(V, ((0, fp), (0, cfg.n_pv * n_vp - n_v)))
+    if planes:
+        # field_align pads fields to 8*n_pf so the BYTE axis splits evenly
+        # over "pf" (planes.py owns the rule); pad bits are inert
+        from repro.kernels.mgemm_levels import encode_bitplanes_np
+
+        arg = jnp.asarray(
+            encode_bitplanes_np(Vp, cfg.levels, field_align=cfg.n_pf)
+        )
+        in_specs = P(None, "pf", "pv")
+    else:
+        arg = jnp.asarray(Vp, dtype=jnp.dtype(cfg.ring_dtype))
+        in_specs = P("pf", "pv")
     plan = ThreeWayPlan(cfg.n_pv, cfg.n_pr, cfg.n_st)
     out_dtype = jnp.dtype(cfg.out_dtype)
 
@@ -343,13 +391,11 @@ def threeway_distributed(
         partial(_threeway_program, cfg=cfg, plan=plan, stage=stage,
                 out_dtype=out_dtype, metric=metric),
         mesh=mesh,
-        in_specs=P("pf", "pv"),
+        in_specs=in_specs,
         out_specs=P("pv", "pr", None, None, None, None),
         check=False,
     )
-    blocks = jax.jit(fn, static_argnames=())(
-        jnp.asarray(Vp, dtype=jnp.dtype(cfg.ring_dtype))
-    )
+    blocks = jax.jit(fn, static_argnames=())(arg)
     L = n_vp // (6 * cfg.n_st)
     blocks = np.asarray(blocks).reshape(
         cfg.n_pv, cfg.n_pr, plan.slots_per_rank, L, n_vp, n_vp

@@ -16,7 +16,11 @@ triangle with ``jnp.where``.  The executor owns all of that now:
   min-combine metric (``path == "fused-levels"``).  Either way the
   numerator tile is divided in VMEM and never written to HBM (paper §3.1's
   epilogue fusion, for every registered metric instead of a hard-coded
-  Czekanowski one-off).  ``path`` / ``path_reason`` surface the decision.
+  Czekanowski one-off).  ``path`` / ``path_reason`` surface the 2-way
+  decision; ``path3`` / ``path3_reason`` the 3-way one, where
+  ``"fused-levels-ring"`` additionally means the doubly-nested ring
+  carries packed bit-planes end to end (docs/BITPLANE_FORMAT.md) instead
+  of values.  See docs/ARCHITECTURE.md for the full fallback matrix.
 * **In-kernel symmetry elimination** (paper §5): diagonal blocks run the
   triangular tile schedule — the Pallas grid enumerates only tiles with
   ``tj >= ti`` — replacing compute-both-then-mask.
@@ -123,7 +127,14 @@ class TileExecutor:
     def _path3_decision(self) -> tuple:
         """(path, reason) for the 3-way pipeline slice.  Unlike 2-way, no
         ``n_pf`` condition: the slice kernel emits a non-psummed numerator
-        and the assembly runs outside the kernel either way."""
+        and the assembly runs outside the kernel either way.
+
+        ``"fused-levels-ring"`` is the end-to-end plane campaign: the 3-way
+        doubly-nested ring carries packed uint8 planes (encoded once before
+        ``shard_map``) and every slice kernel reads them directly.  Plain
+        ``"fused-levels"`` means the same slice kernel but a value ring —
+        planes re-encoded per pipeline slice (``encoding="none"`` opt-out,
+        or an executor built from an unresolved config)."""
         if not self.metric.contract_is_combine_sum:
             return "unfused", "metric contraction is not a combine-sum"
         if self.cfg.impl == "pallas":
@@ -133,12 +144,18 @@ class TileExecutor:
                 return "unfused", (
                     "level decomposition is exact only for combine == min"
                 )
-            return "fused-levels", ""
+            if self.cfg.encoding == "bitplane":
+                return "fused-levels-ring", ""
+            return "fused-levels", (
+                f"encoding={self.cfg.encoding!r}: ring carries "
+                f"{self.cfg.ring_dtype} values, planes encoded per slice"
+            )
         return "unfused", f"impl={self.cfg.impl!r} has no fused kernel"
 
     @property
     def path3(self) -> str:
-        """'fused-levels' | 'fused-vpu' | 'unfused' for 3-way slices."""
+        """'fused-levels-ring' | 'fused-levels' | 'fused-vpu' | 'unfused'
+        for 3-way slices."""
         return self._path3_decision()[0]
 
     @property
@@ -262,6 +279,17 @@ class TileExecutor:
             vals = jnp.where(tri, vals, 0)
         return vals
 
+    def pair_numerator(self, Va, Vb):
+        """Raw (m, n) pairwise numerator block, NOT psummed.
+
+        Accepts (k, m)/(k, n) field-major values or (levels, kb, m)/
+        (levels, kb, n) packed bit-planes (docs/BITPLANE_FORMAT.md) — the
+        3-way engine calls this for the pairwise terms of the metric
+        assembly, so the plane ring serves them without decoding."""
+        if Va.ndim == 3:
+            return self._contract_planes(Va, Vb)
+        return self.contract(Va.T, Vb)
+
     def _contract_planes(self, Pa, Pb):
         """Unfused numerator from pre-encoded planes: the per-ring-step
         ``(V >= t)`` indicator construction is gone from the hot loop."""
@@ -284,15 +312,23 @@ class TileExecutor:
         right_r) for one pipeline slice.  NOT psummed — the caller fuses the
         psum with the pairwise terms into one collective.
 
+        Operands are (n_fp, ·) field-major value blocks, or — on the plane
+        ring (``path3 == "fused-levels-ring"``, and the unfused plane
+        contraction under ``impl="levels_xla"``) — (levels, kb, ·) packed
+        uint8 bit-planes exactly as ring-carried (docs/BITPLANE_FORMAT.md);
+        the per-slice re-encode only runs when values arrive with
+        ``impl="levels"`` (``encoding="none"`` opt-out).
+
         Fused path: one batched ``threeway_batch`` launch (the pipeline axis
         is a kernel grid dimension, so trace/compile cost is O(1) in L), the
         X_j = combine(left, ps_t) tiles built in VMEM (never HBM).  Unfused:
         the pipeline axis folds into the GEMM M dimension (one batched
         contraction), exactly the pre-executor formulation.
         """
-        n_fp, L = ps.shape
-        m = left.shape[1]
-        n = right.shape[1]
+        planes = ps.ndim == 3
+        L = ps.shape[-1]
+        m = left.shape[-1]
+        n = right.shape[-1]
         if self.fused3:
             from repro.kernels.czek3 import threeway_batch
             from repro.kernels.czek3.kernel import (
@@ -304,14 +340,19 @@ class TileExecutor:
 
             if self.cfg.impl == "levels":
                 # level-decomposed slice: X_j is a packed AND of plane
-                # bytes, the contraction L MXU dot_generals per K-tile
+                # bytes, the contraction L MXU dot_generals per K-tile.
+                # On the plane ring the operands arrive pre-encoded.
                 from repro.kernels.czek3 import threeway_batch_levels
-                from repro.kernels.mgemm_levels import encode_bitplanes
 
-                lv = self.cfg.levels
-                Pl = encode_bitplanes(left, lv)
-                Pp = encode_bitplanes(ps, lv)
-                Pr = Pl if right is left else encode_bitplanes(right, lv)
+                if planes:
+                    Pl, Pp, Pr = left, ps, right
+                else:
+                    from repro.kernels.mgemm_levels import encode_bitplanes
+
+                    lv = self.cfg.levels
+                    Pl = encode_bitplanes(left, lv)
+                    Pp = encode_bitplanes(ps, lv)
+                    Pr = Pl if right is left else encode_bitplanes(right, lv)
                 return threeway_batch_levels(
                     Pl, Pp, Pr,
                     bm=_auto_tile(m, DEFAULT_BM),
@@ -323,8 +364,20 @@ class TileExecutor:
                 combine=self.metric.combine,
                 bm=_auto_tile(m, DEFAULT_BM),
                 bn=_auto_tile(n, DEFAULT_BN),
-                bk=_auto_tile(n_fp, DEFAULT_BK),
+                bk=_auto_tile(ps.shape[0], DEFAULT_BK),
             )
+        if planes:
+            # plane of min(left_l, ps_t) == packed AND of the plane bytes;
+            # fold the pipeline axis into the GEMM M dimension and run the
+            # (unfused) plane contraction — no decode, no re-encode
+            levels, kb = ps.shape[:2]
+            Xp = (left[:, :, :, None] & ps[:, :, None, :]).reshape(
+                levels, kb, m * L
+            )
+            return self._contract_planes(Xp, right).reshape(
+                m, L, n
+            ).transpose(1, 0, 2)
+        n_fp = ps.shape[0]
         X = self.metric.combine(left[:, :, None], ps[:, None, :]).reshape(
             n_fp, m * L
         )

@@ -74,10 +74,12 @@ class CometConfig:
     # contraction-axis chunk of the XLA mgemm (memory/speed trade-off)
     chunk: int = 128
     # bit-plane pre-encoding for the levels path: "auto" encodes V once
-    # into packed uint8 planes (8 plane-bits/byte) and ring-carries THOSE
-    # whenever impl='levels*', the metric combine is min, and the data is
-    # integer-valued in [0, levels]; "bitplane" forces it (ValueError if
-    # ineligible); "none" keeps the per-step (V >= t) construction.
+    # into packed uint8 planes (8 plane-bits/byte, docs/BITPLANE_FORMAT.md)
+    # and ring-carries THOSE — in BOTH engines, 2-way ring and 3-way
+    # doubly-nested ring alike — whenever impl='levels*', the metric
+    # combine is min, and the data is integer-valued in [0, levels];
+    # "bitplane" forces it (ValueError if ineligible); "none" keeps the
+    # value ring with per-step/per-slice (V >= t) construction.
     encoding: str = "auto"
 
     @property

@@ -9,13 +9,27 @@ the metric's elementwise pairing op (``min`` for Czekanowski, ``*`` for the
 correlation family).  The paper materializes X_j = combine(V, v_j) and then
 runs a 2-way mGEMM; this kernel fuses the X_j construction into the
 contraction so X_j never touches HBM — eliminating one full (n_f x n_vp)
-HBM write + read per pipeline step.  The ``TileExecutor`` routes the 3-way
-pipeline step of the distributed engine through this kernel whenever
-``impl="pallas"`` is requested, so the fusion is what the hot path actually
-executes (not a stand-alone demonstration kernel).
+HBM write + read per pipeline step.
 
-Operands arrive field-major ((n_f, m) blocks), matching how the distributed
-engine stores vector blocks, so the kernel contracts over the *leading* axis.
+These kernels are NOT stand-alone demonstrations: the ``TileExecutor``
+routes every 3-way pipeline slice of the distributed engine through them —
+``threeway_batch_pallas`` under ``impl="pallas"`` (``path3 ==
+"fused-vpu"``), ``threeway_batch_levels_pallas`` under ``impl="levels"``
+(``path3 == "fused-levels"`` / ``"fused-levels-ring"``).  On the plane
+ring the packed operands arrive exactly as ring-carried, with no per-slice
+re-encode.
+
+Plane-layout invariant: the packed-plane variant consumes the
+(levels, kb, w) uint8 LSB-first layout specified in
+docs/BITPLANE_FORMAT.md.  Its unpack helper and MXU accumulation
+(``_plane_matmuls``) are imported from ``mgemm_levels.kernel`` — shared
+with the 2-way plane kernels precisely so the bit layout and dot shapes
+can never drift between the engines.
+
+Value operands arrive field-major ((n_f, m) blocks), matching how the
+distributed engine stores vector blocks, so the kernels contract over the
+*leading* axis; plane operands put the same fields at 8-per-byte along
+their middle (byte) axis.
 """
 from __future__ import annotations
 
@@ -256,8 +270,11 @@ def threeway_batch_levels_pallas(
     bit-planes.
 
     Pown (levels, kb, m), PX (levels, kb, L) pipeline columns, Pright
-    (levels, kb, n) -> (L, m, n).  Exact for leveled integer data; one
-    launch for the whole pipeline slice like ``threeway_batch_pallas``."""
+    (levels, kb, n) -> (L, m, n); operands use the documented wire layout
+    (docs/BITPLANE_FORMAT.md) — on the plane-ring campaign path they are
+    byte-range views of the ring payload, fed in unmodified.  Exact for
+    leveled integer data; one launch for the whole pipeline slice like
+    ``threeway_batch_pallas``."""
     levels, kb, m = Pown.shape
     L = PX.shape[2]
     n = Pright.shape[2]

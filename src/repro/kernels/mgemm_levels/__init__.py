@@ -11,6 +11,8 @@ from .planes import (  # noqa: F401
     encode_bitplanes,
     encode_bitplanes_np,
     planes_nbytes,
+    shard_planes_fields,
+    slice_planes_vectors,
     values_from_planes,
 )
 from .ref import metric2_levels_planes_ref, mgemm_levels_ref  # noqa: F401

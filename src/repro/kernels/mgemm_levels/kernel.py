@@ -102,9 +102,13 @@ def mgemm_levels_pallas(
 # ---------------------------------------------------------------------------
 # Packed bit-plane kernels (the fused campaign path)
 #
-# Operands are pre-encoded packed planes (see ``planes.encode_bitplanes``):
-# (levels, kb, w) uint8, field-major, 8 plane-bits per byte along the
-# contraction axis.  Each K-tile unpacks its byte tile in VMEM (VPU work,
+# Operands are pre-encoded packed planes in the documented wire layout
+# (docs/BITPLANE_FORMAT.md; encoders in ``planes.py``): (levels, kb, w)
+# uint8, field-major, 8 plane-bits per byte LSB-first along the
+# contraction axis.  ``_unpack_plane_tile`` / ``_plane_matmuls`` below are
+# THE shared realization of that layout — the 3-way slice kernel
+# (kernels/czek3) imports them so the engines can never drift.
+# Each K-tile unpacks its byte tile in VMEM (VPU work,
 # overlapped by the MXU) and performs ``levels`` MXU ``dot_general``s into a
 # fp32 VMEM accumulator; the flush applies the metric's ``assemble_tile``
 # epilogue in place, so — like the VPU fused path — the numerator block

@@ -6,6 +6,24 @@ per element and ``V = sum_t plane_t``.  This module packs the planes along
 the *field* (contraction) axis, 8 plane-bits per byte, LSB-first — byte r
 of a plane covers fields ``8r .. 8r+7`` with bit j holding field ``8r+j``.
 
+This layout is a documented, stable contract: both distributed engines
+ring-carry it, the fused MXU kernels consume it, and any change to it is a
+wire/storage format break.  The normative spec — bit order, padding rules,
+byte-axis "pf" sharding, and the exact 2-way / 3-way ring payload shapes —
+lives in docs/BITPLANE_FORMAT.md; the invariants below restate the parts
+this module owns:
+
+* plane array shape is ``(levels, kb, n)`` uint8 with ``kb = ceil(k / 8)``,
+  field-major, LSB-first within each byte;
+* padding bits (fields past ``k``) are ZERO in every plane, so they are
+  inert in any plane GEMM — exactly like the engines' zero-padded values;
+* slicing along the trailing *vector* axis commutes with encoding
+  (``encode(V)[:, :, a:b] == encode(V[:, a:b])``) — pipeline slices of the
+  3-way ring are plain byte-range views, see ``slice_planes_vectors``;
+* slicing whole bytes along the *byte* axis selects fields ``8*b0 ..
+  8*b1 - 1`` — the "pf" sharding of the ring payload, see
+  ``shard_planes_fields``.
+
 Why pack: the packed representation is what the distributed engines
 ring-carry and what the fused MXU kernels consume.  For SNP {0,1,2} data
 (L=2) the packed planes are ``2 * n_f/8`` bytes per vector vs ``4 * n_f``
@@ -13,12 +31,25 @@ for the fp32 ring payload — 16x less ICI wire traffic and HBM read volume —
 and encoding happens ONCE per campaign instead of ``(V >= t)`` being
 recomputed from fp32 data at every ring step.
 
-All zero-padding is inert: a zero field has bit 0 in every plane, so it
-contributes nothing to any plane GEMM, exactly like the engines' existing
-zero-padding of V.
+A worked example (doctested; 3 fields, 2 vectors, levels=2):
+
+>>> import numpy as np
+>>> V = np.array([[0, 1],
+...               [2, 1],
+...               [1, 0]])                  # (k=3 fields, n=2 vectors)
+>>> P = encode_bitplanes_np(V, levels=2)
+>>> P.shape                                 # (levels, ceil(3/8), 2)
+(2, 1, 2)
+>>> [bin(b) for b in P[0, 0]]               # plane 1 = 1[V >= 1], LSB-first
+['0b110', '0b11']
+>>> [int(b) for b in P[1, 0]]               # plane 2 = 1[V >= 2]
+[2, 0]
+>>> np.asarray(values_from_planes(P))[:3].astype(int).tolist()
+[[0, 1], [2, 1], [1, 0]]
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -28,6 +59,8 @@ __all__ = [
     "decode_bitplanes",
     "values_from_planes",
     "planes_nbytes",
+    "slice_planes_vectors",
+    "shard_planes_fields",
 ]
 
 
@@ -37,6 +70,11 @@ def encode_bitplanes_np(V, levels: int, *, field_align: int = 1) -> np.ndarray:
     ``field_align``: pad the field count to a multiple of ``8 * field_align``
     so the *byte* axis splits evenly over ``field_align`` ranks (the "pf"
     sharding of the packed ring payload).
+
+    >>> import numpy as np
+    >>> P = encode_bitplanes_np(np.ones((13, 3)), levels=1, field_align=2)
+    >>> P.shape                        # 13 fields -> 16 (pad) -> 2 bytes
+    (1, 2, 3)
     """
     V = np.asarray(V)
     k, n = V.shape
@@ -49,7 +87,11 @@ def encode_bitplanes_np(V, levels: int, *, field_align: int = 1) -> np.ndarray:
 
 
 def encode_bitplanes(V, levels: int):
-    """jnp packer (jit-composable): (k, n) -> (levels, ceil(k/8), n) uint8."""
+    """jnp packer (jit-composable): (k, n) -> (levels, ceil(k/8), n) uint8.
+
+    Byte-identical to ``encode_bitplanes_np`` (asserted in
+    tests/test_bitplanes.py), so host-encoded campaign payloads and
+    device-encoded standalone calls can never disagree."""
     V = jnp.asarray(V)
     k, n = V.shape
     kp = (-k) % 8
@@ -76,10 +118,56 @@ def values_from_planes(P, dtype=jnp.float32):
     """Exact value reconstruction V = sum_t plane_t for leveled data.
 
     Returns (8*kb, n); rows past the true field count are the zero padding.
+    The distributed engines use this for per-vector stats on the plane
+    ring, so denominators come from the SAME payload the kernels consume.
     """
     return decode_bitplanes(P).sum(axis=0).astype(dtype)
 
 
+def slice_planes_vectors(P, start, count: int):
+    """Pipeline slice: vectors [start, start+count) of packed planes.
+
+    Packing is along the *field* axis, so a vector-axis slice is exact and
+    byte-aligned by construction — ``slice_planes_vectors(encode(V), a, c)
+    == encode(V[:, a:a+c])`` bit-for-bit (property-tested in
+    tests/test_plane_slicing.py).  jit-composable: ``start`` may be a
+    traced index (the 3-way engine slices with the traced pipeline offset
+    ``j0``); ``count`` must be static.
+
+    >>> import numpy as np
+    >>> V = np.arange(12).reshape(3, 4) % 3
+    >>> lhs = np.asarray(slice_planes_vectors(encode_bitplanes_np(V, 2), 1, 2))
+    >>> bool((lhs == encode_bitplanes_np(V[:, 1:3], 2)).all())
+    True
+    """
+    levels, kb, _ = P.shape
+    return jax.lax.dynamic_slice(P, (0, 0, start), (levels, kb, count))
+
+
+def shard_planes_fields(P, rank: int, n_shards: int):
+    """Byte-axis shard: the ``rank``-th of ``n_shards`` equal byte ranges.
+
+    This is the "pf" sharding of the ring payload (``in_specs`` place the
+    byte axis over the mesh's "pf" axis): shard ``r`` holds bytes
+    ``[r*kb/n, (r+1)*kb/n)``, i.e. fields ``[8*r*kb/n, 8*(r+1)*kb/n)`` —
+    encode the payload with ``field_align=n_shards`` so ``kb`` divides
+    evenly.  Host-side mirror of what ``shard_map`` does, used by tests to
+    pin the sharding semantics.
+    """
+    levels, kb, _ = P.shape
+    if kb % n_shards:
+        raise ValueError(
+            f"byte axis ({kb}) does not split over {n_shards} shards; "
+            f"encode with field_align={n_shards}"
+        )
+    kbs = kb // n_shards
+    return P[:, rank * kbs:(rank + 1) * kbs, :]
+
+
 def planes_nbytes(n_f: int, n_v: int, levels: int) -> int:
-    """Packed payload size — the ring-traffic accounting used in docs/bench."""
+    """Packed payload size — the ring-traffic accounting used in docs/bench.
+
+    >>> planes_nbytes(n_f=1000, n_v=512, levels=2)   # vs 4*1000*512 fp32
+    128000
+    """
     return levels * (-(-n_f // 8)) * n_v

@@ -17,6 +17,9 @@ Usage:
   python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
   python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --multi-pod
   python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun]
+
+results/dryrun is regenerable scratch (not committed); comet cells worth
+versioning are copied to results/comet — see results/README.md.
 """
 import argparse  # noqa: E402
 import json  # noqa: E402

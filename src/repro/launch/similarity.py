@@ -115,13 +115,10 @@ def main(argv=None):
         path, why = ((ex.path, ex.path_reason) if args.way == 2
                      else (ex.path3, ex.path3_reason))
         reason = f" ({why})" if why else ""
-        enc = cfg.encoding
-        if args.way == 3 and enc == "bitplane":
-            # the 3-way ring carries values; planes are encoded per slice
-            # inside the kernel path, not pre-encoded and ring-carried
-            enc = "bitplane (per-slice; ring carries values)"
+        # with encoding=bitplane BOTH engines pre-encode once and ring-carry
+        # the packed planes (3-way: path3 == "fused-levels-ring")
         print(f"path={path}{reason}")
-        print(f"encoding={enc} ring_dtype={cfg.ring_dtype} "
+        print(f"encoding={cfg.encoding} ring_dtype={cfg.ring_dtype} "
               f"impl={cfg.impl} levels={cfg.levels}")
         return 0
 

@@ -129,16 +129,33 @@ def check_3way(V, ref_dense):
     assert out.checksum() == ref_checksum, "3way pallas impl changed results"
     print("  3way pallas impl: OK")
 
-    # level-decomposed slice kernels (packed-AND X_j planes on the MXU)
-    for n_pf, n_pv, n_pr in [(1, 2, 1), (2, 2, 1), (1, 2, 2)]:
+    # packed bit-plane ring (path3 == "fused-levels-ring"): planes encoded
+    # once before shard_map, ring-carried through Phases B/C, pipeline
+    # slices fed to the level-decomposed kernels as byte-range views.
+    # n_pf=2 shards the BYTE axis over "pf"; all bit-identical to xla.
+    for n_pf, n_pv, n_pr in [(1, 2, 1), (2, 2, 1), (1, 2, 2), (1, 4, 1)]:
         cfg = CometConfig(n_pf=n_pf, n_pv=n_pv, n_pr=n_pr, impl="levels",
                           levels=15)
         out = czek3_distributed(V, make_comet_mesh(n_pf, n_pv, n_pr), cfg,
                                 stage=0)
         assert out.checksum() == ref_checksum, (
-            f"3way fused-levels changed results ({n_pf},{n_pv},{n_pr})"
+            f"3way plane ring changed results ({n_pf},{n_pv},{n_pr})"
         )
-        print(f"  3way fused-levels pf={n_pf} pv={n_pv} pr={n_pr}: OK")
+        print(f"  3way fused-levels-ring pf={n_pf} pv={n_pv} pr={n_pr}: OK")
+
+    # plane ring with the UNFUSED slice contraction (impl=levels_xla):
+    # the ring still carries packed planes, X_j is a packed AND
+    cfg = CometConfig(n_pf=2, n_pv=2, n_pr=1, impl="levels_xla", levels=15)
+    out = czek3_distributed(V, make_comet_mesh(2, 2, 1), cfg, stage=0)
+    assert out.checksum() == ref_checksum, "3way levels_xla plane ring"
+    print("  3way plane ring unfused (levels_xla) pf=2 pv=2: OK")
+
+    # encoding="none" opt-out keeps the value ring + per-slice encode
+    cfg = CometConfig(n_pf=1, n_pv=2, n_pr=1, impl="levels", levels=15,
+                      encoding="none")
+    out = czek3_distributed(V, make_comet_mesh(1, 2, 1), cfg, stage=0)
+    assert out.checksum() == ref_checksum, "3way value-ring fallback"
+    print("  3way fused-levels value ring (encoding=none): OK")
 
     # staging: union over stages == the full result set, bit-identical
     cfg = CometConfig(n_pf=1, n_pv=2, n_pr=1, n_st=2)

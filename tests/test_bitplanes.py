@@ -278,6 +278,62 @@ def test_executor_path_property():
     assert ex.path == "unfused" and "min" in ex.path_reason
 
 
+def test_executor_path3_matrix():
+    """3-way slice dispatch: the resolved plane campaign reports the
+    end-to-end ring state; a value ring keeps the per-slice kernel path
+    with a reason (so --dry-run shows why the ring was not planed)."""
+    spec = CZEKANOWSKI
+    cases = [  # (cfg, want_path3, reason_fragment)
+        (CometConfig(impl="levels", encoding="bitplane"),
+         "fused-levels-ring", ""),
+        (CometConfig(impl="levels", encoding="none"),
+         "fused-levels", "encoded per slice"),
+        (CometConfig(impl="levels"),  # unresolved 'auto' != plane ring
+         "fused-levels", "encoded per slice"),
+        (CometConfig(impl="pallas"), "fused-vpu", ""),
+        (CometConfig(impl="levels_xla", encoding="bitplane"),
+         "unfused", "no fused kernel"),
+        (CometConfig(impl="xla"), "unfused", "no fused kernel"),
+        # unlike 2-way, n_pf does not demote the 3-way slice path
+        (CometConfig(impl="levels", encoding="bitplane", n_pf=2),
+         "fused-levels-ring", ""),
+    ]
+    for cfg, want, frag in cases:
+        ex = TileExecutor(cfg=cfg, metric=spec)
+        assert ex.path3 == want, (cfg.impl, cfg.encoding, ex.path3)
+        assert frag in ex.path3_reason, (want, ex.path3_reason)
+        assert ex.fused3 == (want != "unfused")
+    from repro.api.registry import get_metric
+
+    ex = TileExecutor(cfg=CometConfig(impl="levels"), metric=get_metric("ccc"))
+    assert ex.path3 == "unfused" and "min" in ex.path3_reason
+
+
+def test_threeway_slice_accepts_pre_encoded_planes():
+    """The plane ring feeds packed operands straight into threeway_slice;
+    fused (levels) and unfused (levels_xla) realizations both match the
+    value-fed slice bit-for-bit, as do the pairwise numerators."""
+    rng = np.random.default_rng(11)
+    n_f, m, L, lv = 21, 9, 3, 2  # non-multiple-of-8 fields
+    ps = jnp.asarray(rng.integers(0, lv + 1, (n_f, L)).astype(np.float32))
+    left = jnp.asarray(rng.integers(0, lv + 1, (n_f, m)).astype(np.float32))
+    right = jnp.asarray(rng.integers(0, lv + 1, (n_f, m)).astype(np.float32))
+    Pp, Pl, Pr = (encode_bitplanes(x, lv) for x in (ps, left, right))
+    for impl in ("levels", "levels_xla"):
+        vals = TileExecutor(cfg=CometConfig(impl=impl, levels=lv,
+                                            encoding="none"),
+                            metric=CZEKANOWSKI, axis=None)
+        ring = TileExecutor(cfg=CometConfig(impl=impl, levels=lv,
+                                            encoding="bitplane"),
+                            metric=CZEKANOWSKI, axis=None)
+        got = np.asarray(ring.threeway_slice(Pp, Pl, Pr))
+        want = np.asarray(vals.threeway_slice(ps, left, right))
+        assert (got == want).all(), impl
+        n2 = np.asarray(ring.pair_numerator(Pp, Pl))
+        n2_want = np.asarray(vals.pair_numerator(ps, left))
+        assert (n2 == n2_want).all(), impl
+
+
 def test_resolve_config_auto_knobs():
     V012 = random_integer_vectors(16, 6, max_value=2, seed=0)
     spec = CZEKANOWSKI
@@ -329,7 +385,9 @@ def test_campaign_checksum_parity_2way_and_3way():
         V3, mesh, CometConfig(ring_dtype="float32"), stage=0
     ).checksum()
     for cfg in [
-        CometConfig(impl="levels", levels=2),
-        CometConfig(impl="levels_xla", levels=2),
+        CometConfig(impl="levels", levels=2),  # auto -> plane ring
+        CometConfig(impl="levels_xla", levels=2),  # plane ring, unfused slice
+        CometConfig(impl="levels", levels=2, encoding="none"),  # value ring
+        CometConfig(impl="levels", levels=2, encoding="bitplane"),
     ]:
         assert czek3_distributed(V3, mesh, cfg, stage=0).checksum() == ref3, cfg

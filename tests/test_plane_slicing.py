@@ -1,0 +1,157 @@
+"""Byte-aligned plane slicing: the contract the 3-way plane ring rests on.
+
+The packed plane layout (docs/BITPLANE_FORMAT.md) packs bits along the
+FIELD axis only, so two slicing operations are exact by construction and
+the distributed engines rely on both:
+
+1. vector-axis slices commute with encoding —
+   ``encode(V)[:, :, a:b] == encode(V[:, a:b])`` — which is why 3-way
+   pipeline slices are plain byte-range views of the ring payload
+   (``slice_planes_vectors``), with no per-slice re-encode;
+2. whole-byte slices along the byte axis select the corresponding field
+   range — which is why the ring payload's byte axis can shard over "pf"
+   (``shard_planes_fields``): shard r's plane GEMM partials equal those of
+   fields ``[8*r*kb/n_pf, 8*(r+1)*kb/n_pf)``.
+
+Covered with deterministic cases everywhere and hypothesis when installed
+(CI installs it; the container may not), including non-multiple-of-8 field
+counts and pf > 1 shard counts.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.mgemm_levels import (
+    encode_bitplanes_np,
+    mgemm_levels_planes_xla,
+    shard_planes_fields,
+    slice_planes_vectors,
+    values_from_planes,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def _vectors(k, n, levels, seed):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, levels + 1, (k, n)).astype(np.float32)
+
+
+# -- 1. vector-axis slicing == encode-of-slice ------------------------------
+
+
+def _check_vector_slice(k, n, levels, a, count, seed):
+    V = _vectors(k, n, levels, seed)
+    P = encode_bitplanes_np(V, levels)
+    # numpy view slice
+    assert (P[:, :, a:a + count] == encode_bitplanes_np(V[:, a:a + count],
+                                                        levels)).all()
+    # the jit-composable helper the 3-way engine slices pipelines with
+    got = np.asarray(slice_planes_vectors(jnp.asarray(P), a, count))
+    assert (got == encode_bitplanes_np(V[:, a:a + count], levels)).all()
+
+
+@pytest.mark.parametrize(
+    "k,n,levels,a,count,seed",
+    [
+        (8, 6, 2, 0, 6, 0),     # full width
+        (7, 9, 2, 2, 4, 1),     # non-multiple-of-8 fields
+        (13, 12, 3, 5, 3, 2),
+        (1, 4, 1, 1, 2, 3),     # single field
+        (40, 24, 5, 17, 6, 4),  # interior slice, many levels
+        (33, 10, 4, 9, 1, 5),   # single-column slice (L=1 pipeline)
+    ],
+)
+def test_vector_slice_equals_encode_of_slice_cases(k, n, levels, a, count, seed):
+    _check_vector_slice(k, n, levels, a, count, seed)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(
+        k=st.integers(1, 40),
+        n=st.integers(2, 16),
+        levels=st.integers(1, 5),
+        data=st.data(),
+    )
+    def test_vector_slice_equals_encode_of_slice_property(k, n, levels, data):
+        a = data.draw(st.integers(0, n - 1))
+        count = data.draw(st.integers(1, n - a))
+        seed = data.draw(st.integers(0, 2**31 - 1))
+        _check_vector_slice(k, n, levels, a, count, seed)
+
+
+# -- 2. byte-axis shards == encode of the field range -----------------------
+
+
+def _check_field_shards(k, n, levels, n_pf, seed):
+    V = _vectors(k, n, levels, seed)
+    P = encode_bitplanes_np(V, levels, field_align=n_pf)
+    kb = P.shape[1]
+    assert kb % n_pf == 0
+    fields_per_shard = 8 * kb // n_pf
+    Vpad = np.pad(V, ((0, 8 * kb - k), (0, 0)))
+    for r in range(n_pf):
+        shard = np.asarray(shard_planes_fields(P, r, n_pf))
+        fr = Vpad[r * fields_per_shard:(r + 1) * fields_per_shard]
+        assert (shard == encode_bitplanes_np(fr, levels)).all(), r
+    # the sharded plane-GEMM partials sum to the unsharded numerator —
+    # the "pf" psum contract of the distributed engines
+    full = np.asarray(mgemm_levels_planes_xla(jnp.asarray(P), jnp.asarray(P)))
+    parts = sum(
+        np.asarray(mgemm_levels_planes_xla(
+            jnp.asarray(shard_planes_fields(P, r, n_pf)),
+            jnp.asarray(shard_planes_fields(P, r, n_pf)),
+        ))
+        for r in range(n_pf)
+    )
+    assert (parts == full).all()
+
+
+@pytest.mark.parametrize(
+    "k,n,levels,n_pf,seed",
+    [
+        (16, 5, 2, 2, 0),   # bytes split exactly
+        (13, 6, 2, 2, 1),   # non-multiple-of-8 fields, pad bytes in shard 1
+        (7, 4, 3, 4, 2),    # fewer fields than 8*n_pf: pad-only shards
+        (40, 8, 2, 4, 3),
+        (21, 3, 1, 3, 4),   # odd shard count
+    ],
+)
+def test_field_shards_equal_encode_of_field_ranges_cases(k, n, levels, n_pf, seed):
+    _check_field_shards(k, n, levels, n_pf, seed)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        k=st.integers(1, 40),
+        n=st.integers(1, 10),
+        levels=st.integers(1, 4),
+        n_pf=st.integers(1, 4),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_field_shards_equal_encode_of_field_ranges_property(
+        k, n, levels, n_pf, seed
+    ):
+        _check_field_shards(k, n, levels, n_pf, seed)
+
+
+def test_shard_planes_fields_rejects_uneven_split():
+    P = encode_bitplanes_np(np.ones((8, 2)), 1)  # kb=1
+    with pytest.raises(ValueError, match="field_align"):
+        shard_planes_fields(P, 0, 2)
+
+
+def test_sliced_stats_match_value_slice():
+    """Stats computed from a plane slice equal stats of the sliced values
+    (what the 3-way engine's per-slice denominators depend on)."""
+    V = _vectors(19, 10, 2, seed=6)
+    P = jnp.asarray(encode_bitplanes_np(V, 2))
+    sub = slice_planes_vectors(P, 3, 4)
+    got = np.asarray(values_from_planes(sub)).sum(axis=0)
+    assert (got == V[:, 3:7].sum(axis=0)).all()
