@@ -69,6 +69,55 @@ def _sweep_callables(A, B, sa, sb, levels):
     }
 
 
+def ingest_entries(shapes=SWEEP_SHAPES, max_value=3):
+    """Store-load vs host-encode entries for BENCH_kernels.json.
+
+    For each sweep shape, times getting a (k = n_f, n = n_v) leveled matrix
+    into campaign-ready packed planes two ways:
+
+    * ``host_encode`` — ``encode_bitplanes_np`` of the in-memory matrix
+      (what every in-memory campaign pays per run);
+    * ``store_load``  — ``DatasetReader.packed()`` off a pre-written
+      dataset directory (mmap -> PackedPlanes, the zero-encode path).
+
+    ``gib_per_s`` moves the packed payload bytes; ``comparisons_per_s``
+    reuses the schema slot for matrix elements ingested per second.
+    """
+    import tempfile
+
+    from benchmarks.util import time_fn
+    from repro.kernels.mgemm_levels import encode_bitplanes_np, planes_nbytes
+    from repro.store import DatasetReader, write_dataset
+
+    entries = []
+    rng = np.random.default_rng(0)
+    levels = max_value
+    for m, k, n in shapes:
+        V = rng.integers(0, max_value + 1, (k, n)).astype(np.float32)
+        payload = planes_nbytes(k, n, levels)
+        with tempfile.TemporaryDirectory() as tmp:
+            write_dataset(tmp, V, levels=levels)
+
+            def load(tmp=tmp):
+                # eager read (the campaign materializes the payload too)
+                return DatasetReader(tmp).packed(mmap=False).planes
+
+            for impl, fn in (
+                ("host_encode", lambda: encode_bitplanes_np(V, levels)),
+                ("store_load", load),
+            ):
+                t = time_fn(lambda fn=fn: fn(), warmup=2, iters=9,
+                            reduce="min")
+                entries.append({
+                    "impl": impl,
+                    "m": m, "k": k, "n": n,
+                    "seconds": t,
+                    "gib_per_s": payload / t / 2**30,
+                    "comparisons_per_s": k * n / t,
+                })
+    return entries
+
+
 def kernel_sweep(shapes=SWEEP_SHAPES, max_value=3):
     """Entries for BENCH_kernels.json: impl × size × GiB/s, comparisons/s."""
     entries = []

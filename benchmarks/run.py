@@ -29,10 +29,13 @@ BENCH_KERNELS = os.path.join(
 )
 
 #: every impl the sweep may emit; --validate rejects anything else so the
-#: perf-trajectory file cannot silently rot
+#: perf-trajectory file cannot silently rot.  "host_encode"/"store_load"
+#: are the ingest entries (repro.store): matrix -> campaign-ready packed
+#: planes via the host encoder vs the on-disk dataset store.
 KNOWN_IMPLS = {
     "xla", "levels_xla", "levels_xla_hoisted", "levels",
     "pallas", "pallas_fused", "fused-levels",
+    "host_encode", "store_load",
 }
 _ENTRY_NUMBER_KEYS = ("seconds", "gib_per_s", "comparisons_per_s")
 _ENTRY_INT_KEYS = ("m", "k", "n")
@@ -79,12 +82,16 @@ def write_bench_kernels(shapes=None, out: str = BENCH_KERNELS,
                         max_value: int = 3) -> str:
     import jax
 
-    from benchmarks.bench_kernel import SWEEP_SHAPES, kernel_sweep
+    from benchmarks.bench_kernel import SWEEP_SHAPES, ingest_entries, kernel_sweep
 
     payload = {
         "backend": jax.default_backend(),
-        "note": "pallas* entries run in interpret mode off-TPU",
-        "entries": kernel_sweep(shapes or SWEEP_SHAPES, max_value=max_value),
+        "note": "pallas* entries run in interpret mode off-TPU; "
+                "host_encode/store_load are ingest entries "
+                "(comparisons_per_s = matrix elements ingested per second)",
+        "entries": (kernel_sweep(shapes or SWEEP_SHAPES, max_value=max_value)
+                    + ingest_entries(shapes or SWEEP_SHAPES,
+                                     max_value=max_value)),
     }
     with open(out, "w") as f:
         json.dump(payload, f, indent=2)

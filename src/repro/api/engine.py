@@ -72,16 +72,41 @@ class SimilarityEngine:
     # -- public API --------------------------------------------------------
 
     def run(self, request: SimilarityRequest, V=None) -> SimilarityResult:
-        """Execute a campaign; ``V`` overrides the request's input spec."""
+        """Execute a campaign; ``V`` overrides the request's input spec.
+
+        ``V`` (or the materialized input) may be a value matrix or a
+        pre-encoded ``PackedPlanes`` payload — with a ``source="planes"``
+        input the campaign streams packed planes from the dataset store
+        straight into the engines (no host-side encode) and the result's
+        manifest records the dataset provenance (path + checksum)."""
+        from repro.kernels.mgemm_levels.planes import PackedPlanes
+
         spec = get_metric(request.metric)
         request.validate(n_devices=self._device_count(), metric_spec=spec)
+        meta = {}
         if V is None:
             if request.input is None:
                 raise ValueError("no input: pass V or set request.input")
             V = request.input.materialize()
-        V = np.asarray(V)
-        if V.ndim != 2:
-            raise ValueError(f"V must be (n_f, n_v), got shape {V.shape}")
+            if request.input.source == "bed":
+                meta["dataset"] = {
+                    "path": request.input.path,
+                    "kind": "bed",
+                    "missing": request.input.missing,
+                }
+        if isinstance(V, PackedPlanes):
+            # provenance travels on the handle (DatasetReader.packed() fills
+            # it from the manifest it already parsed), so it is recorded no
+            # matter which entry point materialized the planes — engine or
+            # the serving layer's pre-materialized submit()
+            if V.origin:
+                meta["dataset"] = V.origin
+            n_f, n_v = V.n_f, V.n_v
+        else:
+            V = np.asarray(V)
+            if V.ndim != 2:
+                raise ValueError(f"V must be (n_f, n_v), got shape {V.shape}")
+            n_f, n_v = V.shape
         mesh = self._mesh_for(request)
         cfg = request.to_comet_config()
         stages = request.resolved_stages()
@@ -101,12 +126,13 @@ class SimilarityEngine:
         return SimilarityResult(
             way=request.way,
             metric=request.metric,
-            n_v=V.shape[1],
-            n_f=V.shape[0],
+            n_v=n_v,
+            n_f=n_f,
             outputs=outputs,
             decomposition=(request.n_pf, request.n_pv, request.n_pr),
             n_st=request.n_st,
             stages=stages,
             out_dtype=request.out_dtype,
             seconds=seconds,
+            meta=meta,
         )

@@ -23,21 +23,43 @@ class InputSpec:
     """Where the (n_f, n_v) vector matrix comes from.
 
     ``synthetic`` draws the paper's random-integer dataset (fp-exact sums);
-    ``npy`` loads a saved matrix from ``path``.
+    ``npy`` loads a saved matrix from ``path`` (validated on load — see
+    ``_validate_matrix``); ``planes`` opens a ``repro.store`` packed
+    bit-plane dataset directory and materializes a ``PackedPlanes`` handle
+    (the engines consume it directly — the campaign never runs the host
+    encoder); ``bed`` decodes a PLINK 1 ``.bed/.bim/.fam`` fileset into the
+    {0, 1, 2} dosage matrix (``missing`` names the missing-genotype
+    policy: "error" | "zero" | "drop").
     """
 
-    source: str = "synthetic"  # "synthetic" | "npy"
+    source: str = "synthetic"  # "synthetic" | "npy" | "planes" | "bed"
     n_f: int = 512
     n_v: int = 240
     max_value: int = 15
     seed: int = 0
     path: str = ""
+    #: PLINK missing-genotype policy (source="bed" only)
+    missing: str = "error"
 
-    def materialize(self) -> np.ndarray:
+    def materialize(self):
+        """-> (n_f, n_v) ndarray, or PackedPlanes for ``source="planes"``."""
         if self.source == "npy":
             if not self.path:
                 raise ValueError("InputSpec(source='npy') needs a path")
-            return np.load(self.path)
+            return _validate_matrix(np.load(self.path), what=self.path)
+        if self.source == "planes":
+            if not self.path:
+                raise ValueError("InputSpec(source='planes') needs a dataset path")
+            from repro.store import DatasetReader
+
+            return DatasetReader(self.path).packed()
+        if self.source == "bed":
+            if not self.path:
+                raise ValueError("InputSpec(source='bed') needs a fileset path")
+            from repro.store import read_bed
+
+            V, _ = read_bed(self.path, missing=self.missing)
+            return V
         if self.source == "synthetic":
             from repro.core.synthetic import random_integer_vectors
 
@@ -45,6 +67,20 @@ class InputSpec:
                 self.n_f, self.n_v, max_value=self.max_value, seed=self.seed
             )
         raise ValueError(f"unknown input source {self.source!r}")
+
+
+def _validate_matrix(V: np.ndarray, *, what: str) -> np.ndarray:
+    """Gate for externally loaded matrices (shared core validator).
+
+    The engines' exactness contract assumes a finite, non-negative numeric
+    (n_f, n_v) matrix whose actual column sums stay below the fp32 mantissa
+    limit (paper §5); a hostile ``.npy`` violating any of these used to
+    flow straight into the engines and surface only as a wrong checksum.
+    Errors name the offending stat.
+    """
+    from repro.core.validate import validate_matrix
+
+    return validate_matrix(V, what=what, check_fp32_sums=True)
 
 
 @dataclass(frozen=True)

@@ -170,6 +170,16 @@ class SimilarityResult:
             json.dump(manifest, f, indent=2)
         return manifest
 
+    #: manifest keys owned by the result itself; anything else in a saved
+    #: manifest came from ``meta`` (e.g. the dataset-store provenance block
+    #: the engine records for ``source="planes"`` campaigns) and is
+    #: restored into ``meta`` on load
+    _MANIFEST_KEYS = frozenset({
+        "format_version", "metric", "way", "n_f", "n_v", "n_vp",
+        "decomposition", "n_st", "stages", "storage", "out_dtype",
+        "results", "seconds", "checksum",
+    })
+
     @classmethod
     def load(cls, path: str) -> "SimilarityResult":
         """Rebuild a result from ``save()`` output (verifies the checksum)."""
@@ -195,6 +205,7 @@ class SimilarityResult:
             outputs=outputs, decomposition=tuple(m["decomposition"]),
             n_st=m["n_st"], stages=tuple(m["stages"]),
             out_dtype=m["out_dtype"], seconds=m.get("seconds", 0.0),
+            meta={k: v for k, v in m.items() if k not in cls._MANIFEST_KEYS},
         )
         got = hex(result.checksum())
         if got != m["checksum"]:

@@ -346,13 +346,17 @@ class ThreeWayOutput:
 
 
 def threeway_distributed(
-    V: np.ndarray, mesh: Mesh, cfg: CometConfig, stage: int = 0,
+    V, mesh: Mesh, cfg: CometConfig, stage: int = 0,
     metric: MetricSpec = None,
 ) -> ThreeWayOutput:
-    """Compute one stage of the unique 3-way metrics of V's columns."""
+    """Compute one stage of the unique 3-way metrics of V's columns.
+
+    ``V``: (n_f, n_v) value matrix, or a pre-encoded ``PackedPlanes``
+    payload (``repro.store`` zero-encode loading) — re-padded packed, never
+    re-encoded on the host."""
+    from repro.kernels.mgemm_levels.planes import PackedPlanes, pad_planes
+
     metric = metric or CZEKANOWSKI
-    n_v = V.shape[1]
-    V = np.asarray(V)
     # Resolve 'auto' knobs.  With the resolved ``encoding == "bitplane"``
     # the campaign encodes packed bit-planes ONCE here and the doubly-
     # nested ring carries THEM through Phases B/C (for {0,1,2} SNP data
@@ -361,29 +365,40 @@ def threeway_distributed(
     # quarters the fp32 wire traffic).
     from repro.core.twoway import resolve_config
 
-    cfg = resolve_config(cfg, V, metric)
-    planes = cfg.encoding == "bitplane"
     # Algorithm 3's pipeline geometry needs the per-rank block size to split
     # into 6 sixths x n_st stages: round n_vp up to a multiple of 6*n_st and
     # zero-pad.  All pad columns land at the global tail, so global index ==
     # padded column index and entries() masks them with < n_v.
     unit = 6 * cfg.n_st
-    n_vp = -(-n_v // cfg.n_pv)
-    n_vp += (-n_vp) % unit
-    fp = (-V.shape[0]) % cfg.n_pf
-    Vp = np.pad(V, ((0, fp), (0, cfg.n_pv * n_vp - n_v)))
-    if planes:
-        # field_align pads fields to 8*n_pf so the BYTE axis splits evenly
-        # over "pf" (planes.py owns the rule); pad bits are inert
-        from repro.kernels.mgemm_levels import encode_bitplanes_np
-
-        arg = jnp.asarray(
-            encode_bitplanes_np(Vp, cfg.levels, field_align=cfg.n_pf)
-        )
+    if isinstance(V, PackedPlanes):
+        n_v = V.n_v
+        cfg = resolve_config(cfg, V, metric)  # always "bitplane" (or raises)
+        n_vp = -(-n_v // cfg.n_pv)
+        n_vp += (-n_vp) % unit
+        Pp = pad_planes(V.planes, byte_align=cfg.n_pf, n_v=cfg.n_pv * n_vp)
+        arg = jnp.asarray(Pp)
         in_specs = P(None, "pf", "pv")
     else:
-        arg = jnp.asarray(Vp, dtype=jnp.dtype(cfg.ring_dtype))
-        in_specs = P("pf", "pv")
+        n_v = V.shape[1]
+        V = np.asarray(V)
+        cfg = resolve_config(cfg, V, metric)
+        planes = cfg.encoding == "bitplane"
+        n_vp = -(-n_v // cfg.n_pv)
+        n_vp += (-n_vp) % unit
+        fp = (-V.shape[0]) % cfg.n_pf
+        Vp = np.pad(V, ((0, fp), (0, cfg.n_pv * n_vp - n_v)))
+        if planes:
+            # field_align pads fields to 8*n_pf so the BYTE axis splits
+            # evenly over "pf" (planes.py owns the rule); pad bits are inert
+            from repro.kernels.mgemm_levels import encode_bitplanes_np
+
+            arg = jnp.asarray(
+                encode_bitplanes_np(Vp, cfg.levels, field_align=cfg.n_pf)
+            )
+            in_specs = P(None, "pf", "pv")
+        else:
+            arg = jnp.asarray(Vp, dtype=jnp.dtype(cfg.ring_dtype))
+            in_specs = P("pf", "pv")
     plan = ThreeWayPlan(cfg.n_pv, cfg.n_pr, cfg.n_st)
     out_dtype = jnp.dtype(cfg.out_dtype)
 

@@ -133,14 +133,59 @@ def _values_leveled(V: np.ndarray, levels: int) -> bool:
     return bool(V.min() >= 0 and V.max() <= levels)
 
 
+def _plane_eligible(cfg: CometConfig, metric: MetricSpec) -> bool:
+    """The ONE plane-path eligibility predicate (impl + metric), shared by
+    the value and pre-encoded branches of ``resolve_config``."""
+    return (
+        cfg.impl in ("levels", "levels_xla")
+        and metric.combine is jnp.minimum
+    )
+
+
+def _plane_ineligible_msg(prefix: str, cfg: CometConfig, metric: MetricSpec) -> str:
+    return (
+        f"{prefix} needs impl='levels'/'levels_xla' and a min-combine metric "
+        f"(got impl={cfg.impl!r}, metric={metric.name!r})"
+    )
+
+
 def resolve_config(
-    cfg: CometConfig, V: np.ndarray, metric: MetricSpec
+    cfg: CometConfig, V, metric: MetricSpec
 ) -> CometConfig:
     """Resolve the 'auto' knobs (ring_dtype, encoding) against actual data.
 
     The distributed entry points call this once per campaign, so the device
-    programs and the TileExecutor only ever see concrete settings."""
+    programs and the TileExecutor only ever see concrete settings.
+
+    ``V`` may be a value matrix or a pre-encoded ``PackedPlanes`` payload
+    (``repro.store`` campaign loading).  Pre-encoded input HAS no value
+    form on the host, so it must resolve to the plane path: eligibility
+    failures (impl / metric / levels mismatch, explicit ``encoding="none"``)
+    raise instead of falling back."""
     from dataclasses import replace
+
+    from repro.kernels.mgemm_levels.planes import PackedPlanes
+
+    if isinstance(V, PackedPlanes):
+        if cfg.encoding == "none":
+            raise ValueError(
+                "pre-encoded plane input cannot run with encoding='none' "
+                "(there are no host-side values to ring-carry) — load the "
+                "matrix instead, or drop encoding='none'"
+            )
+        if not _plane_eligible(cfg, metric):
+            raise ValueError(
+                _plane_ineligible_msg("pre-encoded plane input", cfg, metric)
+            )
+        if V.levels != cfg.levels:
+            raise ValueError(
+                f"dataset is encoded with levels={V.levels}, request says "
+                f"levels={cfg.levels}"
+            )
+        ring = cfg.ring_dtype
+        if ring == "auto":  # plane payloads are uint8; value ring unused
+            ring = "int8" if cfg.levels <= 127 else "float32"
+        return replace(cfg, ring_dtype=ring, encoding="bitplane")
 
     V = np.asarray(V)
     ring = cfg.ring_dtype
@@ -150,17 +195,12 @@ def resolve_config(
     if enc not in ("auto", "bitplane", "none"):
         raise ValueError(f"unknown encoding {enc!r}")
     if enc != "none":
-        eligible = (
-            cfg.impl in ("levels", "levels_xla")
-            and metric.combine is jnp.minimum
-        )
+        eligible = _plane_eligible(cfg, metric)
         leveled = _values_leveled(V, cfg.levels)
         if enc == "bitplane":
             if not eligible:
                 raise ValueError(
-                    "encoding='bitplane' needs impl='levels'/'levels_xla' "
-                    "and a min-combine metric "
-                    f"(got impl={cfg.impl!r}, metric={metric.name!r})"
+                    _plane_ineligible_msg("encoding='bitplane'", cfg, metric)
                 )
             if not leveled:
                 raise ValueError(
@@ -336,26 +376,45 @@ def _twoway_program(
 
 
 def twoway_distributed(
-    V: np.ndarray, mesh: Mesh, cfg: CometConfig, metric: MetricSpec = None
+    V, mesh: Mesh, cfg: CometConfig, metric: MetricSpec = None
 ) -> TwoWayOutput:
-    """Compute all unique 2-way metrics of V's columns on the mesh."""
-    metric = metric or CZEKANOWSKI
-    n_v = V.shape[1]
-    V = np.asarray(V)
-    cfg = resolve_config(cfg, V, metric)
-    planes = cfg.encoding == "bitplane"
-    if planes:
-        # encode ONCE before shard_map; the byte axis shards over "pf"
-        from repro.kernels.mgemm_levels import encode_bitplanes_np
+    """Compute all unique 2-way metrics of V's columns on the mesh.
 
-        Vp = pad_vectors(V, cfg, field_align=8)
-        arg = jnp.asarray(encode_bitplanes_np(Vp, cfg.levels))
+    ``V``: (n_f, n_v) value matrix, or a pre-encoded ``PackedPlanes``
+    payload (``repro.store`` zero-encode loading) — the packed planes are
+    re-padded with inert zero bytes/columns to the campaign geometry and
+    ring-carried directly; the host encoder never runs."""
+    from repro.kernels.mgemm_levels.planes import PackedPlanes, pad_planes
+
+    metric = metric or CZEKANOWSKI
+    if isinstance(V, PackedPlanes):
+        n_v = V.n_v
+        cfg = resolve_config(cfg, V, metric)  # always "bitplane" (or raises)
+        Pp = pad_planes(
+            V.planes, byte_align=cfg.n_pf,
+            n_v=n_v + (-n_v) % cfg.n_pv,
+        )
+        arg = jnp.asarray(Pp)
         in_specs = P(None, "pf", "pv")
+        planes = True
+        n_vp = Pp.shape[2] // cfg.n_pv
     else:
-        Vp = pad_vectors(V, cfg)
-        arg = jnp.asarray(Vp, dtype=jnp.dtype(cfg.ring_dtype))
-        in_specs = P("pf", "pv")
-    n_vp = Vp.shape[1] // cfg.n_pv
+        n_v = V.shape[1]
+        V = np.asarray(V)
+        cfg = resolve_config(cfg, V, metric)
+        planes = cfg.encoding == "bitplane"
+        if planes:
+            # encode ONCE before shard_map; the byte axis shards over "pf"
+            from repro.kernels.mgemm_levels import encode_bitplanes_np
+
+            Vp = pad_vectors(V, cfg, field_align=8)
+            arg = jnp.asarray(encode_bitplanes_np(Vp, cfg.levels))
+            in_specs = P(None, "pf", "pv")
+        else:
+            Vp = pad_vectors(V, cfg)
+            arg = jnp.asarray(Vp, dtype=jnp.dtype(cfg.ring_dtype))
+            in_specs = P("pf", "pv")
+        n_vp = Vp.shape[1] // cfg.n_pv
     plan = TwoWayPlan(cfg.n_pv, cfg.n_pr)
     out_dtype = jnp.dtype(cfg.out_dtype)
 

@@ -1,0 +1,81 @@
+"""Input-matrix validation shared by the API loaders and the dataset store.
+
+One structural gate for every externally supplied (n_f, n_v) matrix — the
+``.npy`` loader (``InputSpec``), the dataset writer, and the ``.bed``
+transcode all funnel through here so hostile inputs fail with an error
+naming the offending stat (shape / dtype / non-finite count / min / max /
+column sum) instead of surfacing as a wrong checksum downstream.
+
+Two layered checks on top of the structural gate:
+
+* ``levels`` — require integer values in ``[0, levels]``, the exactness
+  domain of the plane decomposition (the store writer's guard; ``levels=1``
+  thereby admits exactly binary matrices).
+* ``check_fp32_sums`` — require every actual column sum below ``2^24`` so
+  integer accumulation stays exact in fp32 (paper §5's bit-exactness
+  contract).  The bound is the real ``max(colsum)``, not the worst-case
+  ``max * n_f`` — sparse matrices with large ``n_f`` are fine.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["validate_matrix"]
+
+_FP32_EXACT = 2 ** 24
+
+
+def validate_matrix(
+    V: np.ndarray, *, what: str, levels: int = None,
+    check_fp32_sums: bool = False,
+) -> np.ndarray:
+    """Raise ValueError naming the offending stat; return V unchanged."""
+    if V.ndim != 2:
+        raise ValueError(
+            f"{what}: expected a 2-D (n_f, n_v) matrix, got shape {V.shape}"
+        )
+    if V.size == 0:
+        raise ValueError(f"{what}: empty matrix {V.shape}")
+    is_bool = V.dtype == np.bool_  # binary/Sorenson matrices save as bool
+    if not is_bool and (
+        not np.issubdtype(V.dtype, np.number)
+        or np.issubdtype(V.dtype, np.complexfloating)
+    ):
+        raise ValueError(f"{what}: unsupported dtype {V.dtype} (need real numeric)")
+    if np.issubdtype(V.dtype, np.floating) and not np.isfinite(V).all():
+        bad = int(V.size - np.isfinite(V).sum())
+        raise ValueError(f"{what}: {bad} non-finite entries")
+    lo = V.min()
+    if lo < 0:
+        raise ValueError(
+            f"{what}: min value {lo} is negative (similarity metrics assume "
+            f"non-negative data)"
+        )
+    integral = (
+        is_bool
+        or np.issubdtype(V.dtype, np.integer)
+        or bool((V == np.floor(V)).all())
+    )
+    if levels is not None:
+        if not integral:
+            raise ValueError(
+                f"{what}: non-integer values (plane encoding is exact only "
+                f"for integers in [0, levels])"
+            )
+        hi = V.max()
+        if hi > levels:
+            raise ValueError(
+                f"{what}: max value {hi} exceeds levels={levels} — the plane "
+                f"decomposition would silently clip; re-encode with levels>="
+                f"{int(hi)}"
+            )
+    if check_fp32_sums and integral:
+        # dtype=float64 accumulates without materializing a converted copy
+        smax = V.sum(axis=0, dtype=np.float64).max()
+        if smax >= _FP32_EXACT:
+            raise ValueError(
+                f"{what}: max column sum {int(smax)} overflows exact fp32 "
+                f"integer accumulation (2^24) — the paper's bit-exactness "
+                f"contract would silently break"
+            )
+    return V

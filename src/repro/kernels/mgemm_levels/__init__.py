@@ -7,9 +7,11 @@ from .ops import (  # noqa: F401
     mgemm_levels_xla,
 )
 from .planes import (  # noqa: F401
+    PackedPlanes,
     decode_bitplanes,
     encode_bitplanes,
     encode_bitplanes_np,
+    pad_planes,
     planes_nbytes,
     shard_planes_fields,
     slice_planes_vectors,

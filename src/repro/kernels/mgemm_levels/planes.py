@@ -49,19 +49,113 @@ A worked example (doctested; 3 fields, 2 vectors, levels=2):
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 __all__ = [
+    "PackedPlanes",
     "encode_bitplanes",
     "encode_bitplanes_np",
     "decode_bitplanes",
     "values_from_planes",
     "planes_nbytes",
+    "pad_planes",
     "slice_planes_vectors",
     "shard_planes_fields",
 ]
+
+
+@dataclass(frozen=True, eq=False)
+class PackedPlanes:
+    """In-memory handle of a pre-encoded plane payload (the wire format).
+
+    ``eq=False``: a generated ``__eq__`` would compare the ndarray field
+    elementwise (raising on truth-value ambiguity) and break hashing;
+    handles compare by identity — compare payloads with ``np.array_equal``.
+
+    Wraps a ``(levels, kb, n_v)`` uint8 plane array together with the TRUE
+    field count ``n_f`` (the byte axis may carry write-time alignment
+    padding beyond ``ceil(n_f / 8)`` — pad bits are zero and inert).  This
+    is what ``repro.store`` readers hand to the engines: both
+    ``twoway_distributed`` and ``threeway_distributed`` accept it in place
+    of a value matrix and ring-carry the planes WITHOUT ever re-encoding
+    on the host (``pad_planes`` re-pads the packed payload directly).
+
+    >>> import numpy as np
+    >>> pp = PackedPlanes(encode_bitplanes_np(np.ones((13, 3)), 2), n_f=13)
+    >>> (pp.levels, pp.kb, pp.n_v, pp.n_f)
+    (2, 2, 3, 13)
+    """
+
+    planes: np.ndarray  # (levels, kb, n_v) uint8
+    n_f: int  # true field count (<= 8 * kb)
+    #: free-form origin metadata travelling WITH the payload (the store
+    #: reader records dataset path + checksum here, and the engine copies
+    #: it into result manifests — so provenance survives any entry point
+    #: that forwards the handle, and nothing re-reads the manifest)
+    origin: dict = None
+
+    def __post_init__(self):
+        P = self.planes
+        if getattr(P, "ndim", None) != 3:
+            raise ValueError(
+                f"PackedPlanes needs a (levels, kb, n_v) array, got "
+                f"{getattr(P, 'shape', None)}"
+            )
+        if np.dtype(P.dtype) != np.uint8:
+            raise ValueError(f"plane payload must be uint8, got {P.dtype}")
+        if not (0 < self.n_f <= 8 * P.shape[1]):
+            raise ValueError(
+                f"n_f={self.n_f} outside (0, 8*kb={8 * P.shape[1]}]"
+            )
+
+    @property
+    def levels(self) -> int:
+        return int(self.planes.shape[0])
+
+    @property
+    def kb(self) -> int:
+        return int(self.planes.shape[1])
+
+    @property
+    def n_v(self) -> int:
+        return int(self.planes.shape[2])
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.planes.nbytes)
+
+
+def pad_planes(P, *, byte_align: int = 1, n_v: int = None) -> np.ndarray:
+    """Re-pad a packed payload with zero bytes / zero columns — no re-encode.
+
+    Zero BYTES on the byte axis are the encoding of eight zero fields and
+    zero COLUMNS on the vector axis are the encoding of zero vectors, so
+    padding the packed array commutes with encoding the padded matrix
+    (``pad_planes(encode(V)) == encode(pad(V))`` whenever the byte padding
+    is whole bytes).  This is what lets pre-encoded datasets from
+    ``repro.store`` be re-shaped to any campaign decomposition without the
+    host encoder ever running.
+
+    ``byte_align``: pad the byte axis to a multiple (the "pf" shard rule);
+    ``n_v``: pad the vector axis up to this count.
+
+    >>> import numpy as np
+    >>> P = encode_bitplanes_np(np.ones((8, 3)), 1)
+    >>> pad_planes(P, byte_align=2, n_v=4).shape
+    (1, 2, 4)
+    """
+    levels, kb, w = P.shape
+    bp = (-kb) % max(1, byte_align)
+    vp = 0 if n_v is None else n_v - w
+    if vp < 0:
+        raise ValueError(f"cannot shrink vector axis {w} -> {n_v}")
+    if bp or vp:
+        P = np.pad(np.asarray(P), ((0, 0), (0, bp), (0, vp)))
+    return P
 
 
 def encode_bitplanes_np(V, levels: int, *, field_align: int = 1) -> np.ndarray:

@@ -30,8 +30,12 @@ def main(argv=None):
                     help="3-way stage to run; -1 runs all n_st stages")
     ap.add_argument("--devices", type=int, default=0,
                     help="force host device count (set before jax init)")
-    ap.add_argument("--impl", default="xla")
-    ap.add_argument("--levels", type=int, default=2)
+    ap.add_argument("--impl", default=None,
+                    help="mgemm implementation (default: xla, or levels "
+                         "when --dataset is given)")
+    ap.add_argument("--levels", type=int, default=None,
+                    help="level count for impl='levels*' (default: 2, or "
+                         "the dataset's encoded levels with --dataset)")
     ap.add_argument("--out-dtype", default="float32",
                     help="metric output dtype (e.g. float32, bfloat16)")
     ap.add_argument("--ring-dtype", default="auto",
@@ -51,6 +55,10 @@ def main(argv=None):
     ap.add_argument("--chunk", type=int, default=128,
                     help="XLA mgemm contraction-chunk size")
     ap.add_argument("--input", default="", help=".npy (n_f, n_v) input")
+    ap.add_argument("--dataset", default="",
+                    help="packed bit-plane dataset directory (repro.store): "
+                         "the campaign loads pre-encoded planes and never "
+                         "runs the host encoder")
     ap.add_argument("--max-value", type=int, default=15)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="")
@@ -73,20 +81,40 @@ def main(argv=None):
             print(name)
         return 0
 
-    if args.input:
+    if args.dataset and args.input:
+        print("error: --input and --dataset are mutually exclusive",
+              file=sys.stderr)
+        return 2
+    impl = args.impl or ("levels" if args.dataset else "xla")
+    levels = args.levels
+    if args.dataset:
+        # pre-encoded campaign: the store's planes feed the engines directly
+        from repro.store import read_manifest
+
+        try:
+            manifest = read_manifest(args.dataset)
+        except ValueError as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 2
+        if levels is None:
+            levels = manifest["levels"]
+        input_spec = InputSpec(source="planes", path=args.dataset)
+    elif args.input:
         input_spec = InputSpec(source="npy", path=args.input)
     else:
         input_spec = InputSpec(
             source="synthetic", n_f=args.n_f, n_v=args.n_v,
             max_value=args.max_value, seed=args.seed,
         )
+    if levels is None:
+        levels = 2
     stages = None if (args.way == 3 and args.stage < 0) else (
         (args.stage,) if args.way == 3 else None
     )
     request = SimilarityRequest(
         metric=args.metric, way=args.way,
         n_pf=args.n_pf, n_pv=args.n_pv, n_pr=args.n_pr, n_st=args.n_st,
-        stages=stages, impl=args.impl, levels=args.levels,
+        stages=stages, impl=impl, levels=levels,
         out_dtype=args.out_dtype, ring_dtype=args.ring_dtype,
         encoding=args.encoding, chunk=args.chunk, input=input_spec,
     )

@@ -115,8 +115,16 @@ class SimilarityService:
     def _fingerprint(request, V) -> tuple:
         if V is None:
             return (request, None)
-        a = np.ascontiguousarray(V)
+        from repro.kernels.mgemm_levels.planes import PackedPlanes
+
         h = hashlib.sha256()
+        if isinstance(V, PackedPlanes):
+            # pre-encoded store input: key on the payload bytes + true n_f
+            # (np.ascontiguousarray on the dataclass would hash object
+            # pointers — unstable across materializations)
+            h.update(f"planes:{V.n_f}".encode())
+            V = V.planes
+        a = np.ascontiguousarray(V)
         h.update(str(a.shape).encode())
         h.update(str(a.dtype).encode())
         h.update(a.tobytes())

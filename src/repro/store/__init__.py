@@ -1,0 +1,34 @@
+"""repro.store — on-disk packed bit-plane dataset store.
+
+A dataset directory holds per-field-shard uint8 plane payloads in the
+normative ``(levels, kb, n_v)`` wire layout of docs/BITPLANE_FORMAT.md
+("On-disk storage" chapter), an exact-stats sidecar, and a checksummed
+``dataset.json`` manifest.  ``write_dataset`` ingests npy / synthetic /
+PLINK ``.bed`` sources with streaming field-sharded encodes;
+``DatasetReader`` serves memory-mapped plane views whose ``packed()``
+handle both distributed engines consume directly — campaigns load planes
+from disk and never run the host encoder.  CLI:
+``python -m repro.launch.dataset {encode,inspect,validate}`` and
+``python -m repro.launch.similarity --dataset``.
+"""
+from repro.store.bed import bed_paths, read_bed  # noqa: F401
+from repro.store.format import (  # noqa: F401
+    FORMAT_NAME,
+    FORMAT_VERSION,
+    MANIFEST_NAME,
+    read_manifest,
+)
+from repro.store.reader import DatasetReader  # noqa: F401
+from repro.store.writer import validate_leveled, write_dataset  # noqa: F401
+
+__all__ = [
+    "DatasetReader",
+    "write_dataset",
+    "validate_leveled",
+    "read_bed",
+    "bed_paths",
+    "read_manifest",
+    "FORMAT_NAME",
+    "FORMAT_VERSION",
+    "MANIFEST_NAME",
+]

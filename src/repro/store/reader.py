@@ -1,0 +1,141 @@
+"""Dataset reader: memory-mapped plane views + zero-encode campaign loading.
+
+``DatasetReader`` serves the on-disk payloads three ways:
+
+* ``shard(r)``  — one field shard ``(levels, kbs, n_v)``, an ``np.memmap``
+  byte-range view by default (no copy, no decode): disk shard ``r`` IS the
+  ``shard_planes_fields(planes, r, n_shards)`` range.
+* ``planes()``  — the full ``(levels, kb, n_v)`` payload; zero-copy mmap
+  for single-shard datasets, a byte-axis concatenation otherwise.
+* ``packed()``  — a ``PackedPlanes`` handle the distributed engines accept
+  directly: the campaign goes mmap -> ring with NO host-side encode
+  (asserted via an encoder-call counter in tests/test_store.py).
+
+``validate()`` recomputes the sha256 payload checksum, the stats sidecar
+and every shape against the manifest.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.kernels.mgemm_levels import PackedPlanes
+from repro.store.format import payload_checksum, read_manifest
+from repro.store.writer import POPCOUNT
+
+__all__ = ["DatasetReader"]
+
+
+class DatasetReader:
+    """Read-side handle on one dataset directory (manifest parsed eagerly,
+    payloads mapped lazily)."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self.manifest = read_manifest(path)
+
+    # -- manifest accessors -------------------------------------------------
+
+    @property
+    def levels(self) -> int:
+        return self.manifest["levels"]
+
+    @property
+    def n_f(self) -> int:
+        return self.manifest["n_f"]
+
+    @property
+    def n_v(self) -> int:
+        return self.manifest["n_v"]
+
+    @property
+    def kb(self) -> int:
+        return self.manifest["kb"]
+
+    @property
+    def n_shards(self) -> int:
+        return self.manifest["n_shards"]
+
+    # -- payload views ------------------------------------------------------
+
+    def shard(self, rank: int, *, mmap: bool = True) -> np.ndarray:
+        """(levels, kb/n_shards, n_v) uint8 — field shard ``rank``."""
+        if not 0 <= rank < self.n_shards:
+            raise ValueError(f"shard {rank} out of range [0, {self.n_shards})")
+        target = os.path.join(self.path, self.manifest["shard_files"][rank])
+        arr = np.load(target, mmap_mode="r" if mmap else None)
+        want = (self.levels, self.kb // self.n_shards, self.n_v)
+        if arr.shape != want or arr.dtype != np.uint8:
+            raise ValueError(
+                f"{target}: payload is {arr.dtype}{arr.shape}, manifest says "
+                f"uint8{want}"
+            )
+        return arr
+
+    def planes(self, *, mmap: bool = True) -> np.ndarray:
+        """Full (levels, kb, n_v) payload (mmap view when single-shard)."""
+        shards = [self.shard(r, mmap=mmap) for r in range(self.n_shards)]
+        if len(shards) == 1:
+            return shards[0]
+        return np.concatenate(shards, axis=1)
+
+    def packed(self, *, mmap: bool = True) -> PackedPlanes:
+        """The engine-facing handle: planes + true field count + origin.
+
+        The origin block carries the manifest's path/checksum/provenance
+        with the payload, so result manifests can record the exact dataset
+        bytes a campaign ran on without re-reading ``dataset.json``."""
+        return PackedPlanes(
+            planes=self.planes(mmap=mmap),
+            n_f=self.n_f,
+            origin={
+                "path": self.path,
+                "checksum": self.manifest["checksum"],
+                "levels": self.levels,
+                "source": self.manifest.get("source", {}),
+            },
+        )
+
+    def stats(self) -> np.ndarray:
+        """(levels, n_v) int64 per-plane popcounts (exact-stats sidecar).
+
+        ``stats().sum(axis=0)`` is the per-vector column sum of the encoded
+        matrix — the Czekanowski denominator stat.
+        """
+        target = os.path.join(self.path, self.manifest["stats_file"])
+        arr = np.load(target)
+        want = (self.levels, self.n_v)
+        if arr.shape != want:
+            raise ValueError(
+                f"{target}: stats shape {arr.shape}, manifest says {want}"
+            )
+        return arr
+
+    # -- integrity ----------------------------------------------------------
+
+    def validate(self) -> dict:
+        """Recompute checksum + stats from the payloads; raise on mismatch.
+
+        One pass over the shards feeds both the sha256 and the popcount
+        accumulator (mirroring the writer), so validation reads each shard
+        from disk once.  Returns the manifest on success.
+        """
+        stats = np.zeros((self.levels, self.n_v), np.int64)
+
+        def scan():
+            for r in range(self.n_shards):
+                shard = self.shard(r)
+                np.add(stats, POPCOUNT[shard].sum(axis=1, dtype=np.int64),
+                       out=stats)
+                yield shard
+
+        got = payload_checksum(scan())
+        want = self.manifest["checksum"]
+        if got != want:
+            raise ValueError(
+                f"{self.path}: payload checksum {got} != manifest {want}"
+            )
+        if not np.array_equal(stats, self.stats()):
+            raise ValueError(f"{self.path}: stats sidecar does not match payload")
+        return self.manifest

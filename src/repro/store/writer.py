@@ -1,0 +1,105 @@
+"""Dataset writer: streaming, field-sharded encode of a value matrix.
+
+The writer never materializes the full plane array: fields are processed
+one shard at a time — slice ``[8·r·kbs, 8·(r+1)·kbs)`` of V is encoded with
+``encode_bitplanes_np`` and written as ``planes.shard<r>.npy`` — so peak
+extra memory is one shard's payload.  Because shard boundaries are
+byte-aligned (multiples of 8 fields), the per-shard encode is byte-identical
+to the corresponding ``shard_planes_fields`` range of a whole-matrix encode
+(property-tested in tests/test_store.py).
+
+Input guard: the plane decomposition is exact ONLY for integer data in
+``[0, levels]``, so the writer validates before encoding and fails naming
+the offending stat — a ``levels=1`` store (binary / Sorenson data) therefore
+admits exactly {0, 1} matrices, whose single plane's popcounts equal the
+column sums.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+
+import numpy as np
+
+from repro.kernels.mgemm_levels import encode_bitplanes_np
+from repro.store.format import (
+    FORMAT_NAME,
+    FORMAT_VERSION,
+    STATS_NAME,
+    shard_name,
+    write_manifest,
+)
+
+__all__ = ["write_dataset", "validate_leveled"]
+
+#: popcount lookup: POPCOUNT[byte] = number of set bits
+POPCOUNT = np.array([bin(i).count("1") for i in range(256)], np.uint8)
+
+
+def validate_leveled(V: np.ndarray, levels: int, *, what: str = "input") -> None:
+    """Raise ValueError naming the offending stat unless V is integer-valued
+    in [0, levels] — the exactness domain of the plane decomposition (the
+    shared ``repro.core.validate`` gate with the levels check layered on)."""
+    if not (isinstance(levels, int) and levels >= 1):
+        raise ValueError(f"levels must be a positive int, got {levels!r}")
+    from repro.core.validate import validate_matrix
+
+    validate_matrix(V, what=what, levels=levels)
+
+
+def write_dataset(
+    path: str,
+    V: np.ndarray,
+    *,
+    levels: int,
+    n_shards: int = 1,
+    source: dict = None,
+) -> dict:
+    """Encode ``V`` (n_f, n_v) into a plane dataset at ``path``.
+
+    ``n_shards`` splits the field (byte) axis into equal on-disk shards —
+    each one the exact "pf" byte range a rank of an ``n_pf = n_shards``
+    campaign ring-carries.  ``source`` is free-form provenance recorded in
+    the manifest (kind/path/seed/...).  Returns the manifest dict.
+    """
+    V = np.asarray(V)
+    validate_leveled(V, levels, what="write_dataset")
+    if not (isinstance(n_shards, int) and n_shards >= 1):
+        raise ValueError(f"n_shards must be a positive int, got {n_shards!r}")
+    n_f, n_v = V.shape
+    # total byte-axis length: ceil(n_f / 8) rounded up so shards are equal
+    kbs = -(-n_f // (8 * n_shards))
+    kb = kbs * n_shards
+    os.makedirs(path, exist_ok=True)
+
+    stats = np.zeros((levels, n_v), np.int64)
+    h = hashlib.sha256()
+    files = []
+    for r in range(n_shards):
+        f0, f1 = 8 * r * kbs, min(8 * (r + 1) * kbs, n_f)
+        chunk = V[f0:f1] if f1 > f0 else V[:0]
+        P = encode_bitplanes_np(chunk, levels)  # (levels, <=kbs, n_v)
+        if P.shape[1] < kbs:  # tail shard: pad with inert zero bytes
+            P = np.pad(P, ((0, 0), (0, kbs - P.shape[1]), (0, 0)))
+        stats += POPCOUNT[P].sum(axis=1, dtype=np.int64)
+        fname = shard_name(r)
+        np.save(os.path.join(path, fname), P)
+        h.update(np.ascontiguousarray(P).tobytes())
+        files.append(fname)
+    np.save(os.path.join(path, STATS_NAME), stats)
+
+    manifest = {
+        "format": FORMAT_NAME,
+        "format_version": FORMAT_VERSION,
+        "levels": int(levels),
+        "n_f": int(n_f),
+        "n_v": int(n_v),
+        "kb": int(kb),
+        "n_shards": int(n_shards),
+        "shard_files": files,
+        "stats_file": STATS_NAME,
+        "checksum": "sha256:" + h.hexdigest(),
+        "source": source or {"kind": "array"},
+    }
+    write_manifest(path, manifest)
+    return manifest

@@ -221,6 +221,65 @@ def check_engine_parity(V):
     print("  ccc pallas fused epilogue: OK")
 
 
+def check_plane_store(V):
+    """Campaigns loaded from a repro.store dataset (pre-encoded packed
+    planes, mmap -> ring) must be bit-identical to the in-memory matrix on
+    BOTH engines across decompositions — including byte-axis "pf" sharding
+    of the on-disk field shards — and must never run the host encoder."""
+    import tempfile
+
+    import repro.kernels.mgemm_levels as mgemm_levels
+    from repro.api import InputSpec, SimilarityEngine, SimilarityRequest
+    from repro.store import DatasetReader, write_dataset
+
+    with tempfile.TemporaryDirectory() as tmp:
+        write_dataset(tmp, V, levels=15, n_shards=2)
+        DatasetReader(tmp).validate()
+        engine = SimilarityEngine()
+        spec = InputSpec(source="planes", path=tmp)
+
+        calls = {"n": 0}
+        orig = mgemm_levels.encode_bitplanes_np
+
+        def counted(*args, **kwargs):
+            calls["n"] += 1
+            return orig(*args, **kwargs)
+
+        mgemm_levels.encode_bitplanes_np = counted
+        try:
+            for way in (2, 3):
+                ref = None
+                for n_pf, n_pv, n_pr in [(1, 2, 1), (2, 2, 1), (1, 4, 1)]:
+                    base = SimilarityRequest(
+                        way=way, impl="levels", levels=15,
+                        n_pf=n_pf, n_pv=n_pv, n_pr=n_pr,
+                    )
+                    before = calls["n"]
+                    want = engine.run(base, V).checksum()
+                    assert calls["n"] > before, "in-memory path should encode"
+                    before = calls["n"]
+                    got = engine.run(
+                        SimilarityRequest(
+                            way=way, impl="levels", levels=15,
+                            n_pf=n_pf, n_pv=n_pv, n_pr=n_pr, input=spec,
+                        )
+                    ).checksum()
+                    assert calls["n"] == before, (
+                        f"{way}-way plane-store campaign ran the host encoder"
+                    )
+                    assert got == want, (
+                        f"{way}-way store checksum != in-memory "
+                        f"({n_pf},{n_pv},{n_pr})"
+                    )
+                    if ref is None:
+                        ref = got
+                    assert got == ref, f"{way}-way store checksum varies"
+                    print(f"  {way}-way store pf={n_pf} pv={n_pv} pr={n_pr}: "
+                          f"OK (zero-encode)")
+        finally:
+            mgemm_levels.encode_bitplanes_np = orig
+
+
 def main():
     V = random_integer_vectors(N_F, N_V, max_value=15, seed=42)
     print("2-way decomposition invariance:")
@@ -229,6 +288,8 @@ def main():
     check_3way(V, czek3_metric_np(V).astype(np.float32))
     print("unified engine parity (api redesign contract):")
     check_engine_parity(V)
+    print("plane-store zero-encode campaigns (repro.store):")
+    check_plane_store(V)
     print("ALL DISTRIBUTED CHECKS PASSED")
 
 

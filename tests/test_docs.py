@@ -65,9 +65,11 @@ def test_format_spec_names_real_code():
     from repro.core.twoway import _twoway_program  # noqa: F401
     from repro.kernels.czek3.kernel import threeway_batch_levels_pallas  # noqa: F401
     from repro.kernels.mgemm_levels import (  # noqa: F401
+        PackedPlanes,
         decode_bitplanes,
         encode_bitplanes,
         encode_bitplanes_np,
+        pad_planes,
         shard_planes_fields,
         slice_planes_vectors,
         values_from_planes,
@@ -76,6 +78,38 @@ def test_format_spec_names_real_code():
         _plane_matmuls,
         _unpack_plane_tile,
     )
+
+
+def test_store_spec_names_real_code():
+    """The "On-disk storage" chapter's named entry points must exist, and
+    the spec constants it documents must match the code."""
+    from repro.store import (  # noqa: F401
+        DatasetReader,
+        FORMAT_NAME,
+        FORMAT_VERSION,
+        MANIFEST_NAME,
+        bed_paths,
+        read_bed,
+        read_manifest,
+        validate_leveled,
+        write_dataset,
+    )
+
+    assert FORMAT_NAME == "repro-bitplane-dataset"
+    assert MANIFEST_NAME == "dataset.json"
+    # the dataset CLI the README quickstart drives
+    from repro.launch.dataset import main  # noqa: F401
+
+    with open(os.path.join(REPO, "docs", "BITPLANE_FORMAT.md")) as f:
+        spec = f.read()
+    for name in ("On-disk storage", "dataset.json", "stats.npy",
+                 "shard_planes_fields", "pad_planes", "sha256",
+                 "Missing-genotype"):
+        assert name in spec, f"BITPLANE_FORMAT.md lost its {name!r} section"
+    with open(os.path.join(REPO, "README.md")) as f:
+        readme = f.read()
+    assert "repro.launch.dataset" in readme, "README lost the dataset quickstart"
+    assert "--dataset" in readme
 
 
 def test_architecture_path_matrix_matches_executor():

@@ -1,0 +1,421 @@
+"""repro.store: on-disk packed bit-plane dataset store.
+
+Pins the normative on-disk contract (docs/BITPLANE_FORMAT.md "On-disk
+storage"):
+
+* write -> read round-trips byte-identically to ``encode_bitplanes_np`` of
+  the full matrix (streaming field-sharded writes included), for
+  non-multiple-of-8 field AND vector counts;
+* memory-mapped views equal eager loads, and a disk field shard IS the
+  ``shard_planes_fields`` byte range;
+* the exact-stats sidecar holds per-plane popcounts whose sum is the
+  column-sum denominator stat; ``levels=1`` (binary / Sorenson) datasets
+  round-trip as a single plane with stats == popcounts;
+* PLINK ``.bed`` ingest decodes a hand-built fixture to the hand-decoded
+  dosage matrix under every missing-genotype policy;
+* manifest round-trip carries provenance into ``SimilarityResult`` saves;
+* campaigns loaded via ``InputSpec(source="planes")`` are bit-identical to
+  the in-memory matrix on BOTH engines and provably never call the host
+  encoder (counter monkeypatch); multi-device decompositions are covered
+  in tests/distributed_harness.py.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+import repro.kernels.mgemm_levels as mgemm_levels
+from repro.api import InputSpec, SimilarityEngine, SimilarityRequest, SimilarityResult
+from repro.core.synthetic import random_integer_vectors
+from repro.kernels.mgemm_levels import (
+    PackedPlanes,
+    encode_bitplanes_np,
+    pad_planes,
+    shard_planes_fields,
+)
+from repro.store import (
+    DatasetReader,
+    read_bed,
+    read_manifest,
+    write_dataset,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def _matrix(n_f, n_v, levels, seed=0):
+    return random_integer_vectors(n_f, n_v, max_value=levels, seed=seed)
+
+
+# -- write -> read == encode of the full matrix -----------------------------
+
+
+def _check_roundtrip(tmp_path, n_f, n_v, levels, n_shards, seed=0):
+    V = _matrix(n_f, n_v, levels, seed)
+    path = os.path.join(str(tmp_path), f"ds_{n_f}x{n_v}_{levels}_{n_shards}")
+    manifest = write_dataset(path, V, levels=levels, n_shards=n_shards)
+    r = DatasetReader(path)
+    full = encode_bitplanes_np(V, levels, field_align=n_shards)
+    assert np.array_equal(r.planes(), full)
+    assert manifest["kb"] == full.shape[1]
+    # mmap view == eager load; shards really are byte-range memmaps
+    assert np.array_equal(r.planes(mmap=True), r.planes(mmap=False))
+    assert isinstance(r.shard(0, mmap=True), np.memmap)
+    # disk field shard == the engines' "pf" byte range
+    for rank in range(n_shards):
+        assert np.array_equal(
+            r.shard(rank), shard_planes_fields(full, rank, n_shards)
+        ), (rank, n_shards)
+    # exact-stats sidecar: popcounts per plane; summed -> column sums
+    stats = r.stats()
+    assert stats.shape == (levels, n_v)
+    assert np.array_equal(stats.sum(axis=0), V.sum(axis=0).astype(np.int64))
+    r.validate()
+
+
+@pytest.mark.parametrize(
+    "n_f,n_v,levels,n_shards",
+    [
+        (64, 16, 2, 1),
+        (64, 16, 2, 2),
+        (29, 10, 2, 1),   # non-multiple-of-8 fields
+        (29, 10, 2, 2),   # ... with a padded tail shard
+        (13, 7, 3, 4),    # shards wider than the data
+        (40, 9, 1, 1),    # binary (Sorenson)
+        (8, 3, 15, 1),    # deep level stack
+    ],
+)
+def test_write_read_roundtrip(tmp_path, n_f, n_v, levels, n_shards):
+    _check_roundtrip(tmp_path, n_f, n_v, levels, n_shards)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n_f=st.integers(1, 70),
+        n_v=st.integers(1, 12),
+        levels=st.integers(1, 4),
+        n_shards=st.integers(1, 3),
+        seed=st.integers(0, 5),
+    )
+    def test_write_read_roundtrip_property(tmp_path_factory, n_f, n_v,
+                                           levels, n_shards, seed):
+        _check_roundtrip(tmp_path_factory.mktemp("ds"), n_f, n_v, levels,
+                         n_shards, seed)
+
+
+# -- writer guards ----------------------------------------------------------
+
+
+def test_writer_rejects_out_of_range(tmp_path):
+    V = _matrix(16, 4, 3)
+    with pytest.raises(ValueError, match="max value 3.* exceeds levels=2"):
+        write_dataset(str(tmp_path / "bad"), V, levels=2)
+
+
+def test_writer_rejects_non_integer_and_negative(tmp_path):
+    with pytest.raises(ValueError, match="non-integer"):
+        write_dataset(str(tmp_path / "f"), np.full((4, 2), 0.5), levels=1)
+    with pytest.raises(ValueError, match="min value -1"):
+        write_dataset(str(tmp_path / "n"), np.full((4, 2), -1), levels=1)
+
+
+def test_levels1_binary_guard_and_popcount_stats(tmp_path):
+    """levels=1 (Sorenson use case): store admits exactly {0,1} matrices and
+    the single plane's popcounts ARE the per-vector stats — the identity the
+    ROADMAP popcount-kernel item will build on."""
+    with pytest.raises(ValueError, match="exceeds levels=1"):
+        write_dataset(str(tmp_path / "bad1"), _matrix(16, 4, 2), levels=1)
+    V = _matrix(21, 6, 1, seed=3)
+    path = str(tmp_path / "bin")
+    write_dataset(path, V, levels=1)
+    r = DatasetReader(path)
+    assert r.levels == 1 and r.planes().shape[0] == 1
+    stats = r.stats()
+    assert np.array_equal(stats[0], V.sum(axis=0).astype(np.int64))
+    assert np.array_equal(stats[0], stats.sum(axis=0))  # stats == popcounts
+    r.validate()
+
+
+# -- validate() catches corruption ------------------------------------------
+
+
+def test_validate_catches_payload_corruption(tmp_path):
+    path = str(tmp_path / "ds")
+    manifest = write_dataset(path, _matrix(24, 6, 2), levels=2)
+    shard = os.path.join(path, manifest["shard_files"][0])
+    P = np.load(shard)
+    P[0, 0, 0] ^= 1
+    np.save(shard, P)
+    with pytest.raises(ValueError, match="checksum"):
+        DatasetReader(path).validate()
+
+
+def test_manifest_structural_validation(tmp_path):
+    path = str(tmp_path / "ds")
+    write_dataset(path, _matrix(24, 6, 2), levels=2)
+    with open(os.path.join(path, "dataset.json")) as f:
+        m = json.load(f)
+    m["kb"] = 7  # not divisible by n_shards is fine for 1; break n_f bound
+    m["n_f"] = 99
+    with open(os.path.join(path, "dataset.json"), "w") as f:
+        json.dump(m, f)
+    with pytest.raises(ValueError, match="n_f=99"):
+        read_manifest(path)
+    with pytest.raises(ValueError, match="not a dataset directory"):
+        read_manifest(str(tmp_path / "nowhere"))
+
+
+# -- manifest round-trip with provenance ------------------------------------
+
+
+def test_manifest_provenance_roundtrip(tmp_path):
+    V = _matrix(32, 8, 2, seed=9)
+    ds = str(tmp_path / "ds")
+    write_dataset(ds, V, levels=2,
+                  source={"kind": "npy", "path": "/data/cohort.npy"})
+    m = read_manifest(ds)
+    assert m["source"] == {"kind": "npy", "path": "/data/cohort.npy"}
+    # the campaign result's manifest records the dataset provenance...
+    request = SimilarityRequest(way=2, impl="levels", levels=2,
+                                input=InputSpec(source="planes", path=ds))
+    result = SimilarityEngine().run(request)
+    assert result.meta["dataset"]["checksum"] == m["checksum"]
+    out = str(tmp_path / "result")
+    saved = result.save(out)
+    assert saved["dataset"]["path"] == ds
+    # ... and provenance survives the result load round-trip
+    loaded = SimilarityResult.load(out)
+    assert loaded.meta["dataset"]["checksum"] == m["checksum"]
+    assert loaded.checksum() == result.checksum()
+
+
+# -- PLINK .bed ingest ------------------------------------------------------
+
+_BED_DOSAGES = np.array([  # 3 SNPs x 5 samples; 255 = missing
+    [2, 1, 0, 0, 1],
+    [0, 0, 2, 1, 255],
+    [1, 1, 1, 2, 0],
+])
+
+
+def _write_bed_fixture(tmp_path):
+    """Hand-pack the PLINK 2-bit codes for _BED_DOSAGES."""
+    code_of = {2: 0b00, 1: 0b10, 0: 0b11, 255: 0b01}
+    payload = b""
+    for snp in _BED_DOSAGES:
+        for b0 in range(0, len(snp), 4):
+            byte = 0
+            for i, s in enumerate(snp[b0:b0 + 4]):
+                byte |= code_of[int(s)] << (2 * i)
+            payload += bytes([byte])
+    prefix = os.path.join(str(tmp_path), "toy")
+    with open(prefix + ".bed", "wb") as f:
+        f.write(b"\x6c\x1b\x01" + payload)
+    with open(prefix + ".bim", "w") as f:
+        f.write("".join(f"1 snp{i} 0 {i} A G\n" for i in range(3)))
+    with open(prefix + ".fam", "w") as f:
+        f.write("".join(f"f{i} i{i} 0 0 0 -9\n" for i in range(5)))
+    return prefix
+
+
+def test_bed_parity_and_missing_policies(tmp_path):
+    prefix = _write_bed_fixture(tmp_path)
+    with pytest.raises(ValueError, match="missing genotype"):
+        read_bed(prefix)
+    V, info = read_bed(prefix, missing="zero")
+    assert np.array_equal(V, np.where(_BED_DOSAGES == 255, 0, _BED_DOSAGES).T)
+    assert info["n_missing"] == 1 and info["missing_policy"] == "zero"
+    Vd, infod = read_bed(prefix, missing="drop")
+    assert np.array_equal(Vd, _BED_DOSAGES[[0, 2]].T)
+    assert infod["dropped_snps"] == 1
+    Vs, _ = read_bed(prefix, missing="zero", vectors="samples")
+    assert np.array_equal(Vs, np.where(_BED_DOSAGES == 255, 0, _BED_DOSAGES))
+    # .bed -> store -> campaign equals the same campaign on the decoded matrix
+    from dataclasses import replace
+
+    ds = str(tmp_path / "ds")
+    write_dataset(ds, V, levels=2, n_shards=1)
+    request = SimilarityRequest(way=2, impl="levels", levels=2)
+    engine = SimilarityEngine()
+    assert (engine.run(request, V).checksum()
+            == engine.run(replace(request,
+                                  input=InputSpec(source="planes", path=ds))
+                          ).checksum())
+
+
+def test_bed_rejects_bad_headers(tmp_path):
+    prefix = _write_bed_fixture(tmp_path)
+    with open(prefix + ".bed", "r+b") as f:
+        f.seek(2)
+        f.write(b"\x00")  # individual-major
+    with pytest.raises(ValueError, match="individual-major"):
+        read_bed(prefix, missing="zero")
+    with open(prefix + ".bed", "r+b") as f:
+        f.write(b"\x00\x00")
+    with pytest.raises(ValueError, match="bad magic"):
+        read_bed(prefix, missing="zero")
+    with open(prefix + ".bed", "wb") as f:
+        f.write(b"\x6c\x1b")  # magic only, no mode byte
+    with pytest.raises(ValueError, match="truncated header"):
+        read_bed(prefix, missing="zero")
+    os.remove(prefix + ".fam")
+    with pytest.raises(ValueError, match="incomplete"):
+        read_bed(prefix, missing="zero")
+
+
+def test_bed_input_spec_materializes_dosages(tmp_path):
+    prefix = _write_bed_fixture(tmp_path)
+    V = InputSpec(source="bed", path=prefix, missing="zero").materialize()
+    assert V.shape == (5, 3) and V.max() == 2
+
+
+# -- zero-encode campaign loading (acceptance criterion) --------------------
+
+
+def _counting_encoder(monkeypatch):
+    calls = {"n": 0}
+    orig = mgemm_levels.encode_bitplanes_np
+
+    def counted(*args, **kwargs):
+        calls["n"] += 1
+        return orig(*args, **kwargs)
+
+    monkeypatch.setattr(mgemm_levels, "encode_bitplanes_np", counted)
+    return calls
+
+
+@pytest.mark.parametrize("way,impl", [
+    (2, "levels"), (2, "levels_xla"), (3, "levels"), (3, "levels_xla"),
+])
+def test_planes_campaign_parity_and_zero_encode(tmp_path, monkeypatch,
+                                                way, impl):
+    """source='planes' checksums == in-memory checksums on both engines,
+    and the pre-encoded path never calls the host encoder."""
+    V = _matrix(29, 12, 2, seed=11)  # non-multiple-of-8 fields
+    ds = str(tmp_path / "ds")
+    write_dataset(ds, V, levels=2)
+    engine = SimilarityEngine()
+    ref = engine.run(
+        SimilarityRequest(way=way, impl=impl, levels=2), V
+    ).checksum()
+    calls = _counting_encoder(monkeypatch)
+    got = engine.run(SimilarityRequest(
+        way=way, impl=impl, levels=2,
+        input=InputSpec(source="planes", path=ds),
+    ))
+    assert got.checksum() == ref
+    assert calls["n"] == 0, "pre-encoded campaign ran the host encoder"
+    # sanity: the counter DOES see the in-memory encode
+    engine.run(SimilarityRequest(way=way, impl=impl, levels=2), V)
+    assert calls["n"] > 0
+
+
+def test_planes_input_requires_plane_path(tmp_path):
+    ds = str(tmp_path / "ds")
+    write_dataset(ds, _matrix(16, 6, 2), levels=2)
+    engine = SimilarityEngine()
+    spec = InputSpec(source="planes", path=ds)
+    with pytest.raises(ValueError, match="impl="):
+        engine.run(SimilarityRequest(way=2, impl="xla", input=spec))
+    with pytest.raises(ValueError, match="encoding='none'"):
+        engine.run(SimilarityRequest(way=2, impl="levels", levels=2,
+                                     encoding="none", input=spec))
+    with pytest.raises(ValueError, match="levels=3"):
+        engine.run(SimilarityRequest(way=2, impl="levels", levels=3,
+                                     input=spec))
+
+
+def test_service_cache_fingerprints_planes_input(tmp_path):
+    """The serving cache keys pre-encoded input on payload BYTES (a naive
+    ndarray coercion of the PackedPlanes dataclass would hash object
+    pointers and never hit)."""
+    from repro.serve.engine import SimilarityService
+
+    ds = str(tmp_path / "ds")
+    write_dataset(ds, _matrix(24, 8, 2, seed=1), levels=2)
+    svc = SimilarityService()
+    request = SimilarityRequest(way=2, impl="levels", levels=2,
+                                input=InputSpec(source="planes", path=ds))
+    first = svc.submit(request)
+    again = svc.submit(request)  # fresh materialize -> same payload bytes
+    assert svc.hits == 1 and svc.misses == 1
+    assert first.checksum() == again.checksum()
+    # provenance travels on the PackedPlanes handle, so even the serving
+    # path (which materializes BEFORE engine.run) records the dataset
+    assert first.meta["dataset"]["checksum"] == read_manifest(ds)["checksum"]
+
+
+# -- PackedPlanes / pad_planes unit coverage --------------------------------
+
+
+def test_packed_planes_validation():
+    P = encode_bitplanes_np(_matrix(16, 4, 2), 2)
+    with pytest.raises(ValueError, match="uint8"):
+        PackedPlanes(P.astype(np.int16), n_f=16)
+    with pytest.raises(ValueError, match="n_f"):
+        PackedPlanes(P, n_f=99)
+    with pytest.raises(ValueError, match="3-D|levels"):
+        PackedPlanes(P[0], n_f=16)
+    # identity semantics (eq=False): comparing/hashing handles must not
+    # trip over the ndarray field
+    a, b = PackedPlanes(P, n_f=16), PackedPlanes(P.copy(), n_f=16)
+    assert a == a and a != b and isinstance(hash(a), int)
+
+
+def test_pad_planes_commutes_with_encode():
+    V = _matrix(13, 5, 2, seed=2)
+    P = encode_bitplanes_np(V, 2)
+    got = pad_planes(P, byte_align=2, n_v=8)
+    want = encode_bitplanes_np(np.pad(V, ((0, 0), (0, 3))), 2, field_align=2)
+    assert np.array_equal(got, want)
+    with pytest.raises(ValueError, match="shrink"):
+        pad_planes(P, n_v=3)
+
+
+# -- InputSpec(source="npy") validation (satellite) -------------------------
+
+
+def _save_npy(tmp_path, name, arr):
+    path = os.path.join(str(tmp_path), name)
+    np.save(path, arr)
+    return path
+
+
+def test_npy_validation_names_offending_stat(tmp_path):
+    ok = _save_npy(tmp_path, "ok.npy", _matrix(16, 4, 2))
+    assert InputSpec(source="npy", path=ok).materialize().shape == (16, 4)
+    bad_shape = _save_npy(tmp_path, "s.npy", np.zeros(7))
+    with pytest.raises(ValueError, match=r"2-D .*got shape \(7,\)"):
+        InputSpec(source="npy", path=bad_shape).materialize()
+    nonfinite = _save_npy(tmp_path, "nf.npy",
+                          np.array([[1.0, np.nan], [np.inf, 0.0]]))
+    with pytest.raises(ValueError, match="2 non-finite"):
+        InputSpec(source="npy", path=nonfinite).materialize()
+    negative = _save_npy(tmp_path, "neg.npy", np.array([[1, -3], [0, 2]]))
+    with pytest.raises(ValueError, match="min value -3"):
+        InputSpec(source="npy", path=negative).materialize()
+    huge = _save_npy(tmp_path, "huge.npy",
+                     np.full((64, 4), 2 ** 20, np.int64))
+    with pytest.raises(ValueError, match="overflows exact fp32"):
+        InputSpec(source="npy", path=huge).materialize()
+    empty = _save_npy(tmp_path, "e.npy", np.zeros((0, 4)))
+    with pytest.raises(ValueError, match="empty"):
+        InputSpec(source="npy", path=empty).materialize()
+    # bool matrices (binary/Sorenson) are legal input and store as levels=1
+    boolean = _save_npy(tmp_path, "bool.npy", _matrix(16, 4, 1).astype(bool))
+    Vb = InputSpec(source="npy", path=boolean).materialize()
+    assert Vb.dtype == np.bool_
+    write_dataset(str(tmp_path / "bool_ds"), Vb, levels=1)
+    DatasetReader(str(tmp_path / "bool_ds")).validate()
+    # sparse large-n_f matrices pass the ACTUAL-column-sum overflow gate
+    sparse = np.zeros((100_000, 2), np.int32)
+    sparse[:5] = 15
+    ok_sparse = _save_npy(tmp_path, "sparse.npy", sparse)
+    assert InputSpec(source="npy", path=ok_sparse).materialize().shape[0] == 100_000
