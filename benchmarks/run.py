@@ -32,10 +32,14 @@ BENCH_KERNELS = os.path.join(
 #: perf-trajectory file cannot silently rot.  "host_encode"/"store_load"
 #: are the ingest entries (repro.store): matrix -> campaign-ready packed
 #: planes via the host encoder vs the on-disk dataset store.
+#: "stream"/"stream_seq" are the out-of-core overlap entries
+#: (repro.stream): the double-buffered prefetch pipeline vs the same
+#: chunks staged and contracted serially.
 KNOWN_IMPLS = {
     "xla", "levels_xla", "levels_xla_hoisted", "levels",
     "pallas", "pallas_fused", "fused-levels",
     "host_encode", "store_load",
+    "stream", "stream_seq",
 }
 _ENTRY_NUMBER_KEYS = ("seconds", "gib_per_s", "comparisons_per_s")
 _ENTRY_INT_KEYS = ("m", "k", "n")
@@ -82,15 +86,26 @@ def write_bench_kernels(shapes=None, out: str = BENCH_KERNELS,
                         max_value: int = 3) -> str:
     import jax
 
-    from benchmarks.bench_kernel import SWEEP_SHAPES, ingest_entries, kernel_sweep
+    from benchmarks.bench_kernel import (
+        INGEST_SHAPES,
+        STREAM_SHAPE,
+        SWEEP_SHAPES,
+        ingest_entries,
+        kernel_sweep,
+        stream_entries,
+    )
 
     payload = {
         "backend": jax.default_backend(),
         "note": "pallas* entries run in interpret mode off-TPU; "
                 "host_encode/store_load are ingest entries "
-                "(comparisons_per_s = matrix elements ingested per second)",
+                "(comparisons_per_s = matrix elements ingested per second); "
+                "stream/stream_seq are out-of-core overlap entries with "
+                "staging floored to bench_kernel.STREAM_MODEL_MIB_S",
         "entries": (kernel_sweep(shapes or SWEEP_SHAPES, max_value=max_value)
-                    + ingest_entries(shapes or SWEEP_SHAPES,
+                    + ingest_entries(shapes or INGEST_SHAPES,
+                                     max_value=max_value)
+                    + stream_entries(shapes[-1] if shapes else STREAM_SHAPE,
                                      max_value=max_value)),
     }
     with open(out, "w") as f:

@@ -74,12 +74,18 @@ class SimilarityEngine:
     def run(self, request: SimilarityRequest, V=None) -> SimilarityResult:
         """Execute a campaign; ``V`` overrides the request's input spec.
 
-        ``V`` (or the materialized input) may be a value matrix or a
-        pre-encoded ``PackedPlanes`` payload — with a ``source="planes"``
-        input the campaign streams packed planes from the dataset store
-        straight into the engines (no host-side encode) and the result's
-        manifest records the dataset provenance (path + checksum)."""
+        ``V`` (or the materialized input) may be a value matrix, a
+        pre-encoded ``PackedPlanes`` payload, or a lazy ``ShardedPlanes``
+        handle — with a ``source="planes"`` input the campaign streams
+        packed planes from the dataset store straight into the engines (no
+        host-side encode) and the result's manifest records the dataset
+        provenance (path + checksum).  When the resolved ``streaming``
+        knob is "on" (multi-shard or budgeted datasets under "auto"), the
+        campaign runs the out-of-core ``repro.stream`` pipeline: the
+        payload never materializes in host memory beyond the double
+        buffers, and ``meta["stream"]`` records the chunk accounting."""
         from repro.kernels.mgemm_levels.planes import PackedPlanes
+        from repro.store.reader import ShardedPlanes
 
         spec = get_metric(request.metric)
         request.validate(n_devices=self._device_count(), metric_spec=spec)
@@ -87,13 +93,32 @@ class SimilarityEngine:
         if V is None:
             if request.input is None:
                 raise ValueError("no input: pass V or set request.input")
-            V = request.input.materialize()
+            if (request.input.source == "planes"
+                    and request.streaming != "off"):
+                # lazy handle: streaming eligibility resolves before any
+                # payload byte is read; non-streamed runs materialize below
+                from repro.store import DatasetReader
+
+                if not request.input.path:
+                    raise ValueError(
+                        "InputSpec(source='planes') needs a dataset path"
+                    )
+                V = DatasetReader(request.input.path).sharded()
+            else:
+                V = request.input.materialize()
             if request.input.source == "bed":
                 meta["dataset"] = {
                     "path": request.input.path,
                     "kind": "bed",
                     "missing": request.input.missing,
                 }
+        if isinstance(V, ShardedPlanes):
+            from repro.core.twoway import resolve_config
+
+            if resolve_config(request.to_comet_config(), V, spec).streaming \
+                    == "on":
+                return self._run_streamed(request, V, spec, meta)
+            V = V.materialize()  # in-memory PackedPlanes path below
         if isinstance(V, PackedPlanes):
             # provenance travels on the handle (DatasetReader.packed() fills
             # it from the manifest it already parsed), so it is recorded no
@@ -128,6 +153,48 @@ class SimilarityEngine:
             metric=request.metric,
             n_v=n_v,
             n_f=n_f,
+            outputs=outputs,
+            decomposition=(request.n_pf, request.n_pv, request.n_pr),
+            n_st=request.n_st,
+            stages=stages,
+            out_dtype=request.out_dtype,
+            seconds=seconds,
+            meta=meta,
+        )
+
+    def _run_streamed(self, request, sh, spec, meta) -> SimilarityResult:
+        """Out-of-core campaign over a lazy ``ShardedPlanes`` handle.
+
+        Dispatches to ``repro.stream``: chunked deferred-flush programs +
+        the cross-shard merge epilogue.  Results are bit-identical to the
+        in-memory engines; ``meta["stream"]`` records chunk/peak-host-bytes
+        accounting."""
+        from repro.stream import stream_threeway, stream_twoway
+
+        mesh = self._mesh_for(request)
+        cfg = request.to_comet_config()
+        stages = request.resolved_stages()
+        if sh.origin:
+            meta["dataset"] = sh.origin
+
+        t0 = time.perf_counter()
+        outputs, sinfo = [], None
+        if request.way == 2:
+            out, sinfo = stream_twoway(sh, mesh, cfg, metric=spec)
+            outputs = [out.pack() if request.packed else out]
+        else:
+            for s in stages:
+                out, sinfo = stream_threeway(sh, mesh, cfg, stage=s,
+                                             metric=spec)
+                outputs.append(out)
+        seconds = time.perf_counter() - t0
+        meta["stream"] = sinfo
+
+        return SimilarityResult(
+            way=request.way,
+            metric=request.metric,
+            n_v=sh.n_v,
+            n_f=sh.n_f,
             outputs=outputs,
             decomposition=(request.n_pf, request.n_pv, request.n_pr),
             n_st=request.n_st,

@@ -112,6 +112,17 @@ class SimilarityRequest:
     #: slot-buffer memory for small decompositions); values and checksum
     #: are unchanged
     packed: bool = False
+    #: out-of-core streaming over a ``repro.store`` dataset: "auto" streams
+    #: multi-shard (or host-budgeted) ``source="planes"`` inputs through
+    #: ``repro.stream``, "on" requires a store-backed input, "off" always
+    #: materializes in memory.  Streamed results are bit-identical
+    #: (checksum) to in-memory runs — see docs/BITPLANE_FORMAT.md
+    #: "Cross-shard merge".
+    streaming: str = "auto"
+    #: staging-buffer budget in bytes for the streamed pipeline (0 = one
+    #: disk shard per chunk); peak host payload memory stays at or below
+    #: this across the campaign
+    max_host_bytes: int = 0
     #: optional input description (run() can also take V directly)
     input: InputSpec = None
 
@@ -132,6 +143,7 @@ class SimilarityRequest:
             impl=self.impl, levels=self.levels,
             out_dtype=self.out_dtype, ring_dtype=self.ring_dtype,
             encoding=self.encoding, chunk=self.chunk,
+            streaming=self.streaming, max_host_bytes=self.max_host_bytes,
         )
 
     def with_decomposition(self, n_pf: int, n_pv: int, n_pr: int) -> "SimilarityRequest":
@@ -166,6 +178,22 @@ class SimilarityRequest:
             )
         if self.packed and self.way != 2:
             raise ValueError("packed triangular storage applies to 2-way only")
+        if self.streaming not in ("auto", "on", "off"):
+            raise ValueError(
+                f"streaming must be 'auto', 'on' or 'off', "
+                f"got {self.streaming!r}"
+            )
+        if not (isinstance(self.max_host_bytes, int) and self.max_host_bytes >= 0):
+            raise ValueError(
+                f"max_host_bytes must be a non-negative int, "
+                f"got {self.max_host_bytes!r}"
+            )
+        if self.streaming == "on" and self.input is not None \
+                and self.input.source != "planes":
+            raise ValueError(
+                "streaming='on' needs a store-backed dataset input "
+                "(source='planes')"
+            )
         if self.stages is not None:
             if self.way == 2:
                 raise ValueError("stages apply to 3-way requests only")

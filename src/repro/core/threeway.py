@@ -77,7 +77,8 @@ def _vol_rule_traced(own, bj, bk):
 
 def _item_metrics(
     pipe, left, right, s_p, s_l, s_r, j0, *, kind: ItemKind, L: int,
-    executor: TileExecutor, out_dtype, metric: MetricSpec = None
+    executor: TileExecutor, out_dtype, metric: MetricSpec = None,
+    deferred: bool = False,
 ):
     """Masked metric slice (L, m, m) for one work item.
 
@@ -85,6 +86,13 @@ def _item_metrics(
     packed uint8 bit-planes on the plane ring (docs/BITPLANE_FORMAT.md);
     s_*: (m,) per-vector stats (already psummed over pf); j0: traced
     pipeline offset.
+
+    ``deferred=True`` (streamed chunk programs, ``repro.stream``) stops
+    after the psum and returns the RAW fp32 numerator partials
+    ``(B, n2_pl, n2_pr, n2_lr)`` — shapes (L, m, m), (L, m), (L, m),
+    (m, m), zeros standing in when the metric needs no pair terms — so the
+    cross-shard merge epilogue can assemble and mask once per campaign
+    instead of once per chunk.
     """
     metric = metric or CZEKANOWSKI
     m = pipe.shape[-1]
@@ -110,6 +118,17 @@ def _item_metrics(
         n2_pl = n2_pr = n2_lr = None
         B = jax.lax.psum(B, "pf")
 
+    if deferred:
+        m_ = B.shape[-1]
+        zero_lm = jnp.zeros((L, m_), jnp.float32)
+        zero_mm = jnp.zeros((m_, m_), jnp.float32)
+        return (
+            B.astype(jnp.float32),
+            zero_lm if n2_pl is None else n2_pl.astype(jnp.float32),
+            zero_lm if n2_pr is None else n2_pr.astype(jnp.float32),
+            zero_mm if n2_lr is None else n2_lr.astype(jnp.float32),
+        )
+
     sp = jax.lax.dynamic_slice(s_p, (j0,), (L,))
     c3 = metric.assemble3(B, n2_pl, n2_pr, n2_lr, sp, s_l, s_r)
 
@@ -128,7 +147,7 @@ def _item_metrics(
 
 def _threeway_program(
     Vl, *, cfg: CometConfig, plan: ThreeWayPlan, stage: int, out_dtype,
-    metric: MetricSpec = None,
+    metric: MetricSpec = None, deferred: bool = False,
 ):
     """Per-device program. Vl: (n_f/n_pf, n_vp) values, or — on the plane
     ring (resolved ``encoding == "bitplane"``) — the rank's packed plane
@@ -136,7 +155,13 @@ def _threeway_program(
     ring-carry the packed payload itself (the same ``ppermute``s, 8 fields
     per byte per plane on the wire) and every pipeline slice is a
     byte-range view fed straight to the level-decomposed kernels — no
-    per-slice re-encode."""
+    per-slice re-encode.
+
+    ``deferred=True`` (streamed chunk programs): identical schedule and
+    ring, but every item stores its raw fp32 numerator partials — a
+    4-tuple of slot buffers — and the per-vector stat partial is returned
+    alongside, so ``repro.stream`` can accumulate across byte-axis chunks
+    and assemble once in the cross-shard merge epilogue."""
     metric = metric or CZEKANOWSKI
     planes = Vl.ndim == 3  # plane shards are 3-D, value shards 2-D
     n_pv, n_pr, n_st = cfg.n_pv, cfg.n_pr, cfg.n_st
@@ -144,7 +169,7 @@ def _threeway_program(
     assert m % (6 * n_st) == 0, "n_vp must divide 6*n_st"
     L = m // (6 * n_st)
     executor = TileExecutor(cfg=cfg, metric=metric, out_dtype=out_dtype,
-                            axis="pf")
+                            axis="pf", deferred=deferred)
     slots = plan.slots_per_rank
 
     pv = jax.lax.axis_index("pv")
@@ -158,7 +183,15 @@ def _threeway_program(
         s_own = jax.lax.psum(metric.stat(values_from_planes(Vl)), "pf")
     else:
         s_own = jax.lax.psum(metric.stat(Vl), "pf")
-    out0 = jnp.zeros((slots, L, m, m), out_dtype)
+    if deferred:
+        out0 = (
+            jnp.zeros((slots, L, m, m), jnp.float32),  # 3-way numerators
+            jnp.zeros((slots, L, m), jnp.float32),  # pipe x left pairs
+            jnp.zeros((slots, L, m), jnp.float32),  # pipe x right pairs
+            jnp.zeros((slots, m, m), jnp.float32),  # left x right pairs
+        )
+    else:
+        out0 = jnp.zeros((slots, L, m, m), out_dtype)
 
     def j0_of(idx):
         return L * (stage + n_st * idx)
@@ -170,6 +203,13 @@ def _threeway_program(
         """Conditionally compute a slice and store it at this rank's slot."""
         def do(o):
             c3 = thunk()
+            if deferred:  # c3 is the raw-partials 4-tuple
+                return tuple(
+                    jax.lax.dynamic_update_slice(
+                        oo, cc[None], (slot_of(sb),) + (0,) * cc.ndim
+                    )
+                    for oo, cc in zip(o, c3)
+                )
             return jax.lax.dynamic_update_slice(
                 o, c3[None], (slot_of(sb), 0, 0, 0)
             )
@@ -186,7 +226,7 @@ def _threeway_program(
             lambda s=s: _item_metrics(
                 Vl, Vl, Vl, s_own, s_own, s_own, j0_of(s),
                 kind=ItemKind.DIAG, L=L, executor=executor,
-                out_dtype=out_dtype, metric=metric,
+                out_dtype=out_dtype, metric=metric, deferred=deferred,
             ),
         )
 
@@ -205,7 +245,7 @@ def _threeway_program(
                 lambda s=s, bufj=bufj, sbj=sbj: _item_metrics(
                     bufj, Vl, bufj, sbj, s_own, sbj, j0_of(s),
                     kind=ItemKind.FACE, L=L, executor=executor,
-                    out_dtype=out_dtype, metric=metric,
+                    out_dtype=out_dtype, metric=metric, deferred=deferred,
                 ),
             )
         return bufj, sbj, out
@@ -255,7 +295,7 @@ def _threeway_program(
             return _item_metrics(
                 pipe, left, right, s_p, s_l, s_r, j0,
                 kind=ItemKind.VOL, L=L, executor=executor,
-                out_dtype=out_dtype, metric=metric,
+                out_dtype=out_dtype, metric=metric, deferred=deferred,
             )
 
         out = emit(out, sb, execute, thunk)
@@ -279,6 +319,8 @@ def _threeway_program(
             1, n_pv, vol_outer,
             (Vl, s_own, bufj, sbj, jnp.int32(sb_base), out),
         )
+    if deferred:
+        return tuple(o[None, None] for o in out) + (s_own[None],)
     return out[None, None]
 
 

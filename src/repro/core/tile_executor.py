@@ -35,10 +35,23 @@ arithmetic as the out-of-kernel assembly (exact integer numerators, then
 bit-identical across ``impl="xla"`` and ``impl="pallas"`` on integer data —
 verified in tests/distributed_harness.py and tests/test_fused_epilogue.py.
 
-The fused epilogue needs the *complete* numerator at flush time, so it
-engages only when the contraction is not split over ranks (``n_pf == 1``);
-otherwise the executor falls back to contraction + psum + out-of-kernel
-assembly, unchanged from the pre-executor engines.
+The fused epilogue needs the *complete* numerator at flush time.  When the
+contraction is split over ranks (``n_pf > 1``) the levels path now keeps
+the fused MXU contraction and runs the kernels with ``epilogue=None`` (raw
+fp32 numerator, triangular diagonal schedule preserved), then psums over
+"pf" and applies the metric assembly out of kernel — the **merge
+epilogue** (``path == "fused-levels"`` with reason ``"n_pf>1 merge
+epilogue engaged"``).  The VPU path has no raw-numerator kernel form and
+still falls back to unfused.
+
+**Deferred-flush accumulator mode** (``deferred=True``) is the streamed
+variant of the same idea (``repro.stream``): blocks emit raw psummed fp32
+numerator partials only (``pair_partial``), the host accumulates them
+across byte-axis chunks, and ``merge_pair`` / ``merge_three`` apply the
+metric assembly once after the last chunk.  Partial numerators and stats
+are exact fp32 integers, so chunk-order addition is bit-identical to the
+single-pass contraction — the cross-shard merge guarantee
+(docs/BITPLANE_FORMAT.md, "Cross-shard merge").
 """
 from __future__ import annotations
 
@@ -73,6 +86,10 @@ class TileExecutor:
     metric: MetricSpec = None
     out_dtype: Any = jnp.float32
     axis: Optional[str] = "pf"
+    #: deferred-flush accumulator mode (streamed campaigns): blocks emit
+    #: raw psummed fp32 numerator partials; the metric assembly waits for
+    #: the cross-shard merge epilogue (``merge_pair`` / ``merge_three``)
+    deferred: bool = False
 
     def __post_init__(self):
         if self.metric is None:
@@ -84,10 +101,14 @@ class TileExecutor:
         """(path, reason): which 2-way kernel family serves this executor.
 
         ``path`` is ``"fused-vpu"`` (combine-sum VPU kernel + in-kernel
-        epilogue), ``"fused-levels"`` (bit-plane MXU kernel + in-kernel
-        epilogue) or ``"unfused"``; ``reason`` says why fusion was declined
-        (empty on the fused paths), so silent fallbacks are inspectable
-        (``launch.similarity --dry-run``)."""
+        epilogue), ``"fused-levels"`` (bit-plane MXU kernel; epilogue
+        in-kernel, or — ``n_pf > 1`` — applied after the psum by the merge
+        epilogue), ``"unfused"``, or a ``"streamed-*"`` deferred-flush
+        variant.  ``reason`` says why the plain in-kernel epilogue is not
+        running (empty on the fully fused paths), so fallbacks and merge
+        modes are inspectable (``launch.similarity --dry-run``)."""
+        if self.deferred:
+            return self._deferred_path()
         if self.metric.assemble_tile is None:
             return "unfused", (
                 "metric has no Pallas-composable assemble_tile epilogue"
@@ -95,6 +116,14 @@ class TileExecutor:
         if not self.metric.contract_is_combine_sum:
             return "unfused", "metric contraction is not a combine-sum"
         if self.cfg.n_pf > 1:
+            if (
+                self.cfg.impl == "levels"
+                and self.metric.combine is jnp.minimum
+            ):
+                # raw-numerator kernel form + psum + out-of-kernel assembly:
+                # the fused MXU contraction and the triangular diagonal
+                # schedule survive the field split
+                return "fused-levels", "n_pf>1 merge epilogue engaged"
             return "unfused", (
                 f"n_pf={self.cfg.n_pf} splits the contraction across ranks; "
                 "the in-kernel epilogue needs the complete numerator"
@@ -109,6 +138,24 @@ class TileExecutor:
             return "fused-levels", ""
         return "unfused", f"impl={self.cfg.impl!r} has no fused kernel"
 
+    def _deferred_path(self) -> tuple:
+        """Path naming for deferred-flush (streamed) executors: chunks emit
+        raw fp32 numerator partials either way; the name says which
+        contraction kernel produces them."""
+        if (
+            self.cfg.impl == "levels"
+            and self.metric.contract_is_combine_sum
+            and self.metric.combine is jnp.minimum
+        ):
+            return "streamed-fused-levels", (
+                "deferred flush: cross-shard merge epilogue assembles "
+                "after the last chunk"
+            )
+        return "streamed-unfused", (
+            "deferred flush: raw partials accumulated across chunks, "
+            f"impl={self.cfg.impl!r} contraction"
+        )
+
     @property
     def path(self) -> str:
         """'fused-levels' | 'fused-vpu' | 'unfused' for 2-way blocks."""
@@ -121,8 +168,9 @@ class TileExecutor:
 
     @property
     def fused(self) -> bool:
-        """True when 2-way blocks run a fused-epilogue Pallas kernel."""
-        return self.path != "unfused"
+        """True when 2-way blocks run a fused Pallas contraction kernel
+        (epilogue in-kernel, or deferred to the merge epilogue)."""
+        return "unfused" not in self.path
 
     def _path3_decision(self) -> tuple:
         """(path, reason) for the 3-way pipeline slice.  Unlike 2-way, no
@@ -134,7 +182,18 @@ class TileExecutor:
         ``shard_map``) and every slice kernel reads them directly.  Plain
         ``"fused-levels"`` means the same slice kernel but a value ring —
         planes re-encoded per pipeline slice (``encoding="none"`` opt-out,
-        or an executor built from an unresolved config)."""
+        or an executor built from an unresolved config).  Deferred
+        executors prefix the same names with ``"streamed-"`` (raw partials
+        accumulated across chunks, assembly in the merge epilogue)."""
+        if self.deferred:
+            base, _ = self._path3_base()
+            return "streamed-" + base, (
+                "deferred flush: cross-shard merge epilogue assembles "
+                "after the last chunk"
+            )
+        return self._path3_base()
+
+    def _path3_base(self) -> tuple:
         if not self.metric.contract_is_combine_sum:
             return "unfused", "metric contraction is not a combine-sum"
         if self.cfg.impl == "pallas":
@@ -165,7 +224,7 @@ class TileExecutor:
     @property
     def fused3(self) -> bool:
         """True when 3-way pipeline steps run a fused X_j Pallas kernel."""
-        return self.path3 != "unfused"
+        return "unfused" not in self.path3
 
 
     # -- internals ----------------------------------------------------------
@@ -248,21 +307,33 @@ class TileExecutor:
                 DEFAULT_BN as LEVELS_BN,
             )
 
+            # n_pf > 1: the kernels run with ``epilogue=None`` (raw fp32
+            # numerator, triangular diagonal schedule preserved) and the
+            # merge epilogue — psum over "pf", then the SAME assemble2 ops
+            # as the unfused path — flushes out of kernel.
+            merge = self.cfg.n_pf > 1
             Pa, Pb = self._pair_planes(Va, Vb if not diagonal else Va)
             kw = dict(
-                epilogue=self.metric.assemble_tile,
+                epilogue=None if merge else self.metric.assemble_tile,
                 bkb=max(1, min(DEFAULT_BKB, Pa.shape[1])),
-                out_dtype=jnp.dtype(self.out_dtype),
+                out_dtype=jnp.float32 if merge
+                else jnp.dtype(self.out_dtype),
             )
             if diagonal:
                 bt = _auto_tile(m, LEVELS_BM)
                 packed = metric2_levels_tri(Pa, sa, bt=bt, **kw)
-                return unpack_tri_tiles(packed, m, bt)
-            return metric2_levels(
-                Pa, Pb, sa, sb,
-                bm=_auto_tile(m, LEVELS_BM), bn=_auto_tile(n, LEVELS_BN),
-                **kw,
-            )
+                vals = unpack_tri_tiles(packed, m, bt)
+            else:
+                vals = metric2_levels(
+                    Pa, Pb, sa, sb,
+                    bm=_auto_tile(m, LEVELS_BM), bn=_auto_tile(n, LEVELS_BN),
+                    **kw,
+                )
+            if merge:
+                vals = self.merge_pair(
+                    self._psum(vals), sa, sb, diagonal=diagonal
+                )
+            return vals
         # unfused: contraction (registry impl, or the hoisted plane
         # contraction when the campaign pre-encoded bit-planes) + psum +
         # out-of-kernel assembly — op-for-op the pre-executor arithmetic.
@@ -278,6 +349,46 @@ class TileExecutor:
             tri = jnp.triu(jnp.ones((m, n), bool), k=1)
             vals = jnp.where(tri, vals, 0)
         return vals
+
+    def pair_partial(self, Va, Vb):
+        """Deferred-flush block contraction: the raw fp32 numerator partial
+        psummed over the contraction axis — what streamed chunk programs
+        emit instead of assembled metric values.  Partials are exact fp32
+        integers for leveled data, so host-side accumulation across chunks
+        commutes bit-for-bit with the single-pass contraction."""
+        return self._psum(self.pair_numerator(Va, Vb).astype(jnp.float32))
+
+    # -- merge epilogue (deferred flush / n_pf > 1) --------------------------
+
+    def merge_pair(self, n2, sa, sb, *, diagonal: bool = False):
+        """Assemble one 2-way block from a COMPLETE numerator: the same
+        ``assemble2`` arithmetic the unfused path runs after its psum, plus
+        the diagonal strict-upper mask.  Called in-program on the n_pf > 1
+        merge path and on the host by ``repro.stream`` after the last
+        chunk's partials have been accumulated."""
+        n2 = jnp.asarray(n2, jnp.float32)
+        vals = self.metric.assemble2(
+            n2, jnp.asarray(sa)[:, None], jnp.asarray(sb)[None, :]
+        ).astype(self.out_dtype)
+        if diagonal:
+            m, n = vals.shape
+            tri = jnp.triu(jnp.ones((m, n), bool), k=1)
+            vals = jnp.where(tri, vals, 0)
+        return vals
+
+    def merge_three(self, B, n2_pl, n2_pr, n2_lr, sp, sl, sr):
+        """Assemble one 3-way slice from complete numerators (the streamed
+        twin of the in-program ``metric.assemble3`` call); masking is the
+        caller's job — it depends on the plan item's kind."""
+        B = jnp.asarray(B, jnp.float32)
+        if n2_pl is not None:
+            n2_pl = jnp.asarray(n2_pl, jnp.float32)
+            n2_pr = jnp.asarray(n2_pr, jnp.float32)
+            n2_lr = jnp.asarray(n2_lr, jnp.float32)
+        return self.metric.assemble3(
+            B, n2_pl, n2_pr, n2_lr,
+            jnp.asarray(sp), jnp.asarray(sl), jnp.asarray(sr),
+        ).astype(self.out_dtype)
 
     def pair_numerator(self, Va, Vb):
         """Raw (m, n) pairwise numerator block, NOT psummed.

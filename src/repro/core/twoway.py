@@ -81,6 +81,15 @@ class CometConfig:
     # "bitplane" forces it (ValueError if ineligible); "none" keeps the
     # value ring with per-step/per-slice (V >= t) construction.
     encoding: str = "auto"
+    # out-of-core streaming (repro.stream): "auto" streams store-backed
+    # multi-shard datasets (or whenever max_host_bytes is set), "on"
+    # forces it (ValueError without a store-backed input), "off" keeps
+    # the in-memory single-pass campaign.
+    streaming: str = "auto"
+    # peak HOST bytes the streamed staging buffers may occupy (0 =
+    # unbounded: one disk shard per chunk).  Bounds the double-buffered
+    # chunk pipeline, NOT the dataset size — see repro.stream.StreamPlan.
+    max_host_bytes: int = 0
 
     @property
     def n_ranks(self) -> int:
@@ -157,16 +166,46 @@ def resolve_config(
     The distributed entry points call this once per campaign, so the device
     programs and the TileExecutor only ever see concrete settings.
 
-    ``V`` may be a value matrix or a pre-encoded ``PackedPlanes`` payload
-    (``repro.store`` campaign loading).  Pre-encoded input HAS no value
-    form on the host, so it must resolve to the plane path: eligibility
-    failures (impl / metric / levels mismatch, explicit ``encoding="none"``)
-    raise instead of falling back."""
+    ``V`` may be a value matrix, a pre-encoded ``PackedPlanes`` payload
+    (``repro.store`` campaign loading), or a LAZY ``ShardedPlanes`` handle
+    (``DatasetReader.sharded()`` — the streamed campaign's input, which
+    shares every plane-path eligibility rule without materializing a
+    byte).  Pre-encoded input HAS no value form on the host, so it must
+    resolve to the plane path: eligibility failures (impl / metric /
+    levels mismatch, explicit ``encoding="none"``) raise instead of
+    falling back.
+
+    The ``streaming`` knob resolves here too (this is the one place
+    eligibility rules live): "auto" -> "on" for a lazy store handle with
+    multiple shards or an explicit ``max_host_bytes`` budget, "off"
+    otherwise; "on" without store-backed input raises — a value matrix is
+    already resident, there is nothing to stream."""
     from dataclasses import replace
 
     from repro.kernels.mgemm_levels.planes import PackedPlanes
+    from repro.store.reader import ShardedPlanes
 
-    if isinstance(V, PackedPlanes):
+    if cfg.streaming not in ("auto", "on", "off"):
+        raise ValueError(
+            f"streaming must be 'auto', 'on' or 'off', got {cfg.streaming!r}"
+        )
+    if isinstance(V, ShardedPlanes):
+        streaming = cfg.streaming
+        if streaming == "auto":
+            streaming = "on" if (V.n_shards > 1 or cfg.max_host_bytes > 0) \
+                else "off"
+        cfg = replace(cfg, streaming=streaming)
+    elif cfg.streaming == "on":
+        raise ValueError(
+            "streaming='on' needs a store-backed dataset input "
+            "(InputSpec(source='planes') / DatasetReader.sharded()); "
+            "value matrices and materialized PackedPlanes are already "
+            "resident in host memory"
+        )
+    else:
+        cfg = replace(cfg, streaming="off")
+
+    if isinstance(V, (PackedPlanes, ShardedPlanes)):
         if cfg.encoding == "none":
             raise ValueError(
                 "pre-encoded plane input cannot run with encoding='none' "
@@ -373,6 +412,49 @@ def _twoway_program(
 
         out = jax.lax.cond(execute, compute, lambda o: o, out)
     return out[None, None]  # leading (pv=1, pr=1) device dims
+
+
+def _twoway_deferred_program(
+    Pl, *, cfg: CometConfig, plan: TwoWayPlan, metric: MetricSpec = None,
+):
+    """Deferred-flush chunk program (``repro.stream``): one byte-axis chunk
+    of the campaign payload runs the SAME block-circulant ring as
+    ``_twoway_program``, but every block emits its raw fp32 numerator
+    partial (psummed over "pf") instead of assembled metric values, and
+    the per-vector stat partial rides along.  ``Pl`` is the rank's packed
+    plane shard of ONE chunk — (levels, chunk_kb/n_pf, n_vp) uint8.
+
+    The stats ring is gone entirely: raw numerators need no stats, so the
+    chunk ring carries only the plane payload (the merge epilogue reads
+    chunk-summed global stats instead).  Returns ``(partials, s_own)`` —
+    (slots, m, m) fp32 and (m,) fp32.
+    """
+    from repro.kernels.mgemm_levels import values_from_planes
+
+    metric = metric or CZEKANOWSKI
+    executor = TileExecutor(cfg=cfg, metric=metric, out_dtype=jnp.float32,
+                            axis="pf", deferred=True)
+    n_pv, n_pr = cfg.n_pv, cfg.n_pr
+    m = Pl.shape[-1]
+    s_own = jax.lax.psum(metric.stat(values_from_planes(Pl)), "pf")
+    pv = jax.lax.axis_index("pv")
+    pr = jax.lax.axis_index("pr")
+    perm = [((i + 1) % n_pv, i) for i in range(n_pv)]
+
+    Pr = Pl
+    out = jnp.zeros((plan.slots_per_rank, m, m), jnp.float32)
+    for d in range(plan.n_steps):
+        if d > 0:
+            Pr = jax.lax.ppermute(Pr, "pv", perm)
+        execute = (d % n_pr) == pr
+        if plan.is_half_step(d):
+            execute = jnp.logical_and(execute, pv < n_pv // 2)
+
+        def compute(o, Pr=Pr, d=d):
+            return o.at[d // n_pr].set(executor.pair_partial(Pl, Pr))
+
+        out = jax.lax.cond(execute, compute, lambda o: o, out)
+    return out[None, None], s_own[None]
 
 
 def twoway_distributed(

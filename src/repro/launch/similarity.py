@@ -48,10 +48,22 @@ def main(argv=None):
                          "encode V once into packed uint8 planes and "
                          "ring-carry those (up to 16x less wire for SNP "
                          "{0,1,2} data)")
+    ap.add_argument("--streaming", default="auto",
+                    choices=("auto", "on", "off"),
+                    help="out-of-core streaming over a --dataset: 'auto' "
+                         "streams multi-shard (or --max-host-bytes budgeted) "
+                         "datasets chunk by chunk with double-buffered "
+                         "prefetch, 'on' requires a dataset, 'off' always "
+                         "materializes in memory; results are bit-identical "
+                         "either way")
+    ap.add_argument("--max-host-bytes", type=int, default=0,
+                    help="staging-buffer budget in bytes for the streamed "
+                         "pipeline (0 = one disk shard per chunk)")
     ap.add_argument("--dry-run", action="store_true",
                     help="print the resolved execution path (fused-levels / "
-                         "fused-vpu / unfused + reason), encoding and ring "
-                         "dtype, then exit without running the campaign")
+                         "streamed-fused-levels / fused-vpu / unfused + "
+                         "reason), encoding, ring dtype and the streaming "
+                         "decision, then exit without running the campaign")
     ap.add_argument("--chunk", type=int, default=128,
                     help="XLA mgemm contraction-chunk size")
     ap.add_argument("--input", default="", help=".npy (n_f, n_v) input")
@@ -116,7 +128,9 @@ def main(argv=None):
         n_pf=args.n_pf, n_pv=args.n_pv, n_pr=args.n_pr, n_st=args.n_st,
         stages=stages, impl=impl, levels=levels,
         out_dtype=args.out_dtype, ring_dtype=args.ring_dtype,
-        encoding=args.encoding, chunk=args.chunk, input=input_spec,
+        encoding=args.encoding, chunk=args.chunk,
+        streaming=args.streaming, max_host_bytes=args.max_host_bytes,
+        input=input_spec,
     )
     from repro.api import UnknownMetricError
 
@@ -132,22 +146,33 @@ def main(argv=None):
         try:
             spec = get_metric(args.metric)
             request.validate(metric_spec=spec)
-            cfg = resolve_config(
-                request.to_comet_config(), request.input.materialize(), spec
-            )
+            if (request.input.source == "planes"
+                    and request.streaming != "off"):
+                # lazy handle: the streaming decision resolves without
+                # reading a payload byte
+                from repro.store import DatasetReader
+
+                probe = DatasetReader(request.input.path).sharded()
+            else:
+                probe = request.input.materialize()
+            cfg = resolve_config(request.to_comet_config(), probe, spec)
         except (UnknownMetricError, ValueError) as e:
             print(f"error: {e}", file=sys.stderr)
             return 2
         ex = TileExecutor(cfg=cfg, metric=spec,
-                          out_dtype=jnp.dtype(args.out_dtype), axis=None)
+                          out_dtype=jnp.dtype(args.out_dtype), axis=None,
+                          deferred=(cfg.streaming == "on"))
         path, why = ((ex.path, ex.path_reason) if args.way == 2
                      else (ex.path3, ex.path3_reason))
         reason = f" ({why})" if why else ""
         # with encoding=bitplane BOTH engines pre-encode once and ring-carry
-        # the packed planes (3-way: path3 == "fused-levels-ring")
+        # the packed planes (3-way: path3 == "fused-levels-ring"); with
+        # streaming=on the streamed-* chunk paths + merge epilogue run
         print(f"path={path}{reason}")
         print(f"encoding={cfg.encoding} ring_dtype={cfg.ring_dtype} "
               f"impl={cfg.impl} levels={cfg.levels}")
+        print(f"streaming={cfg.streaming} "
+              f"max_host_bytes={cfg.max_host_bytes}")
         return 0
 
     try:
@@ -165,6 +190,12 @@ def main(argv=None):
           f"stages={list(result.stages)}")
     print(f"results={n_results} time={result.seconds:.3f}s "
           f"rate={comparisons / max(result.seconds, 1e-12):.3e} comparisons/s")
+    stream = result.meta.get("stream")
+    if stream:
+        print(f"streamed chunks={stream['chunks']} "
+              f"chunk_bytes={stream['chunk_bytes']} "
+              f"peak_host_bytes={stream['peak_host_bytes']} "
+              f"n_shards={stream['n_shards']}")
     print(f"checksum={hex(checksum)}")
     if args.out:
         result.save(args.out)

@@ -18,11 +18,12 @@ from repro.store.format import (  # noqa: F401
     MANIFEST_NAME,
     read_manifest,
 )
-from repro.store.reader import DatasetReader  # noqa: F401
+from repro.store.reader import DatasetReader, ShardedPlanes  # noqa: F401
 from repro.store.writer import validate_leveled, write_dataset  # noqa: F401
 
 __all__ = [
     "DatasetReader",
+    "ShardedPlanes",
     "write_dataset",
     "validate_leveled",
     "read_bed",

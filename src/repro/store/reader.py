@@ -1,15 +1,21 @@
 """Dataset reader: memory-mapped plane views + zero-encode campaign loading.
 
-``DatasetReader`` serves the on-disk payloads three ways:
+``DatasetReader`` serves the on-disk payloads four ways:
 
 * ``shard(r)``  — one field shard ``(levels, kbs, n_v)``, an ``np.memmap``
   byte-range view by default (no copy, no decode): disk shard ``r`` IS the
   ``shard_planes_fields(planes, r, n_shards)`` range.
+* ``iter_shards()`` — the shard views in rank order, one at a time; the
+  streaming pipeline's unit of I/O (nothing is ever concatenated).
 * ``planes()``  — the full ``(levels, kb, n_v)`` payload; zero-copy mmap
-  for single-shard datasets, a byte-axis concatenation otherwise.
-* ``packed()``  — a ``PackedPlanes`` handle the distributed engines accept
-  directly: the campaign goes mmap -> ring with NO host-side encode
-  (asserted via an encoder-call counter in tests/test_store.py).
+  for single-shard datasets, one preallocated gather otherwise.  This
+  MATERIALIZES multi-shard payloads — streamed campaigns never call it.
+* ``packed()`` / ``sharded()`` — the engine-facing handles: ``packed()``
+  materializes a ``PackedPlanes`` (mmap -> ring with NO host-side encode,
+  asserted via an encoder-call counter in tests/test_store.py);
+  ``sharded()`` returns a LAZY ``ShardedPlanes`` that carries only the
+  manifest geometry + provenance, so ``repro.stream`` can plan a
+  bounded-memory campaign without touching payload bytes.
 
 ``validate()`` recomputes the sha256 payload checksum, the stats sidecar
 and every shape against the manifest.
@@ -17,6 +23,7 @@ and every shape against the manifest.
 from __future__ import annotations
 
 import os
+from dataclasses import dataclass, field
 
 import numpy as np
 
@@ -24,7 +31,7 @@ from repro.kernels.mgemm_levels import PackedPlanes
 from repro.store.format import payload_checksum, read_manifest
 from repro.store.writer import POPCOUNT
 
-__all__ = ["DatasetReader"]
+__all__ = ["DatasetReader", "ShardedPlanes"]
 
 
 class DatasetReader:
@@ -73,12 +80,63 @@ class DatasetReader:
             )
         return arr
 
+    def iter_shards(self, *, mmap: bool = True):
+        """Yield the ``(levels, kbs, n_v)`` shard views in rank order.
+
+        Each view is independent (one open mmap at a time when the caller
+        drops its reference), so a full-payload pass — checksum, stats,
+        streaming — holds one shard of address space, not the dataset.
+        """
+        for r in range(self.n_shards):
+            yield self.shard(r, mmap=mmap)
+
+    def shard_range(self, rank: int, lo: int, hi: int, *,
+                    mmap: bool = True) -> np.ndarray:
+        """Byte sub-range view ``[lo, hi)`` of shard ``rank`` —
+        ``(levels, hi - lo, n_v)``.  The streaming chunk loader reads these
+        (a chunk may cover only part of a shard file, or span two)."""
+        if not 0 <= lo <= hi <= self.kb // self.n_shards:
+            raise ValueError(
+                f"byte range [{lo}, {hi}) outside shard of "
+                f"{self.kb // self.n_shards} bytes"
+            )
+        return self.shard(rank, mmap=mmap)[:, lo:hi, :]
+
     def planes(self, *, mmap: bool = True) -> np.ndarray:
-        """Full (levels, kb, n_v) payload (mmap view when single-shard)."""
-        shards = [self.shard(r, mmap=mmap) for r in range(self.n_shards)]
-        if len(shards) == 1:
-            return shards[0]
-        return np.concatenate(shards, axis=1)
+        """Full (levels, kb, n_v) payload (mmap view when single-shard).
+
+        Multi-shard payloads are gathered shard-by-shard into ONE
+        preallocated array (the old ``np.concatenate`` built a full list
+        of materialized shards first — twice the dataset in host RAM at
+        peak).  For a bounded-memory pass use ``iter_shards()`` or the
+        ``repro.stream`` pipeline instead.
+        """
+        if self.n_shards == 1:
+            return self.shard(0, mmap=mmap)
+        kbs = self.kb // self.n_shards
+        out = np.empty((self.levels, self.kb, self.n_v), np.uint8)
+        for r, shard in enumerate(self.iter_shards(mmap=True)):
+            np.copyto(out[:, r * kbs:(r + 1) * kbs, :], shard)
+        return out
+
+    def origin(self) -> dict:
+        """Provenance block result manifests record (path + exact bytes)."""
+        return {
+            "path": self.path,
+            "checksum": self.manifest["checksum"],
+            "levels": self.levels,
+            "source": self.manifest.get("source", {}),
+        }
+
+    def sharded(self) -> "ShardedPlanes":
+        """Lazy engine-facing handle: geometry + provenance, NO payload.
+
+        ``resolve_config`` accepts it wherever ``PackedPlanes`` is accepted
+        (same eligibility rules); the streaming pipeline iterates its
+        shards without ever materializing the concatenated payload, and
+        ``materialize()`` converts to an eager ``PackedPlanes`` for the
+        in-memory engines."""
+        return ShardedPlanes(reader=self, origin=self.origin())
 
     def packed(self, *, mmap: bool = True) -> PackedPlanes:
         """The engine-facing handle: planes + true field count + origin.
@@ -89,12 +147,7 @@ class DatasetReader:
         return PackedPlanes(
             planes=self.planes(mmap=mmap),
             n_f=self.n_f,
-            origin={
-                "path": self.path,
-                "checksum": self.manifest["checksum"],
-                "levels": self.levels,
-                "source": self.manifest.get("source", {}),
-            },
+            origin=self.origin(),
         )
 
     def stats(self) -> np.ndarray:
@@ -139,3 +192,48 @@ class DatasetReader:
         if not np.array_equal(stats, self.stats()):
             raise ValueError(f"{self.path}: stats sidecar does not match payload")
         return self.manifest
+
+
+@dataclass(frozen=True, eq=False)
+class ShardedPlanes:
+    """Lazy multi-shard payload handle (geometry + provenance, no bytes).
+
+    The streaming twin of ``PackedPlanes``: it quacks the same for
+    ``resolve_config`` (``levels`` / ``n_f`` / ``n_v`` / ``origin``) but
+    holds no plane array — ``repro.stream`` iterates the reader's shard
+    views chunk by chunk instead.  ``PackedPlanes.__post_init__`` requires
+    a real 3-D uint8 ndarray, which is exactly what a lazy handle must not
+    have, hence a sibling class rather than a subclass.
+    """
+
+    reader: DatasetReader
+    origin: dict = field(default_factory=dict)
+
+    @property
+    def levels(self) -> int:
+        return self.reader.levels
+
+    @property
+    def kb(self) -> int:
+        return self.reader.kb
+
+    @property
+    def n_f(self) -> int:
+        return self.reader.n_f
+
+    @property
+    def n_v(self) -> int:
+        return self.reader.n_v
+
+    @property
+    def n_shards(self) -> int:
+        return self.reader.n_shards
+
+    @property
+    def nbytes(self) -> int:
+        """Full payload size IF materialized (what streaming avoids)."""
+        return self.levels * self.kb * self.n_v
+
+    def materialize(self, *, mmap: bool = True) -> PackedPlanes:
+        """Eager conversion for the in-memory engines (streaming=off)."""
+        return self.reader.packed(mmap=mmap)

@@ -1,0 +1,23 @@
+"""repro.stream — out-of-core streaming campaign pipeline.
+
+Double-buffered disk -> host -> device streaming over a ``repro.store``
+dataset's field shards: ``StreamPlan`` chunks the packed byte axis,
+``ShardPrefetcher`` stages the next chunk from the shard mmaps while the
+engines contract the current one, and the cross-shard merge epilogue in
+``pipeline`` folds per-chunk fp32 numerator/stat partials into outputs
+bit-identical to an in-memory campaign.  Peak host payload memory is the
+two staging buffers — bounded by ``CometConfig.max_host_bytes`` — never
+the dataset size.
+"""
+from repro.stream.pipeline import stream_threeway, stream_twoway  # noqa: F401
+from repro.stream.plan import StreamChunk, StreamPlan, fill_chunk  # noqa: F401
+from repro.stream.prefetch import ShardPrefetcher  # noqa: F401
+
+__all__ = [
+    "StreamPlan",
+    "StreamChunk",
+    "fill_chunk",
+    "ShardPrefetcher",
+    "stream_twoway",
+    "stream_threeway",
+]

@@ -1,0 +1,271 @@
+"""Streamed campaigns: disk -> host -> device chunks + cross-shard merge.
+
+``stream_twoway`` / ``stream_threeway`` run the SAME block-circulant /
+tetrahedral schedules as the in-memory engines, but over the store's byte
+axis one chunk at a time:
+
+1. ``StreamPlan`` cuts the payload byte (field) axis into fixed-shape
+   chunks (``repro.stream.plan``);
+2. ``ShardPrefetcher`` stages chunk ``s+1`` from the shard mmaps while the
+   device runs chunk ``s`` (``repro.stream.prefetch``);
+3. each chunk runs a deferred-flush device program (``_twoway_deferred_
+   program`` / ``_threeway_program(deferred=True)``) that emits raw fp32
+   numerator partials psummed over "pf", plus the chunk's per-vector stat
+   partial;
+4. the host accumulates partials across chunks in fp32, and the **cross-
+   shard merge epilogue** applies the metric assembly + symmetry masks
+   once — producing ``TwoWayOutput`` / ``ThreeWayOutput`` blocks laid out
+   exactly like an in-memory run's.
+
+Bit-exactness: the byte axis is the CONTRACTION axis, numerator and stat
+partials of leveled integer data are exact fp32 integers, and fp32
+addition of exact integers is associative — so chunk-order accumulation is
+bit-identical to the in-memory single-pass psum, and the merged assembly
+(the same ``assemble2`` / ``assemble3`` fp32 ops) yields bit-identical
+checksums across ANY chunking (pinned in tests/test_stream.py against
+``impl="xla"`` in-memory runs).
+
+Peak host payload memory is ``StreamPlan.peak_host_bytes`` — the staging
+buffers, bounded by ``max_host_bytes`` — never the dataset size.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.compat import shard_map
+
+from repro.core.metric_spec import CZEKANOWSKI, MetricSpec
+from repro.core.plan2 import TwoWayPlan
+from repro.core.plan3 import ItemKind, ThreeWayPlan
+from repro.core.threeway import ThreeWayOutput, _threeway_program
+from repro.core.tile_executor import TileExecutor
+from repro.core.twoway import (
+    CometConfig,
+    TwoWayOutput,
+    _twoway_deferred_program,
+    resolve_config,
+)
+from repro.stream.plan import StreamPlan, fill_chunk
+from repro.stream.prefetch import ShardPrefetcher
+
+__all__ = ["stream_twoway", "stream_threeway"]
+
+
+def _as_sharded(dataset):
+    """Accept a dataset path, DatasetReader, or ShardedPlanes handle."""
+    from repro.store.reader import DatasetReader, ShardedPlanes
+
+    if isinstance(dataset, ShardedPlanes):
+        return dataset
+    if isinstance(dataset, DatasetReader):
+        return dataset.sharded()
+    return DatasetReader(dataset).sharded()
+
+
+def _stream_info(splan: StreamPlan, cfg: CometConfig, n_shards: int) -> dict:
+    """The accounting block engines record as ``meta["stream"]``."""
+    return {
+        "chunks": splan.n_chunks,
+        "chunk_kb": splan.chunk_kb,
+        "chunk_bytes": splan.chunk_nbytes,
+        "n_buffers": splan.n_buffers,
+        "peak_host_bytes": splan.peak_host_bytes,
+        "max_host_bytes": cfg.max_host_bytes,
+        "n_shards": n_shards,
+    }
+
+
+def _run_chunks(sh, splan: StreamPlan, jfn, accs, stat_acc):
+    """Drive the prefetch/compute loop: stage each chunk, run the deferred
+    program, fold the fp32 partials into the host accumulators.
+
+    ``accs`` is a list of numpy accumulator arrays matching the program's
+    leading outputs; the last program output is always the stat partial,
+    folded into ``stat_acc``.  Returns measured peak staged bytes (the
+    buffers actually allocated — the number ``max_host_bytes`` bounds).
+    """
+    chunks = splan.chunks()
+    buffers = [np.zeros(splan.chunk_shape, np.uint8)
+               for _ in range(splan.n_buffers)]
+    shard_cache = {}
+
+    def shard_of(rank):
+        if rank not in shard_cache:
+            shard_cache[rank] = sh.reader.shard(rank)
+        return shard_cache[rank]
+
+    def fill(idx, buf):
+        fill_chunk(buf, chunks[idx], shard_of, splan.n_v_data)
+
+    with ShardPrefetcher(fill, len(chunks), buffers) as pf:
+        for _idx, buf in pf:
+            outs = jfn(jnp.asarray(buf))
+            # np.asarray blocks until the chunk program is done (GIL
+            # released inside XLA — the prefetch thread fills the next
+            # buffer meanwhile); only then is the staging buffer reusable
+            for acc, out in zip(accs, outs[:-1]):
+                np.add(acc, np.asarray(out).reshape(acc.shape), out=acc)
+            np.add(stat_acc, np.asarray(outs[-1]).reshape(stat_acc.shape),
+                   out=stat_acc)
+            pf.release(buf)
+    return sum(b.nbytes for b in buffers)
+
+
+def stream_twoway(
+    dataset, mesh, cfg: CometConfig, metric: MetricSpec = None,
+) -> tuple:
+    """Streamed 2-way campaign over a ``repro.store`` dataset.
+
+    Returns ``(TwoWayOutput, info)`` — the output bit-identical to
+    ``twoway_distributed`` on the materialized payload, ``info`` the
+    streaming accounting (chunks, peak host bytes).
+    """
+    metric = metric or CZEKANOWSKI
+    sh = _as_sharded(dataset)
+    cfg = resolve_config(cfg, sh, metric)  # plane path or raises
+    n_v = sh.n_v
+    n_vp = -(-n_v // cfg.n_pv)
+    plan = TwoWayPlan(cfg.n_pv, cfg.n_pr)
+    splan = StreamPlan.for_reader(
+        sh.reader, n_v=cfg.n_pv * n_vp, n_pf=cfg.n_pf,
+        max_host_bytes=cfg.max_host_bytes,
+    )
+
+    jfn = jax.jit(shard_map(
+        partial(_twoway_deferred_program, cfg=cfg, plan=plan, metric=metric),
+        mesh=mesh,
+        in_specs=P(None, "pf", "pv"),
+        out_specs=(P("pv", "pr", None, None, None), P("pv", None)),
+        check=False,
+    ))
+
+    acc = np.zeros(
+        (cfg.n_pv, cfg.n_pr, plan.slots_per_rank, n_vp, n_vp), np.float32
+    )
+    stats = np.zeros((cfg.n_pv, n_vp), np.float32)
+    staged = _run_chunks(sh, splan, jfn, [acc], stats)
+
+    # -- cross-shard merge epilogue: assemble once from complete partials --
+    executor = TileExecutor(
+        cfg=cfg, metric=metric, out_dtype=jnp.dtype(cfg.out_dtype),
+        axis=None, deferred=True,
+    )
+    blocks = np.zeros(acc.shape, jnp.dtype(cfg.out_dtype))
+    for p_v in range(cfg.n_pv):
+        for p_r in range(cfg.n_pr):
+            for d in plan.steps_of_pr(p_r):
+                if not plan.rank_computes(p_v, p_r, d):
+                    continue
+                row, col = plan.block_of(p_v, d)
+                blocks[p_v, p_r, d // cfg.n_pr] = np.asarray(
+                    executor.merge_pair(
+                        acc[p_v, p_r, d // cfg.n_pr],
+                        stats[row], stats[col], diagonal=(d == 0),
+                    )
+                )
+    out = TwoWayOutput(blocks=blocks, plan=plan, n_v=n_v, n_vp=n_vp)
+    info = _stream_info(splan, cfg, sh.n_shards)
+    info["staged_bytes"] = staged
+    return out, info
+
+
+def stream_threeway(
+    dataset, mesh, cfg: CometConfig, stage: int = 0,
+    metric: MetricSpec = None,
+) -> tuple:
+    """Streamed 3-way campaign stage over a ``repro.store`` dataset.
+
+    Returns ``(ThreeWayOutput, info)`` bit-identical to
+    ``threeway_distributed`` on the materialized payload.
+    """
+    metric = metric or CZEKANOWSKI
+    sh = _as_sharded(dataset)
+    cfg = resolve_config(cfg, sh, metric)
+    n_v = sh.n_v
+    unit = 6 * cfg.n_st
+    n_vp = -(-n_v // cfg.n_pv)
+    n_vp += (-n_vp) % unit
+    L = n_vp // unit
+    plan = ThreeWayPlan(cfg.n_pv, cfg.n_pr, cfg.n_st)
+    slots = plan.slots_per_rank
+    splan = StreamPlan.for_reader(
+        sh.reader, n_v=cfg.n_pv * n_vp, n_pf=cfg.n_pf,
+        max_host_bytes=cfg.max_host_bytes,
+    )
+
+    out_dtype = jnp.dtype(cfg.out_dtype)
+    jfn = jax.jit(shard_map(
+        partial(_threeway_program, cfg=cfg, plan=plan, stage=stage,
+                out_dtype=out_dtype, metric=metric, deferred=True),
+        mesh=mesh,
+        in_specs=P(None, "pf", "pv"),
+        out_specs=(
+            P("pv", "pr", None, None, None, None),  # 3-way numerators
+            P("pv", "pr", None, None, None),  # pipe x left
+            P("pv", "pr", None, None, None),  # pipe x right
+            P("pv", "pr", None, None, None),  # left x right
+            P("pv", None),  # stat partial
+        ),
+        check=False,
+    ))
+
+    shape = (cfg.n_pv, cfg.n_pr, slots)
+    accs = [
+        np.zeros(shape + (L, n_vp, n_vp), np.float32),
+        np.zeros(shape + (L, n_vp), np.float32),
+        np.zeros(shape + (L, n_vp), np.float32),
+        np.zeros(shape + (n_vp, n_vp), np.float32),
+    ]
+    stats = np.zeros((cfg.n_pv, n_vp), np.float32)
+    staged = _run_chunks(sh, splan, jfn, accs, stats)
+
+    # -- cross-shard merge epilogue (mask logic mirrors entries()) ---------
+    executor = TileExecutor(cfg=cfg, metric=metric, out_dtype=out_dtype,
+                            axis=None, deferred=True)
+    needs = metric.needs_pair_terms
+    blocks = np.zeros(shape + (L, n_vp, n_vp), out_dtype)
+    li = np.arange(n_vp)
+    B_acc, pl_acc, pr_acc, lr_acc = accs
+    for p_v in range(cfg.n_pv):
+        for p_r in range(cfg.n_pr):
+            for slot, it in enumerate(plan.items_of(p_v, p_r)):
+                own, bj, bk = it.blocks(p_v, cfg.n_pv)
+                lo, _ = plan.sixth_bounds(n_vp, it.slice_idx, stage)
+                jg = lo + np.arange(L)
+                if it.kind == ItemKind.DIAG:
+                    pipe_b = left_b = right_b = own
+                    mask = (li[None, :, None] < jg[:, None, None]) & (
+                        li[None, None, :] > jg[:, None, None]
+                    )
+                elif it.kind == ItemKind.FACE:
+                    pipe_b, left_b, right_b = bj, own, bj
+                    mask = np.broadcast_to(
+                        li[None, None, :] > jg[:, None, None],
+                        (L, n_vp, n_vp),
+                    )
+                else:
+                    if it.slice_axis == 0:
+                        pipe_b, left_b, right_b = own, bj, bk
+                    elif it.slice_axis == 1:
+                        pipe_b, left_b, right_b = bj, own, bk
+                    else:
+                        pipe_b, left_b, right_b = bk, own, bj
+                    mask = np.ones((L, n_vp, n_vp), bool)
+                c3 = np.asarray(executor.merge_three(
+                    B_acc[p_v, p_r, slot],
+                    pl_acc[p_v, p_r, slot] if needs else None,
+                    pr_acc[p_v, p_r, slot] if needs else None,
+                    lr_acc[p_v, p_r, slot] if needs else None,
+                    stats[pipe_b][jg], stats[left_b], stats[right_b],
+                ))
+                blocks[p_v, p_r, slot] = np.where(mask, c3, 0)
+    out = ThreeWayOutput(blocks=blocks, plan=plan, n_v=n_v, n_vp=n_vp,
+                         stage=stage)
+    info = _stream_info(splan, cfg, sh.n_shards)
+    info["staged_bytes"] = staged
+    return out, info

@@ -1,0 +1,114 @@
+"""ShardPrefetcher — background double-buffered staging loader.
+
+The streaming pipeline's I/O half: a single worker thread fills reusable
+staging buffers one chunk ahead of the consumer, so chunk ``s+1``'s disk
+reads (mmap page faults + the copy into the staging buffer) overlap chunk
+``s``'s device compute.  The consumer spends its wait inside XLA with the
+GIL released, which is what lets the worker's numpy copies make progress —
+the classic CPU-side realization of the double-buffered HDD->accelerator
+tile pipeline (arXiv 1302.4332).
+
+Buffer discipline is a free-queue / ready-queue pair (no modulo-index
+races): the worker takes an empty buffer from the free queue, fills it,
+and posts it on the ready queue; the consumer iterates ``(index, buffer)``
+pairs and MUST hand each buffer back via ``release()`` once the device
+owns the data.  With two buffers the worker is therefore never more than
+one chunk ahead — bounding peak host bytes at exactly
+``StreamPlan.peak_host_bytes``.
+
+Error handling is symmetrical and leak-free (pinned by tests/test_stream.py):
+
+* a ``fill`` exception is captured, posted on the ready queue, and
+  re-raised in the consumer thread on its next iteration;
+* consumer-side exceptions unwind through ``__exit__``, which unblocks and
+  joins the worker — no leaked threads either way.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+
+__all__ = ["ShardPrefetcher"]
+
+_DONE = object()  # worker finished every item
+_STOP = object()  # consumer shut down; unblocks a worker waiting on free_q
+
+
+class _WorkerError:
+    def __init__(self, exc):
+        self.exc = exc
+
+
+class ShardPrefetcher:
+    """Iterate ``(index, buffer)`` with the fills running one item ahead.
+
+    ``fill(index, buffer)`` stages item ``index`` into ``buffer`` in place;
+    ``buffers`` is the reusable staging pool (usually two arrays of one
+    chunk each).  Use as a context manager::
+
+        with ShardPrefetcher(fill, n_items, buffers) as pf:
+            for idx, buf in pf:
+                consume(buf)
+                pf.release(buf)
+    """
+
+    def __init__(self, fill, n_items: int, buffers):
+        if not buffers:
+            raise ValueError("need at least one staging buffer")
+        self._fill = fill
+        self._n_items = n_items
+        self._free = queue.Queue()
+        for buf in buffers:
+            self._free.put(buf)
+        self._ready = queue.Queue()
+        self._stop = threading.Event()
+        self._thread = threading.Thread(
+            target=self._run, name="repro-stream-prefetch", daemon=True
+        )
+        self._started = False
+
+    # -- worker -------------------------------------------------------------
+
+    def _run(self):
+        try:
+            for idx in range(self._n_items):
+                buf = self._free.get()
+                if buf is _STOP or self._stop.is_set():
+                    return
+                self._fill(idx, buf)
+                self._ready.put((idx, buf))
+        except BaseException as exc:  # propagated to the consumer
+            self._ready.put(_WorkerError(exc))
+        else:
+            self._ready.put(_DONE)
+
+    # -- consumer -----------------------------------------------------------
+
+    def __enter__(self):
+        self._thread.start()
+        self._started = True
+        return self
+
+    def __iter__(self):
+        while True:
+            item = self._ready.get()
+            if item is _DONE:
+                return
+            if isinstance(item, _WorkerError):
+                raise item.exc
+            yield item
+
+    def release(self, buf) -> None:
+        """Return a consumed buffer to the pool (the worker may refill it)."""
+        self._free.put(buf)
+
+    def close(self) -> None:
+        """Stop the worker and join it (idempotent; never leaks a thread)."""
+        self._stop.set()
+        self._free.put(_STOP)  # unblock a worker waiting for a buffer
+        if self._started:
+            self._thread.join()
+
+    def __exit__(self, *exc_info):
+        self.close()
+        return False

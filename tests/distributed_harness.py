@@ -79,8 +79,9 @@ def check_2way(V, ref_dense):
     print("  2way levels impl: OK")
     # fused-levels campaign path: packed bit-planes encoded once, ring-
     # carried, MXU plane kernels with in-kernel epilogue + triangular
-    # diagonal schedule; n_pf=2 exercises the unfused plane contraction
-    # (hoisted encode + psum).  All bit-identical to the xla reference.
+    # diagonal schedule; n_pf=2 keeps the fused MXU kernels but emits raw
+    # psummed partials assembled by the out-of-kernel merge epilogue.
+    # All bit-identical to the xla reference.
     for n_pf, n_pv, n_pr in [(1, 2, 1), (1, 4, 1), (1, 2, 2), (2, 2, 1)]:
         cfg = CometConfig(n_pf=n_pf, n_pv=n_pv, n_pr=n_pr, impl="levels",
                           levels=15)
@@ -280,6 +281,50 @@ def check_plane_store(V):
             mgemm_levels.encode_bitplanes_np = orig
 
 
+def check_streamed(V):
+    """Streamed campaigns (repro.stream) under multi-device meshes: the
+    chunked deferred-flush pipeline + cross-shard merge epilogue must be
+    bit-identical to the in-memory engines for 2-way AND 3-way, including
+    byte-axis "pf" sharding of the chunks and a budget that forces >1
+    chunk per shard."""
+    import tempfile
+
+    from repro.store import DatasetReader, write_dataset
+    from repro.stream import stream_twoway, stream_threeway
+
+    want2 = czek2_distributed(
+        V, make_comet_mesh(1, 1, 1), CometConfig()).checksum()
+    want3 = czek3_distributed(
+        V, make_comet_mesh(1, 1, 1), CometConfig(), stage=0).checksum()
+    with tempfile.TemporaryDirectory() as tmp:
+        write_dataset(tmp, V, levels=15, n_shards=2)
+        sh = DatasetReader(tmp).sharded()
+        for n_pf, n_pv, n_pr, budget in [
+            (1, 2, 1, 0),          # shard-per-chunk default
+            (2, 2, 1, 0),          # byte axis split over "pf" per chunk
+            # tight budget -> 1-byte chunks (2 * levels * n_v * 1 = 720
+            # bytes double-buffered fits; a whole shard would not)
+            (1, 2, 2, 800),
+        ]:
+            cfg = CometConfig(n_pf=n_pf, n_pv=n_pv, n_pr=n_pr,
+                              impl="levels", levels=15, streaming="on",
+                              max_host_bytes=budget)
+            mesh = make_comet_mesh(n_pf, n_pv, n_pr)
+            out2, info2 = stream_twoway(sh, mesh, cfg)
+            assert out2.checksum() == want2, (
+                f"streamed 2way != in-memory ({n_pf},{n_pv},{n_pr})"
+            )
+            out3, info3 = stream_threeway(sh, mesh, cfg, stage=0)
+            assert out3.checksum() == want3, (
+                f"streamed 3way != in-memory ({n_pf},{n_pv},{n_pr})"
+            )
+            if budget:
+                assert info2["peak_host_bytes"] <= budget, info2
+                assert info2["chunks"] > sh.n_shards, info2
+            print(f"  streamed pf={n_pf} pv={n_pv} pr={n_pr} "
+                  f"chunks={info2['chunks']}: OK")
+
+
 def main():
     V = random_integer_vectors(N_F, N_V, max_value=15, seed=42)
     print("2-way decomposition invariance:")
@@ -290,6 +335,8 @@ def main():
     check_engine_parity(V)
     print("plane-store zero-encode campaigns (repro.store):")
     check_plane_store(V)
+    print("streamed campaigns (repro.stream):")
+    check_streamed(V)
     print("ALL DISTRIBUTED CHECKS PASSED")
 
 

@@ -257,19 +257,23 @@ def test_threeway_levels_batch_parity():
 
 def test_executor_path_property():
     spec = CZEKANOWSKI
-    cases = [
-        (CometConfig(impl="pallas"), "fused-vpu"),
-        (CometConfig(impl="levels"), "fused-levels"),
-        (CometConfig(impl="levels_xla"), "unfused"),
-        (CometConfig(impl="xla"), "unfused"),
-        (CometConfig(impl="levels", n_pf=2), "unfused"),
-        (CometConfig(impl="pallas", n_pf=2), "unfused"),
+    cases = [  # (cfg, want_path, reason_fragment)
+        (CometConfig(impl="pallas"), "fused-vpu", ""),
+        (CometConfig(impl="levels"), "fused-levels", ""),
+        (CometConfig(impl="levels_xla"), "unfused", "no fused kernel"),
+        (CometConfig(impl="xla"), "unfused", "no fused kernel"),
+        # n_pf > 1 keeps the MXU path fused: raw in-kernel numerators,
+        # psummed over "pf", assembled by the merge epilogue
+        (CometConfig(impl="levels", n_pf=2), "fused-levels",
+         "merge epilogue"),
+        # the VPU kernel has no raw-numerator form, so it still demotes
+        (CometConfig(impl="pallas", n_pf=2), "unfused", "n_pf"),
     ]
-    for cfg, want in cases:
+    for cfg, want, frag in cases:
         ex = TileExecutor(cfg=cfg, metric=spec)
         assert ex.path == want, (cfg.impl, cfg.n_pf, ex.path)
         assert ex.fused == (want != "unfused")
-        assert (ex.path_reason == "") == ex.fused
+        assert frag in ex.path_reason, (want, ex.path_reason)
     # a product-combine metric cannot take the level decomposition
     from repro.api.registry import get_metric
 

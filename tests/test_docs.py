@@ -128,5 +128,12 @@ def test_architecture_path_matrix_matches_executor():
     for (impl, enc), want in rows3.items():
         ex = TileExecutor(cfg=CometConfig(impl=impl, encoding=enc))
         assert ex.path3 == want, (impl, enc, ex.path3)
+    # n_pf > 1 keeps the fused MXU path: raw in-kernel partials, psummed
+    # over "pf", assembled by the merge epilogue out of kernel
     ex = TileExecutor(cfg=CometConfig(impl="levels", n_pf=2))
-    assert ex.path == "unfused" and "n_pf" in ex.path_reason
+    assert ex.path == "fused-levels" and "merge epilogue" in ex.path_reason
+    # streamed campaigns defer every flush to the cross-shard merge
+    ex = TileExecutor(cfg=CometConfig(impl="levels", encoding="bitplane"),
+                      deferred=True)
+    assert ex.path == "streamed-fused-levels"
+    assert ex.path3 == "streamed-fused-levels-ring"

@@ -1,0 +1,356 @@
+"""repro.stream: out-of-core streamed campaigns.
+
+Pins the streaming acceptance contract (ISSUE / docs/BITPLANE_FORMAT.md
+"Cross-shard merge"):
+
+* streamed 2-way AND 3-way campaigns are BIT-IDENTICAL (checksum) to
+  in-memory runs — across shard counts (1, 2), chunk/shard-mismatched
+  budgets (chunks crossing disk shard boundaries), and non-multiple-of-8
+  field counts (hypothesis);
+* ``StreamPlan`` geometry: chunk_kb is a positive n_pf multiple, chunks
+  tile the payload byte axis exactly, spans reassemble the global payload,
+  ``peak_host_bytes`` respects ``max_host_bytes`` and an impossible budget
+  raises (naming the minimum) instead of overshooting;
+* streamed campaigns never run the host encoder (counter monkeypatch) and
+  never stage more than the budget (``meta["stream"]`` accounting);
+* ``ShardPrefetcher`` propagates worker errors to the consumer and never
+  leaks its thread — error, early-exit, and normal paths all join;
+* the n_pf > 1 fused-levels merge path (raw kernel numerator + merge
+  epilogue) is bit-identical to the in-kernel epilogue and to the unfused
+  XLA assembly.
+
+Multi-device decompositions (n_pf=2 chunks, streamed meshes) are covered
+in tests/distributed_harness.py.
+"""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+import repro.kernels.mgemm_levels as mgemm_levels
+from repro.api import InputSpec, SimilarityEngine, SimilarityRequest
+from repro.core.synthetic import random_integer_vectors
+from repro.core.threeway import czek3_distributed
+from repro.core.twoway import CometConfig, czek2_distributed, resolve_config
+from repro.parallel.mesh import make_comet_mesh
+from repro.store import write_dataset
+from repro.stream import (
+    ShardPrefetcher,
+    StreamPlan,
+    fill_chunk,
+    stream_threeway,
+    stream_twoway,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+LEVELS = 3
+
+
+def _matrix(n_f, n_v, seed=0):
+    return random_integer_vectors(n_f, n_v, max_value=LEVELS, seed=seed)
+
+
+def _write(tmp_path, V, n_shards, name="ds"):
+    path = os.path.join(str(tmp_path), name)
+    write_dataset(path, V, levels=LEVELS, n_shards=n_shards)
+    return path
+
+
+# -- StreamPlan geometry -----------------------------------------------------
+
+
+def test_stream_plan_default_is_shard_per_chunk():
+    p = StreamPlan.plan(levels=3, kb=8, kbs=4, n_shards=2, n_v=16,
+                        n_v_data=10)
+    assert p.chunk_kb == 4 and p.n_chunks == 2
+    assert p.chunk_shape == (3, 4, 16)
+    assert p.n_buffers == 2
+    assert p.peak_host_bytes == 2 * 3 * 4 * 16
+
+
+def test_stream_plan_single_chunk_single_buffer():
+    p = StreamPlan.plan(levels=3, kb=4, kbs=4, n_shards=1, n_v=8,
+                        n_v_data=8)
+    assert p.n_chunks == 1 and p.n_buffers == 1
+    assert p.peak_host_bytes == p.chunk_nbytes
+
+
+@pytest.mark.parametrize("n_pf", [1, 2, 4])
+def test_stream_plan_budget_math(n_pf):
+    levels, n_v, kb = 3, 16, 32
+    budget = 2 * levels * n_v * (3 * n_pf) + 5  # fits 3*n_pf bytes/chunk
+    p = StreamPlan.plan(levels=levels, kb=kb, kbs=kb, n_shards=1, n_v=n_v,
+                        n_v_data=n_v, n_pf=n_pf, max_host_bytes=budget)
+    assert p.chunk_kb % n_pf == 0 and p.chunk_kb >= n_pf
+    assert p.peak_host_bytes <= budget
+    # largest feasible chunk: one byte more per chunk would overshoot
+    assert 2 * levels * n_v * (p.chunk_kb + n_pf) > budget
+
+
+def test_stream_plan_budget_too_small_raises():
+    with pytest.raises(ValueError, match="cannot stage two"):
+        StreamPlan.plan(levels=3, kb=8, kbs=8, n_shards=1, n_v=16,
+                        n_v_data=16, n_pf=2, max_host_bytes=100)
+
+
+def test_stream_plan_chunks_tile_payload_across_shards():
+    # chunk_kb=3 vs kbs=2: chunks cross disk shard boundaries
+    p = StreamPlan(levels=2, kb=8, kbs=2, n_shards=4, n_v=8, n_v_data=8,
+                   n_pf=1, chunk_kb=3)
+    chunks = p.chunks()
+    assert [c.start for c in chunks] == [0, 3, 6]
+    assert chunks[-1].stop == 8
+    for c in chunks:
+        off = 0
+        g = c.start
+        for rank, lo, hi, buf_off in c.spans:
+            assert buf_off == off and 0 <= lo < hi <= p.kbs
+            assert rank * p.kbs + lo == g  # spans are globally contiguous
+            off += hi - lo
+            g += hi - lo
+        assert g == c.stop
+    assert chunks[0].spans[0][0] == 0 and len(chunks[0].spans) == 2
+
+
+def test_stream_plan_rejects_misaligned_chunk():
+    with pytest.raises(ValueError, match="multiple of"):
+        StreamPlan(levels=2, kb=8, kbs=8, n_shards=1, n_v=8, n_v_data=8,
+                   n_pf=2, chunk_kb=3)
+
+
+def test_fill_chunk_reassembles_payload():
+    rng = np.random.default_rng(0)
+    levels, kb, kbs, n_v = 2, 10, 5, 6
+    payload = rng.integers(0, 256, (levels, kb, n_v)).astype(np.uint8)
+    shards = [payload[:, r * kbs:(r + 1) * kbs, :] for r in range(2)]
+    p = StreamPlan(levels=levels, kb=kb, kbs=kbs, n_shards=2, n_v=n_v + 2,
+                   n_v_data=n_v, n_pf=1, chunk_kb=4)
+    buf = np.full(p.chunk_shape, 0xFF, np.uint8)
+    got = np.zeros((levels, p.n_chunks * p.chunk_kb, n_v + 2), np.uint8)
+    for c in p.chunks():
+        buf[:, :, :n_v] = 0xFF  # staging buffers are REUSED; fill must win
+        fill_chunk(buf, c, lambda r: shards[r], n_v)
+        got[:, c.start:c.start + p.chunk_kb] = buf
+    np.testing.assert_array_equal(got[:, :kb, :n_v], payload)
+    assert not got[:, kb:, :].any()  # tail chunk zero-padded (all columns)
+    # padding columns in valid rows are never written by fill (the pipeline
+    # zeroes them once at allocation) — the sentinel survives
+    assert (got[:, :kb, n_v:] == 0xFF).all()
+
+
+# -- streamed == in-memory (bit-identical checksums) -------------------------
+
+
+@pytest.mark.parametrize("n_shards,budget", [
+    (1, 0),      # single shard, streamed explicitly
+    (2, 0),      # shard-per-chunk default
+    # tight budget: chunk_kb=3 vs kbs=4 — chunks cross shard boundaries
+    # (budget_kb = 250 // (2 * 3 * 12) = 3)
+    (2, 250),
+])
+def test_streamed_matches_inmemory(tmp_path, n_shards, budget):
+    n_f, n_v = 64, 12  # kb=8: divides both shard counts; n_v % 6 == 0
+    V = _matrix(n_f, n_v)
+    path = _write(tmp_path, V, n_shards, f"ds{n_shards}_{budget}")
+    mesh = make_comet_mesh(1, 1, 1)
+    cfg = CometConfig(impl="levels", levels=LEVELS, streaming="on",
+                      max_host_bytes=budget)
+    ref2 = czek2_distributed(V, mesh, CometConfig()).checksum()
+    ref3 = czek3_distributed(V, mesh, CometConfig(), stage=0).checksum()
+
+    out2, info2 = stream_twoway(path, mesh, cfg)
+    assert out2.checksum() == ref2
+    out3, info3 = stream_threeway(path, mesh, cfg, stage=0)
+    assert out3.checksum() == ref3
+
+    for info in (info2, info3):
+        assert info["n_shards"] == n_shards
+        if budget:
+            assert info["peak_host_bytes"] <= budget
+            assert info["staged_bytes"] <= budget
+            assert info["chunks"] > n_shards  # budget forced sub-shard chunks
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=5, deadline=None)
+    @given(n_f=st.integers(9, 40).filter(lambda n: n % 8),
+           seed=st.integers(0, 2**16))
+    def test_streamed_nonmultiple_of_8_fields(tmp_path_factory, n_f, seed):
+        """Partial trailing bytes in the packed planes stay inert when the
+        byte axis is chunked (zero bits encode zero fields)."""
+        n_v = 6
+        V = _matrix(n_f, n_v, seed=seed)
+        tmp = tmp_path_factory.mktemp("stream_hyp")
+        path = _write(tmp, V, 1, f"ds{n_f}_{seed}")
+        mesh = make_comet_mesh(1, 1, 1)
+        # 2-byte chunks: levels * n_v * 2 bytes double-buffered
+        cfg = CometConfig(impl="levels", levels=LEVELS, streaming="on",
+                          max_host_bytes=2 * LEVELS * n_v * 2)
+        out, info = stream_twoway(path, mesh, cfg)
+        ref = czek2_distributed(V, mesh, CometConfig()).checksum()
+        assert out.checksum() == ref, f"n_f={n_f} chunks={info['chunks']}"
+
+
+# -- engine dispatch: auto streaming, zero-encode, accounting ----------------
+
+
+def test_engine_streams_and_never_encodes(tmp_path, monkeypatch):
+    V = _matrix(64, 12)
+    path = _write(tmp_path, V, 2)
+    engine = SimilarityEngine()
+    spec = InputSpec(source="planes", path=path)
+
+    calls = {"n": 0}
+    orig = mgemm_levels.encode_bitplanes_np
+
+    def counted(*args, **kwargs):
+        calls["n"] += 1
+        return orig(*args, **kwargs)
+
+    monkeypatch.setattr(mgemm_levels, "encode_bitplanes_np", counted)
+    for way in (2, 3):
+        want = engine.run(
+            SimilarityRequest(way=way, impl="levels", levels=LEVELS), V
+        ).checksum()
+        assert calls["n"] > 0  # the in-memory run DID encode
+        calls["n"] = 0
+        res = engine.run(SimilarityRequest(
+            way=way, impl="levels", levels=LEVELS, input=spec,
+            max_host_bytes=400,
+        ))
+        assert calls["n"] == 0, "streamed campaign ran the host encoder"
+        assert res.checksum() == want
+        # multi-shard source="planes" resolves streaming="auto" -> on
+        stream = res.meta["stream"]
+        assert stream["chunks"] >= 2 and stream["n_shards"] == 2
+        assert stream["staged_bytes"] <= 400
+        assert stream["peak_host_bytes"] <= 400
+
+
+def test_engine_streaming_off_matches_streamed(tmp_path):
+    V = _matrix(64, 12)
+    path = _write(tmp_path, V, 2)
+    engine = SimilarityEngine()
+    spec = InputSpec(source="planes", path=path)
+    base = dict(way=2, impl="levels", levels=LEVELS, input=spec)
+    on = engine.run(SimilarityRequest(streaming="on", **base))
+    off = engine.run(SimilarityRequest(streaming="off", **base))
+    assert "stream" in on.meta and "stream" not in off.meta
+    assert on.checksum() == off.checksum()
+
+
+def test_streaming_request_validation(tmp_path):
+    with pytest.raises(ValueError, match="streaming"):
+        SimilarityRequest(streaming="sometimes").validate()
+    with pytest.raises(ValueError, match="max_host_bytes"):
+        SimilarityRequest(max_host_bytes=-1).validate()
+    with pytest.raises(ValueError, match="store-backed"):
+        SimilarityRequest(
+            streaming="on",
+            input=InputSpec(source="synthetic", n_f=8, n_v=8),
+        ).validate()
+    # resolve_config: a resident value matrix cannot stream
+    with pytest.raises(ValueError, match="store-backed"):
+        from repro.core.metric_spec import CZEKANOWSKI
+        resolve_config(CometConfig(streaming="on"), _matrix(8, 8),
+                       CZEKANOWSKI)
+
+
+# -- prefetcher lifecycle ----------------------------------------------------
+
+
+def _prefetch_threads():
+    return [t for t in threading.enumerate()
+            if t.name == "repro-stream-prefetch" and t.is_alive()]
+
+
+def test_prefetcher_propagates_fill_error_and_joins():
+    buffers = [np.zeros(4, np.uint8) for _ in range(2)]
+
+    def fill(idx, buf):
+        if idx == 1:
+            raise RuntimeError("disk on fire")
+        buf[:] = idx
+
+    seen = []
+    with pytest.raises(RuntimeError, match="disk on fire"):
+        with ShardPrefetcher(fill, 4, buffers) as pf:
+            for idx, buf in pf:
+                seen.append(idx)
+                pf.release(buf)
+    assert seen == [0]
+    assert not _prefetch_threads(), "worker thread leaked after fill error"
+
+
+def test_prefetcher_consumer_abort_joins():
+    buffers = [np.zeros(4, np.uint8) for _ in range(2)]
+
+    def fill(idx, buf):
+        buf[:] = idx
+
+    with ShardPrefetcher(fill, 100, buffers) as pf:
+        for idx, buf in pf:
+            break  # consumer bails without draining or releasing
+    assert not _prefetch_threads(), "worker thread leaked after early exit"
+
+
+def test_prefetcher_orders_items_and_bounds_lookahead():
+    buffers = [np.zeros(1, np.uint8) for _ in range(2)]
+    in_flight = {"now": 0, "max": 0}
+    lock = threading.Lock()
+
+    def fill(idx, buf):
+        with lock:
+            in_flight["now"] += 1
+            in_flight["max"] = max(in_flight["max"], in_flight["now"])
+        buf[0] = idx
+
+    got = []
+    with ShardPrefetcher(fill, 8, buffers) as pf:
+        for idx, buf in pf:
+            assert buf[0] == idx
+            got.append(idx)
+            with lock:
+                in_flight["now"] -= 1
+            pf.release(buf)
+    assert got == list(range(8))
+    # two buffers => never more than two chunks staged at once
+    assert in_flight["max"] <= 2
+
+
+# -- n_pf > 1 merge epilogue == in-kernel epilogue (executor level) ----------
+
+
+def test_merge_pair_bitwise_matches_fused_and_unfused():
+    from repro.core.tile_executor import TileExecutor
+
+    V = _matrix(40, 16)  # non-multiple-of-8 fields
+    A, B = V[:, :8], V[:, 8:]
+    sa, sb = A.sum(axis=0), B.sum(axis=0)
+    mk = lambda **kw: TileExecutor(
+        cfg=CometConfig(impl="levels", levels=LEVELS, **kw), axis=None
+    )
+    fused = mk()
+    merged = mk(n_pf=2)  # psum over "pf" is the identity at axis=None
+    unfused = TileExecutor(cfg=CometConfig(impl="xla"), axis=None)
+    assert fused.path == "fused-levels" and fused.path_reason == ""
+    assert merged.path == "fused-levels"
+    assert "merge epilogue" in merged.path_reason
+
+    for diag, (Vb, s2) in {False: (B, sb), True: (A, sa)}.items():
+        want = np.asarray(fused.pair_block(A, sa, Vb, s2, diagonal=diag))
+        got = np.asarray(merged.pair_block(A, sa, Vb, s2, diagonal=diag))
+        xla = np.asarray(unfused.pair_block(A, sa, Vb, s2, diagonal=diag))
+        np.testing.assert_array_equal(got, want)
+        np.testing.assert_array_equal(got, xla)
+        # and merge_pair applied to the raw partial is the same assembly
+        n2 = merged.pair_partial(A, Vb)
+        manual = np.asarray(merged.merge_pair(n2, sa, s2, diagonal=diag))
+        np.testing.assert_array_equal(manual, want)
