@@ -85,6 +85,64 @@ def _sweep_callables(A, B, sa, sb, levels):
     }
 
 
+def binary_sweep(shapes=SWEEP_SHAPES):
+    """levels=1 entries for BENCH_kernels.json: the popcount bit-GEMM vs the
+    bf16 plane kernels on the same binary ({0,1}) operands.
+
+    Three impls per shape, all fed the SAME pre-encoded single-plane
+    payload (campaign conditions — encode is hoisted):
+
+    * ``popcount``     — ``metric2_pop``: AND + ``lax.population_count`` on
+      packed bytes, fused epilogue (``path == "fused-popcount"``);
+    * ``fused-levels`` — ``metric2_levels`` at levels=1: unpack to bf16
+      indicators, MXU plane dot, fused epilogue (what binary campaigns ran
+      before the fast path);
+    * ``levels_xla``   — the unfused XLA plane contraction.
+
+    Entries carry ``"levels": 1`` so the binary rows are distinguishable
+    from the leveled sweep at the same shapes.  The acceptance gate:
+    ``popcount`` >= the ``fused-levels`` rate at every measured shape.
+    """
+    from repro.core.metric_spec import czek_assemble_tile
+    from repro.kernels.mgemm_levels import (
+        encode_bitplanes,
+        metric2_levels,
+        mgemm_levels_planes_xla,
+    )
+    from repro.kernels.popgemm import metric2_pop
+
+    entries = []
+    rng = np.random.default_rng(1)
+    for m, k, n in shapes:
+        A = jnp.asarray(rng.integers(0, 2, (m, k)).astype(np.float32))
+        B = jnp.asarray(rng.integers(0, 2, (k, n)).astype(np.float32))
+        sa = A.sum(axis=1)
+        sb = B.sum(axis=0)
+        Pa = jax.block_until_ready(encode_bitplanes(A.T, 1))
+        Pb = jax.block_until_ready(encode_bitplanes(B, 1))
+        bm = min(256, m)
+        bn = min(256, n)
+        bytes_moved = (m * k + k * n + m * n) * 4
+        calls = {
+            "popcount": lambda: metric2_pop(
+                Pa, Pb, sa, sb, epilogue=czek_assemble_tile, bm=bm, bn=bn),
+            "fused-levels": lambda: metric2_levels(
+                Pa, Pb, sa, sb, epilogue=czek_assemble_tile, bm=bm, bn=bn),
+            "levels_xla": lambda: mgemm_levels_planes_xla(Pa, Pb),
+        }
+        for impl, fn in calls.items():
+            t = time_fn(lambda fn=fn: fn(), warmup=2, iters=9, reduce="min")
+            entries.append({
+                "impl": impl,
+                "levels": 1,
+                "m": m, "k": k, "n": n,
+                "seconds": t,
+                "gib_per_s": bytes_moved / t / 2**30,
+                "comparisons_per_s": m * k * n / t,
+            })
+    return entries
+
+
 def ingest_entries(shapes=INGEST_SHAPES, max_value=3):
     """Store-load vs host-encode entries for BENCH_kernels.json.
 

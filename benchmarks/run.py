@@ -35,9 +35,12 @@ BENCH_KERNELS = os.path.join(
 #: "stream"/"stream_seq" are the out-of-core overlap entries
 #: (repro.stream): the double-buffered prefetch pipeline vs the same
 #: chunks staged and contracted serially.
+#: "popcount" is the binary (levels=1) bit-GEMM fast path
+#: (repro.kernels.popgemm) — its entries carry "levels": 1, alongside
+#: levels=1 "fused-levels"/"levels_xla" rows on the same binary operands.
 KNOWN_IMPLS = {
     "xla", "levels_xla", "levels_xla_hoisted", "levels",
-    "pallas", "pallas_fused", "fused-levels",
+    "pallas", "pallas_fused", "fused-levels", "popcount",
     "host_encode", "store_load",
     "stream", "stream_seq",
 }
@@ -90,6 +93,7 @@ def write_bench_kernels(shapes=None, out: str = BENCH_KERNELS,
         INGEST_SHAPES,
         STREAM_SHAPE,
         SWEEP_SHAPES,
+        binary_sweep,
         ingest_entries,
         kernel_sweep,
         stream_entries,
@@ -101,8 +105,11 @@ def write_bench_kernels(shapes=None, out: str = BENCH_KERNELS,
                 "host_encode/store_load are ingest entries "
                 "(comparisons_per_s = matrix elements ingested per second); "
                 "stream/stream_seq are out-of-core overlap entries with "
-                "staging floored to bench_kernel.STREAM_MODEL_MIB_S",
+                "staging floored to bench_kernel.STREAM_MODEL_MIB_S; "
+                "entries with levels=1 are the binary sweep (popcount "
+                "bit-GEMM vs the bf16 plane kernels on {0,1} data)",
         "entries": (kernel_sweep(shapes or SWEEP_SHAPES, max_value=max_value)
+                    + binary_sweep(shapes or SWEEP_SHAPES)
                     + ingest_entries(shapes or INGEST_SHAPES,
                                      max_value=max_value)
                     + stream_entries(shapes[-1] if shapes else STREAM_SHAPE,

@@ -8,6 +8,7 @@ through ``register_metric`` without touching engine code.
 from repro.api.engine import SimilarityEngine  # noqa: F401
 from repro.api.registry import (  # noqa: F401
     CCC,
+    SORENSON,
     MetricSpec,
     UnknownMetricError,
     available_metrics,
@@ -29,4 +30,5 @@ __all__ = [
     "get_metric",
     "available_metrics",
     "CCC",
+    "SORENSON",
 ]

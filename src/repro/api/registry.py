@@ -11,6 +11,13 @@ staging, checksums) without touching any engine code.  The built-in entries:
   normalization.  Its registration below is the reference example of adding
   a metric: an elementwise combine, a per-vector statistic, and the
   numerator/denominator assemblies — ~50 lines all told.
+* ``sorenson`` — Sørensen–Dice for binary (presence/absence) data (paper
+  §2.3): ``2|A∩B| / (|A|+|B|)``.  On {0,1} data this is exactly the
+  Czekanowski arithmetic (min == AND, sums == popcounts), so it reuses the
+  same assembly functions — identical fp ops, bit-identical checksums on
+  every shared path — while its oracles are an *independent* boolean
+  AND-dot formulation.  Under ``impl="levels"``, ``levels=1`` it rides the
+  popcount bit-GEMM fast path (``path == "fused-popcount"``).
 """
 from __future__ import annotations
 
@@ -27,6 +34,7 @@ __all__ = [
     "get_metric",
     "available_metrics",
     "CCC",
+    "SORENSON",
 ]
 
 
@@ -107,6 +115,51 @@ def _ccc_oracle3(V):
     n3 = np.einsum("qi,qj,qk->ijk", V, V, V)
     d3 = np.sqrt(s[:, None, None] * s[None, :, None] * s[None, None, :])
     return n3 / safe_denom(d3)
+
+
+# ----------------------------------------------------------------------------
+# Sørensen–Dice (paper §2.3, binary presence/absence data).  For a, b in
+# {0, 1}: min(a, b) == a AND b and the column sum IS the popcount, so the
+# numerator/denominator arithmetic coincides with Czekanowski restricted to
+# binary input — the spec deliberately REUSES the czek assembly callables
+# (same fp ops object-for-object), which keeps sorenson bit-identical to
+# czekanowski on every engine path while the oracles below are derived
+# independently (boolean AND-dot, never min-plus).
+# ----------------------------------------------------------------------------
+
+def _sorenson_oracle2(V):
+    B = np.asarray(V) != 0  # boolean presence/absence view
+    inter = B.T.astype(np.float64) @ B.astype(np.float64)  # |A ∩ B| AND-dot
+    s = B.sum(axis=0).astype(np.float64)
+    return 2.0 * inter / safe_denom(s[:, None] + s[None, :])
+
+
+def _sorenson_oracle3(V):
+    B = np.asarray(V) != 0
+    Bf = B.astype(np.float64)
+    n2 = Bf.T @ Bf
+    b3 = np.einsum("qi,qj,qk->ijk", Bf, Bf, Bf)
+    n3 = n2[:, :, None] + n2[:, None, :] + n2[None, :, :] - b3
+    s = Bf.sum(axis=0)
+    d3 = s[:, None, None] + s[None, :, None] + s[None, None, :]
+    return 1.5 * n3 / safe_denom(d3)
+
+
+SORENSON = register_metric(MetricSpec(
+    name="sorenson",
+    description="Sørensen–Dice for binary data (paper §2.3): "
+                "2 |A∩B| / (|A|+|B|) — Czekanowski restricted to {0,1}",
+    ways=(2, 3),
+    combine=jnp.minimum,
+    stat=CZEKANOWSKI.stat,
+    assemble2=CZEKANOWSKI.assemble2,
+    assemble3=CZEKANOWSKI.assemble3,
+    assemble_tile=CZEKANOWSKI.assemble_tile,
+    uses_mgemm=True,
+    needs_pair_terms=True,
+    oracle2=_sorenson_oracle2,
+    oracle3=_sorenson_oracle3,
+))
 
 
 CCC = register_metric(MetricSpec(

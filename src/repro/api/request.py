@@ -98,6 +98,9 @@ class SimilarityRequest:
     stages: tuple = None
     # implementation / dtype knobs (threaded into CometConfig)
     impl: str = "xla"
+    #: plane count for the levels impls; ``levels=1`` (binary {0,1} data,
+    #: e.g. the sorenson metric) additionally swaps the plane-dot kernels
+    #: for the popcount bit-GEMM fast path (``path == "fused-popcount"``)
     levels: int = 2
     out_dtype: str = "float32"
     #: "auto" ring-carries int8 when the data is integer-valued with

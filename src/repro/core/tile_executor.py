@@ -13,7 +13,10 @@ triangle with ``jnp.where``.  The executor owns all of that now:
   ``repro.kernels.mgemm`` under ``impl="pallas"`` (``path ==
   "fused-vpu"``), or the packed bit-plane MXU kernel of
   ``repro.kernels.mgemm_levels`` under ``impl="levels"`` with a
-  min-combine metric (``path == "fused-levels"``).  Either way the
+  min-combine metric (``path == "fused-levels"``; for binary campaigns —
+  ``levels == 1`` — the popcount bit-GEMM of ``repro.kernels.popgemm``
+  serves the same role as ``path == "fused-popcount"``, packed AND +
+  popcount with no plane unpack).  Either way the
   numerator tile is divided in VMEM and never written to HBM (paper §3.1's
   epilogue fusion, for every registered metric instead of a hard-coded
   Czekanowski one-off).  ``path`` / ``path_reason`` surface the 2-way
@@ -121,9 +124,9 @@ class TileExecutor:
                 and self.metric.combine is jnp.minimum
             ):
                 # raw-numerator kernel form + psum + out-of-kernel assembly:
-                # the fused MXU contraction and the triangular diagonal
+                # the fused contraction and the triangular diagonal
                 # schedule survive the field split
-                return "fused-levels", "n_pf>1 merge epilogue engaged"
+                return self._levels_pair_path(), "n_pf>1 merge epilogue engaged"
             return "unfused", (
                 f"n_pf={self.cfg.n_pf} splits the contraction across ranks; "
                 "the in-kernel epilogue needs the complete numerator"
@@ -135,8 +138,15 @@ class TileExecutor:
                 return "unfused", (
                     "level decomposition is exact only for combine == min"
                 )
-            return "fused-levels", ""
+            return self._levels_pair_path(), ""
         return "unfused", f"impl={self.cfg.impl!r} has no fused kernel"
+
+    def _levels_pair_path(self) -> str:
+        """Which plane kernel family serves ``impl="levels"`` 2-way blocks:
+        for binary data (``levels == 1``) the single plane is the data and
+        min == AND, so the popcount bit-GEMM replaces the bf16 plane dots —
+        same wire format, same epilogue, no unpack."""
+        return "fused-popcount" if self.cfg.levels == 1 else "fused-levels"
 
     def _deferred_path(self) -> tuple:
         """Path naming for deferred-flush (streamed) executors: chunks emit
@@ -147,7 +157,7 @@ class TileExecutor:
             and self.metric.contract_is_combine_sum
             and self.metric.combine is jnp.minimum
         ):
-            return "streamed-fused-levels", (
+            return "streamed-" + self._levels_pair_path(), (
                 "deferred flush: cross-shard merge epilogue assembles "
                 "after the last chunk"
             )
@@ -158,7 +168,8 @@ class TileExecutor:
 
     @property
     def path(self) -> str:
-        """'fused-levels' | 'fused-vpu' | 'unfused' for 2-way blocks."""
+        """'fused-popcount' | 'fused-levels' | 'fused-vpu' | 'unfused' for
+        2-way blocks (plus the 'streamed-*' deferred-flush variants)."""
         return self._path_decision()[0]
 
     @property
@@ -203,9 +214,10 @@ class TileExecutor:
                 return "unfused", (
                     "level decomposition is exact only for combine == min"
                 )
+            base = self._levels_pair_path()  # popcount when levels == 1
             if self.cfg.encoding == "bitplane":
-                return "fused-levels-ring", ""
-            return "fused-levels", (
+                return base + "-ring", ""
+            return base, (
                 f"encoding={self.cfg.encoding!r}: ring carries "
                 f"{self.cfg.ring_dtype} values, planes encoded per slice"
             )
@@ -213,8 +225,8 @@ class TileExecutor:
 
     @property
     def path3(self) -> str:
-        """'fused-levels-ring' | 'fused-levels' | 'fused-vpu' | 'unfused'
-        for 3-way slices."""
+        """'fused-popcount-ring' | 'fused-popcount' | 'fused-levels-ring' |
+        'fused-levels' | 'fused-vpu' | 'unfused' for 3-way slices."""
         return self._path3_decision()[0]
 
     @property
@@ -295,17 +307,30 @@ class TileExecutor:
                 bm=_auto_tile(m, DEFAULT_BM), bn=_auto_tile(n, DEFAULT_BN),
                 **kw,
             )
-        if path == "fused-levels":
+        if path in ("fused-levels", "fused-popcount"):
             from repro.kernels.mgemm import unpack_tri_tiles
-            from repro.kernels.mgemm_levels import (
-                metric2_levels,
-                metric2_levels_tri,
-            )
-            from repro.kernels.mgemm_levels.kernel import (
-                DEFAULT_BKB,
-                DEFAULT_BM as LEVELS_BM,
-                DEFAULT_BN as LEVELS_BN,
-            )
+
+            if path == "fused-popcount":
+                # binary fast path: packed AND + popcount, no plane unpack
+                from repro.kernels.popgemm import (
+                    metric2_pop as metric2_fn,
+                    metric2_pop_tri as metric2_tri_fn,
+                )
+                from repro.kernels.popgemm.kernel import (
+                    DEFAULT_BKB,
+                    DEFAULT_BM as LEVELS_BM,
+                    DEFAULT_BN as LEVELS_BN,
+                )
+            else:
+                from repro.kernels.mgemm_levels import (
+                    metric2_levels as metric2_fn,
+                    metric2_levels_tri as metric2_tri_fn,
+                )
+                from repro.kernels.mgemm_levels.kernel import (
+                    DEFAULT_BKB,
+                    DEFAULT_BM as LEVELS_BM,
+                    DEFAULT_BN as LEVELS_BN,
+                )
 
             # n_pf > 1: the kernels run with ``epilogue=None`` (raw fp32
             # numerator, triangular diagonal schedule preserved) and the
@@ -321,10 +346,10 @@ class TileExecutor:
             )
             if diagonal:
                 bt = _auto_tile(m, LEVELS_BM)
-                packed = metric2_levels_tri(Pa, sa, bt=bt, **kw)
+                packed = metric2_tri_fn(Pa, sa, bt=bt, **kw)
                 vals = unpack_tri_tiles(packed, m, bt)
             else:
-                vals = metric2_levels(
+                vals = metric2_fn(
                     Pa, Pb, sa, sb,
                     bm=_auto_tile(m, LEVELS_BM), bn=_auto_tile(n, LEVELS_BN),
                     **kw,
@@ -403,10 +428,22 @@ class TileExecutor:
 
     def _contract_planes(self, Pa, Pb):
         """Unfused numerator from pre-encoded planes: the per-ring-step
-        ``(V >= t)`` indicator construction is gone from the hot loop."""
+        ``(V >= t)`` indicator construction is gone from the hot loop.
+        Binary planes (``levels == 1``) contract via the popcount bit-GEMM
+        — this one routing point serves ``pair_partial`` (streamed chunks),
+        ``pair_numerator`` (3-way pair terms), and the unfused-plane 3-way
+        slice alike."""
         if self.cfg.impl == "levels":
-            from repro.kernels.mgemm_levels import mgemm_levels_planes
+            if self.cfg.levels == 1:
+                from repro.kernels.popgemm import pop_planes
+                from repro.kernels.popgemm.kernel import (
+                    DEFAULT_BKB as POP_BKB,
+                )
 
+                return pop_planes(
+                    Pa, Pb, bkb=max(1, min(POP_BKB, Pa.shape[1]))
+                )
+            from repro.kernels.mgemm_levels import mgemm_levels_planes
             from repro.kernels.mgemm_levels.kernel import DEFAULT_BKB
 
             return mgemm_levels_planes(
@@ -451,10 +488,23 @@ class TileExecutor:
 
             if self.cfg.impl == "levels":
                 # level-decomposed slice: X_j is a packed AND of plane
-                # bytes, the contraction L MXU dot_generals per K-tile.
-                # On the plane ring the operands arrive pre-encoded.
-                from repro.kernels.czek3 import threeway_batch_levels
+                # bytes, the contraction L MXU dot_generals per K-tile —
+                # or, for binary planes, a popcount of the packed AND (the
+                # whole slice never unpacks a byte).  On the plane ring the
+                # operands arrive pre-encoded.
+                if self.cfg.levels == 1:
+                    from repro.kernels.popgemm import threeway_batch_pop as batch_fn
+                    from repro.kernels.popgemm.kernel import (
+                        DEFAULT_BKB,
+                        DEFAULT_BM3 as BM3,
+                        DEFAULT_BN3 as BN3,
+                    )
+                else:
+                    from repro.kernels.czek3 import (
+                        threeway_batch_levels as batch_fn,
+                    )
 
+                    BM3, BN3 = DEFAULT_BM, DEFAULT_BN
                 if planes:
                     Pl, Pp, Pr = left, ps, right
                 else:
@@ -464,10 +514,10 @@ class TileExecutor:
                     Pl = encode_bitplanes(left, lv)
                     Pp = encode_bitplanes(ps, lv)
                     Pr = Pl if right is left else encode_bitplanes(right, lv)
-                return threeway_batch_levels(
+                return batch_fn(
                     Pl, Pp, Pr,
-                    bm=_auto_tile(m, DEFAULT_BM),
-                    bn=_auto_tile(n, DEFAULT_BN),
+                    bm=_auto_tile(m, BM3),
+                    bn=_auto_tile(n, BN3),
                     bkb=max(1, min(DEFAULT_BKB, Pl.shape[1])),
                 )
             return threeway_batch(

@@ -7,6 +7,7 @@ from .ops import (  # noqa: F401
     mgemm_levels_xla,
 )
 from .planes import (  # noqa: F401
+    POPCOUNT,
     PackedPlanes,
     decode_bitplanes,
     encode_bitplanes,

@@ -46,6 +46,14 @@ A worked example (doctested; 3 fields, 2 vectors, levels=2):
 [2, 0]
 >>> np.asarray(values_from_planes(P))[:3].astype(int).tolist()
 [[0, 1], [2, 1], [1, 0]]
+
+Per-plane popcounts via the shared ``POPCOUNT`` byte table (the store's
+stats sidecar and the popgemm reference both count planes this way):
+
+>>> [int(POPCOUNT[b]) for b in (0b0, 0b1, 0b1011, 0xFF)]
+[0, 1, 3, 8]
+>>> POPCOUNT[P].sum(axis=1).astype(int).tolist()  # == column sums per plane
+[[2, 2], [1, 0]]
 """
 from __future__ import annotations
 
@@ -57,6 +65,7 @@ import numpy as np
 
 __all__ = [
     "PackedPlanes",
+    "POPCOUNT",
     "encode_bitplanes",
     "encode_bitplanes_np",
     "decode_bitplanes",
@@ -66,6 +75,13 @@ __all__ = [
     "slice_planes_vectors",
     "shard_planes_fields",
 ]
+
+#: Byte-popcount lookup: ``POPCOUNT[byte]`` = number of set bits.  The one
+#: shared table behind every host-side popcount over packed planes — the
+#: store writer's stats sidecar, the reader's ``validate()`` scan, and the
+#: popgemm reference oracle all index it, so "popcount of a plane byte"
+#: has exactly one definition next to the format it counts.
+POPCOUNT = np.array([bin(i).count("1") for i in range(256)], np.uint8)
 
 
 @dataclass(frozen=True, eq=False)

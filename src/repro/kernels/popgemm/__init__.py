@@ -1,0 +1,12 @@
+from .kernel import (  # noqa: F401
+    metric2_pop_pallas,
+    metric2_pop_tri_pallas,
+    threeway_batch_pop_pallas,
+)
+from .ops import (  # noqa: F401
+    metric2_pop,
+    metric2_pop_tri,
+    pop_planes,
+    threeway_batch_pop,
+)
+from .ref import pop_planes_ref, threeway_pop_ref  # noqa: F401

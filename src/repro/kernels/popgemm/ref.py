@@ -1,0 +1,28 @@
+"""Numpy oracle for the popcount bit-GEMM — byte-table popcount over the
+AND outer product, sharing the format owner's ``POPCOUNT`` table so the
+reference and the store sidecar count bytes identically."""
+import numpy as np
+
+from repro.kernels.mgemm_levels import POPCOUNT
+
+
+def pop_planes_ref(Pa, Pb):
+    """Pa (1, kb, m), Pb (1, kb, n) uint8 -> (m, n) float64 numerator.
+
+    N[i, j] = sum_q POPCOUNT[Pa[0, q, i] & Pb[0, q, j]] — the binary
+    min-plus numerator, bitwise-AND formulation (paper §2.3)."""
+    Pa, Pb = np.asarray(Pa), np.asarray(Pb)
+    assert Pa.shape[0] == Pb.shape[0] == 1, (Pa.shape, Pb.shape)
+    and_ = Pa[0][:, :, None] & Pb[0][:, None, :]
+    return POPCOUNT[and_].sum(axis=0, dtype=np.float64)
+
+
+def threeway_pop_ref(Pown, PX, Pright):
+    """3-way oracle: B[t, i, k] = sum_q popcount(own & X[:, t] & right)."""
+    Pown, PX, Pright = np.asarray(Pown), np.asarray(PX), np.asarray(Pright)
+    L = PX.shape[2]
+    out = np.empty((L, Pown.shape[2], Pright.shape[2]), np.float64)
+    for t in range(L):
+        xo = (Pown[0] & PX[0, :, t:t + 1])[None]
+        out[t] = pop_planes_ref(xo, Pright)
+    return out

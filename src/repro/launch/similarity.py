@@ -60,10 +60,11 @@ def main(argv=None):
                     help="staging-buffer budget in bytes for the streamed "
                          "pipeline (0 = one disk shard per chunk)")
     ap.add_argument("--dry-run", action="store_true",
-                    help="print the resolved execution path (fused-levels / "
-                         "streamed-fused-levels / fused-vpu / unfused + "
-                         "reason), encoding, ring dtype and the streaming "
-                         "decision, then exit without running the campaign")
+                    help="print the resolved execution path (fused-popcount "
+                         "/ fused-levels / streamed-fused-* / fused-vpu / "
+                         "unfused + reason), encoding, ring dtype and the "
+                         "streaming decision, then exit without running the "
+                         "campaign")
     ap.add_argument("--chunk", type=int, default=128,
                     help="XLA mgemm contraction-chunk size")
     ap.add_argument("--input", default="", help=".npy (n_f, n_v) input")

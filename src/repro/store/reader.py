@@ -27,9 +27,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.kernels.mgemm_levels import PackedPlanes
+from repro.kernels.mgemm_levels import POPCOUNT, PackedPlanes
 from repro.store.format import payload_checksum, read_manifest
-from repro.store.writer import POPCOUNT
 
 __all__ = ["DatasetReader", "ShardedPlanes"]
 

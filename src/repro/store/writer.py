@@ -21,7 +21,7 @@ import os
 
 import numpy as np
 
-from repro.kernels.mgemm_levels import encode_bitplanes_np
+from repro.kernels.mgemm_levels import POPCOUNT, encode_bitplanes_np
 from repro.store.format import (
     FORMAT_NAME,
     FORMAT_VERSION,
@@ -30,10 +30,7 @@ from repro.store.format import (
     write_manifest,
 )
 
-__all__ = ["write_dataset", "validate_leveled"]
-
-#: popcount lookup: POPCOUNT[byte] = number of set bits
-POPCOUNT = np.array([bin(i).count("1") for i in range(256)], np.uint8)
+__all__ = ["write_dataset", "validate_leveled", "POPCOUNT"]
 
 
 def validate_leveled(V: np.ndarray, levels: int, *, what: str = "input") -> None:

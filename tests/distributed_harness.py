@@ -325,6 +325,85 @@ def check_streamed(V):
                   f"chunks={info2['chunks']}: OK")
 
 
+def check_binary_popcount(Vb):
+    """Binary ({0,1}) campaigns: levels=1 resolves to the popcount bit-GEMM
+    (path == "fused-popcount") on BOTH engines, in-memory / store-backed /
+    streamed, with checksums bit-identical to impl="xla" across
+    decompositions — and the sorenson metric rides the same machinery."""
+    import tempfile
+
+    from repro.api import InputSpec, SimilarityEngine, SimilarityRequest
+    from repro.core.metric_spec import CZEKANOWSKI
+    from repro.core.tile_executor import TileExecutor
+    from repro.core.twoway import resolve_config
+    from repro.store import DatasetReader, write_dataset
+    from repro.stream import stream_twoway, stream_threeway
+
+    want2 = czek2_distributed(
+        Vb, make_comet_mesh(1, 1, 1), CometConfig(impl="xla", levels=1)
+    ).checksum()
+    want3 = czek3_distributed(
+        Vb, make_comet_mesh(1, 1, 1), CometConfig(impl="xla", levels=1),
+        stage=0,
+    ).checksum()
+
+    # in-memory, >= 3 decompositions incl. the n_pf=2 merge epilogue
+    for n_pf, n_pv, n_pr in [(1, 2, 1), (1, 2, 2), (2, 2, 1), (1, 4, 1)]:
+        cfg = CometConfig(n_pf=n_pf, n_pv=n_pv, n_pr=n_pr, impl="levels",
+                          levels=1)
+        rcfg = resolve_config(cfg, Vb, CZEKANOWSKI)
+        ex = TileExecutor(cfg=rcfg, metric=CZEKANOWSKI, axis=None)
+        assert ex.path == "fused-popcount", (n_pf, ex.path)
+        assert ex.path3 == "fused-popcount-ring", (n_pf, ex.path3)
+        mesh = make_comet_mesh(n_pf, n_pv, n_pr)
+        out2 = czek2_distributed(Vb, mesh, cfg)
+        assert out2.checksum() == want2, (
+            f"popcount 2way != xla ({n_pf},{n_pv},{n_pr})"
+        )
+        out3 = czek3_distributed(Vb, mesh, cfg, stage=0)
+        assert out3.checksum() == want3, (
+            f"popcount 3way != xla ({n_pf},{n_pv},{n_pr})"
+        )
+        print(f"  binary popcount pf={n_pf} pv={n_pv} pr={n_pr}: OK "
+              f"(2way+3way)")
+
+    # sorenson: same arithmetic on binary data -> same checksums, every impl
+    engine = SimilarityEngine()
+    for impl, levels in [("xla", 1), ("pallas", 1), ("levels", 1),
+                         ("levels_xla", 1)]:
+        got = engine.run(
+            SimilarityRequest(metric="sorenson", way=2, n_pv=2, impl=impl,
+                              levels=levels), Vb,
+        ).checksum()
+        assert got == want2, f"sorenson {impl} != xla reference"
+    print("  sorenson parity (xla/pallas/popcount/levels_xla): OK")
+
+    # store-backed + streamed binary campaigns stay on popcount partials
+    with tempfile.TemporaryDirectory() as tmp:
+        write_dataset(tmp, Vb, levels=1, n_shards=2)
+        got = engine.run(
+            SimilarityRequest(
+                way=2, n_pv=2, impl="levels", levels=1,
+                input=InputSpec(source="planes", path=tmp),
+            )
+        ).checksum()
+        assert got == want2, "binary store campaign != xla"
+        print("  binary store-backed campaign: OK")
+        sh = DatasetReader(tmp).sharded()
+        cfg = CometConfig(n_pv=2, impl="levels", levels=1, streaming="on")
+        dex = TileExecutor(cfg=CometConfig(impl="levels", levels=1,
+                                           encoding="bitplane"),
+                           deferred=True)
+        assert dex.path == "streamed-fused-popcount", dex.path
+        assert dex.path3 == "streamed-fused-popcount-ring", dex.path3
+        mesh = make_comet_mesh(1, 2, 1)
+        out2, info2 = stream_twoway(sh, mesh, cfg)
+        assert out2.checksum() == want2, "streamed binary 2way != xla"
+        out3, info3 = stream_threeway(sh, mesh, cfg, stage=0)
+        assert out3.checksum() == want3, "streamed binary 3way != xla"
+        print(f"  binary streamed chunks={info2['chunks']}: OK (2way+3way)")
+
+
 def main():
     V = random_integer_vectors(N_F, N_V, max_value=15, seed=42)
     print("2-way decomposition invariance:")
@@ -337,6 +416,9 @@ def main():
     check_plane_store(V)
     print("streamed campaigns (repro.stream):")
     check_streamed(V)
+    print("binary popcount campaigns (kernels/popgemm):")
+    check_binary_popcount(random_integer_vectors(N_F, N_V, max_value=1,
+                                                 seed=43))
     print("ALL DISTRIBUTED CHECKS PASSED")
 
 

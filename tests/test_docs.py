@@ -78,6 +78,17 @@ def test_format_spec_names_real_code():
         _plane_matmuls,
         _unpack_plane_tile,
     )
+    # the binary fast path the format spec's "Binary fast path" note names
+    from repro.kernels.mgemm_levels import POPCOUNT  # noqa: F401
+    from repro.kernels.popgemm import (  # noqa: F401
+        metric2_pop,
+        pop_planes,
+        threeway_batch_pop,
+    )
+    from repro.kernels.popgemm.kernel import (  # noqa: F401
+        _pack_words,
+        _pop_contract,
+    )
 
 
 def test_store_spec_names_real_code():
@@ -137,3 +148,22 @@ def test_architecture_path_matrix_matches_executor():
                       deferred=True)
     assert ex.path == "streamed-fused-levels"
     assert ex.path3 == "streamed-fused-levels-ring"
+    # binary fast path: levels == 1 swaps the plane-dot kernels for the
+    # popcount bit-GEMM at every decision site (same conditions otherwise)
+    ex = TileExecutor(cfg=CometConfig(impl="levels", levels=1,
+                                      encoding="bitplane"))
+    assert ex.path == "fused-popcount"
+    assert ex.path3 == "fused-popcount-ring"
+    ex = TileExecutor(cfg=CometConfig(impl="levels", levels=1,
+                                      encoding="none"))
+    assert ex.path3 == "fused-popcount"
+    ex = TileExecutor(cfg=CometConfig(impl="levels", levels=1, n_pf=2))
+    assert ex.path == "fused-popcount" and "merge epilogue" in ex.path_reason
+    ex = TileExecutor(cfg=CometConfig(impl="levels", levels=1,
+                                      encoding="bitplane"), deferred=True)
+    assert ex.path == "streamed-fused-popcount"
+    assert ex.path3 == "streamed-fused-popcount-ring"
+    # levels_xla keeps the unfused plane contraction even for binary data
+    ex = TileExecutor(cfg=CometConfig(impl="levels_xla", levels=1,
+                                      encoding="bitplane"))
+    assert ex.path == "unfused" and ex.path3 == "unfused"

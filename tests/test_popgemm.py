@@ -1,0 +1,248 @@
+"""Popcount bit-GEMM (binary fast path) + sorenson metric tests.
+
+Covers the ISSUE-7 contract: the popgemm kernels agree bit-for-bit with
+the byte-table oracle and the min-plus formulation on binary data; pad
+bits are inert under AND+popcount exactly as BITPLANE_FORMAT.md promises
+for the dot formulation (hypothesis property over non-multiple-of-8 field
+counts); the shared POPCOUNT table is the single definition; and the
+``sorenson`` metric is bit-identical to its independent boolean AND-dot
+oracle on every path (xla / fused-vpu / fused-levels / fused-popcount /
+levels_xla).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import SORENSON, SimilarityEngine, SimilarityRequest, get_metric
+from repro.core.metric_spec import CZEKANOWSKI, czek_assemble_tile
+from repro.core.synthetic import random_integer_vectors
+from repro.core.tile_executor import TileExecutor
+from repro.core.twoway import CometConfig, resolve_config
+from repro.kernels.mgemm import unpack_tri_tiles
+from repro.kernels.mgemm_levels import POPCOUNT, encode_bitplanes_np
+from repro.kernels.popgemm import (
+    metric2_pop,
+    metric2_pop_tri,
+    pop_planes,
+    pop_planes_ref,
+    threeway_batch_pop,
+    threeway_pop_ref,
+)
+
+try:  # property tests run under hypothesis when present (CI installs it);
+    # a deterministic case sweep below keeps coverage without it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def _binary(k, n, seed):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 2, (k, n)).astype(np.float32)
+
+
+# -- shared POPCOUNT table (satellite: dedup) --------------------------------
+
+
+def test_popcount_table_is_shared():
+    """writer, reader validate(), and the popgemm oracle index the SAME
+    table object, owned by the format module (planes.py)."""
+    from repro.kernels.mgemm_levels import planes
+    from repro.store import writer
+
+    assert writer.POPCOUNT is planes.POPCOUNT
+    assert POPCOUNT is planes.POPCOUNT
+    assert [int(POPCOUNT[b]) for b in (0, 1, 0b1011, 0xFF)] == [0, 1, 3, 8]
+    assert int(POPCOUNT.sum()) == 1024  # sum over all bytes = 256 * 4
+
+
+# -- kernel parity vs oracle and vs min-plus ---------------------------------
+
+
+def _check_pop_kernels(m, k, n, seed):
+    A, B = _binary(k, m, seed), _binary(k, n, seed + 1)
+    Pa = encode_bitplanes_np(A, 1)
+    Pb = encode_bitplanes_np(B, 1)
+    ref = pop_planes_ref(Pa, Pb)
+    # oracle == min-plus numerator == boolean AND-dot
+    assert (ref == np.minimum(A[:, :, None], B[:, None, :]).sum(0)).all()
+    got = np.asarray(pop_planes(jnp.asarray(Pa), jnp.asarray(Pb),
+                                bm=8, bn=8, bkb=8))
+    assert (got == ref).all()  # exact integers, no tolerance
+    # fused epilogue form: same fp32 assembly ops as the unfused path
+    sa = A.sum(axis=0).astype(np.float32)
+    sb = B.sum(axis=0).astype(np.float32)
+    fused = np.asarray(metric2_pop(
+        jnp.asarray(Pa), jnp.asarray(Pb), jnp.asarray(sa), jnp.asarray(sb),
+        epilogue=czek_assemble_tile, bm=8, bn=8, bkb=8))
+    want = np.asarray(czek_assemble_tile(
+        jnp.asarray(ref, jnp.float32), jnp.asarray(sa)[:, None],
+        jnp.asarray(sb)[None, :]))
+    assert (fused == want).all()  # bit-identical fp32
+
+
+@pytest.mark.parametrize(
+    "m,k,n,seed",
+    [(1, 1, 1, 0), (5, 7, 3, 1), (12, 40, 9, 2), (19, 65, 23, 3)],
+)
+def test_pop_kernels_cases(m, k, n, seed):
+    _check_pop_kernels(m, k, n, seed)
+
+
+def test_pop_tri_matches_rectangular():
+    """Triangular-schedule diagonal kernel == strict upper triangle of the
+    rectangular kernel on the same block."""
+    A = _binary(37, 19, 7)
+    P = encode_bitplanes_np(A, 1)
+    s = A.sum(axis=0).astype(np.float32)
+    packed = metric2_pop_tri(jnp.asarray(P), jnp.asarray(s),
+                             epilogue=czek_assemble_tile, bt=8, bkb=8)
+    tri = np.asarray(unpack_tri_tiles(packed, 19, 8))
+    full = np.asarray(metric2_pop(
+        jnp.asarray(P), jnp.asarray(P), jnp.asarray(s), jnp.asarray(s),
+        epilogue=czek_assemble_tile, bm=8, bn=8, bkb=8))
+    assert (tri == np.triu(full, 1)).all()
+    assert (np.tril(tri) == 0).all()
+
+
+def test_threeway_pop_matches_oracle():
+    """3-way slice kernel: X_j stays a packed AND, result == byte-table
+    oracle == min-plus triple numerator."""
+    A = _binary(37, 11, 4)
+    X = _binary(37, 5, 5)
+    B = _binary(37, 9, 6)
+    Pa, Px, Pb = (encode_bitplanes_np(M, 1) for M in (A, X, B))
+    got = np.asarray(threeway_batch_pop(
+        jnp.asarray(Pa), jnp.asarray(Px), jnp.asarray(Pb),
+        bm=8, bn=8, bkb=8))
+    ref = threeway_pop_ref(Pa, Px, Pb)
+    assert (got == ref).all()
+    # triple min summed over fields — the min-plus formulation
+    want = np.minimum(
+        np.minimum(A[:, None, :, None], X[:, :, None, None]),
+        B[:, None, None, :],
+    ).sum(axis=0)
+    assert (ref == want).all()
+
+
+# -- padding inertness under popcount (satellite: hypothesis) ----------------
+
+
+def _check_padding_inert(k, m, n, seed):
+    """Non-multiple-of-8 field counts: the encoder's pad bits are ZERO, so
+    they are inert in AND+popcount — the numerator equals the boolean
+    AND-dot of the UNPADDED values, and extra zero-byte padding (the store
+    shard / pf-align rule) never changes it."""
+    A, B = _binary(k, m, seed), _binary(k, n, seed + 1)
+    Pa = encode_bitplanes_np(A, 1)
+    Pb = encode_bitplanes_np(B, 1)
+    if k % 8:  # remainder bits of the last byte are zero
+        last = Pa[0, -1, :]
+        mask = 0xFF << (k % 8) & 0xFF
+        assert (last & mask).sum() == 0
+    want = (A.T.astype(np.float64) @ B.astype(np.float64))  # AND-dot, k rows
+    assert (pop_planes_ref(Pa, Pb) == want).all()
+    # whole-byte padding (pad_planes / field_align) is inert too
+    Pa8 = encode_bitplanes_np(A, 1, field_align=4)
+    Pb8 = encode_bitplanes_np(B, 1, field_align=4)
+    assert (pop_planes_ref(Pa8, Pb8) == want).all()
+    got = np.asarray(pop_planes(jnp.asarray(Pa8), jnp.asarray(Pb8),
+                                bm=8, bn=8, bkb=8))
+    assert (got == want).all()
+
+
+@pytest.mark.parametrize("k,m,n,seed",
+                         [(1, 2, 2, 0), (7, 3, 4, 1), (9, 5, 2, 2),
+                          (13, 4, 6, 3), (31, 6, 3, 4)])
+def test_padding_inert_cases(k, m, n, seed):
+    _check_padding_inert(k, m, n, seed)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(
+        k=st.integers(1, 41),   # non-multiple-of-8 field counts included
+        m=st.integers(1, 9),
+        n=st.integers(1, 9),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_padding_inert_property(k, m, n, seed):
+        _check_padding_inert(k, m, n, seed)
+
+
+# -- executor routing + cross-path parity ------------------------------------
+
+
+def test_executor_popcount_block_matches_other_paths():
+    """pair_block on the popcount path == fused-levels == unfused xla,
+    bit-identical, for both rectangular and diagonal blocks."""
+    V = random_integer_vectors(24, 16, max_value=1, seed=9)
+    sa = np.asarray(V.sum(axis=0), np.float32)
+    blocks = {}
+    for impl, levels in [("levels", 1), ("levels", 2), ("xla", 1)]:
+        cfg = resolve_config(CometConfig(impl=impl, levels=levels),
+                             V, CZEKANOWSKI)
+        ex = TileExecutor(cfg=cfg, metric=CZEKANOWSKI, axis=None)
+        Va = jnp.asarray(V, jnp.float32)
+        rect = np.asarray(ex.pair_block(Va, jnp.asarray(sa), Va,
+                                        jnp.asarray(sa)))
+        diag = np.asarray(ex.pair_block(Va, jnp.asarray(sa), Va,
+                                        jnp.asarray(sa), diagonal=True))
+        blocks[(impl, levels)] = (rect, diag)
+    assert TileExecutor(
+        cfg=resolve_config(CometConfig(impl="levels", levels=1), V,
+                           CZEKANOWSKI),
+        metric=CZEKANOWSKI, axis=None).path == "fused-popcount"
+    ref = blocks[("xla", 1)]
+    for key, (rect, diag) in blocks.items():
+        assert (rect == ref[0]).all(), key
+        assert (diag == ref[1]).all(), key
+
+
+# -- sorenson metric (satellite) ---------------------------------------------
+
+
+def test_sorenson_registered():
+    spec = get_metric("sorenson")
+    assert spec is SORENSON
+    assert spec.ways == (2, 3)
+    assert spec.combine is jnp.minimum
+    # shared assembly callables => shared fp ops => bit-identical paths
+    assert spec.assemble2 is CZEKANOWSKI.assemble2
+    assert spec.assemble_tile is CZEKANOWSKI.assemble_tile
+
+
+@pytest.mark.parametrize("impl,levels", [
+    ("xla", 1),        # unfused reference
+    ("pallas", 1),     # fused-vpu
+    ("levels", 2),     # fused-levels (bf16 plane dots)
+    ("levels", 1),     # fused-popcount (binary fast path)
+    ("levels_xla", 1),  # unfused plane contraction
+])
+def test_sorenson_parity_2way(impl, levels):
+    V = random_integer_vectors(24, 20, max_value=1, seed=11)
+    eng = SimilarityEngine()
+    res = eng.run(SimilarityRequest(metric="sorenson", way=2, impl=impl,
+                                    levels=levels), V)
+    oracle = np.triu(SORENSON.oracle2(V), 1)
+    got = np.triu(np.asarray(res.dense(), np.float64), 1)
+    np.testing.assert_allclose(got, oracle, rtol=0, atol=1e-6)
+    # bit-identical checksum across every impl (exact integer numerators)
+    ref = eng.run(SimilarityRequest(metric="sorenson", way=2), V)
+    assert res.checksum() == ref.checksum()
+
+
+def test_sorenson_parity_3way():
+    V = random_integer_vectors(24, 15, max_value=1, seed=12)
+    eng = SimilarityEngine()
+    res = eng.run(SimilarityRequest(metric="sorenson", way=3, impl="levels",
+                                    levels=1), V)
+    ref = eng.run(SimilarityRequest(metric="sorenson", way=3, impl="xla",
+                                    levels=1), V)
+    assert res.checksum() == ref.checksum()
+    o3 = SORENSON.oracle3(V)
+    d3 = np.asarray(res.dense(), np.float64)
+    for (i, j, k), v in np.ndenumerate(d3):
+        if i < j < k:
+            assert abs(v - o3[i, j, k]) < 1e-6
