@@ -294,6 +294,82 @@ def stream_entries(shape=STREAM_SHAPE, max_value=3,
     return entries
 
 
+# batched-campaign entries: a PheWAS-style multi-campaign job at a
+# campaign-scale shape (n_f >> typical kernel tiles is unnecessary here —
+# the win being measured is encode/traversal/compile sharing, not FLOPs)
+BATCHED_SHAPE = (256, 512, 256)
+
+
+def batched_sweep(shape=BATCHED_SHAPE, max_value=2):
+    """Batched-campaign vs sequential-loop entries for BENCH_kernels.json.
+
+    One PheWAS-style job — 2 metrics (czekanowski + sorenson: ONE shared
+    numerator family) x 2 overlapping named subsets whose union is the full
+    vector set, i.e. 4 campaigns — run two ways through the SAME engine:
+
+    * ``batched``     — one ``SimilarityEngine`` run with ``metrics=[...]``
+      + ``subsets=[...]``: one encode, one ring traversal, one contraction
+      per family, epilogue/extraction fan-out per campaign;
+    * ``batched_seq`` — the loop it replaces: 4 independent sequential
+      campaigns, each encoding and traversing its own payload slice.
+
+    Entries carry ``"campaigns": 4`` so the rows are recognizably batched.
+    The acceptance gate: ``batched`` >= 1.5x the ``batched_seq`` rate at
+    campaigns >= 4.
+    """
+    from benchmarks.util import time_fn
+    from repro.api import SimilarityEngine, SimilarityRequest
+
+    _, k, n = shape
+    rng = np.random.default_rng(2)
+    V = rng.integers(0, max_value + 1, (k, n)).astype(np.float32)
+    third = max(1, n // 3)
+    subsets = (
+        ("first", tuple(range(0, min(n, 2 * third)))),
+        ("second", tuple(range(third, n))),
+    )
+    metrics = ("czekanowski", "sorenson")
+    levels = max(2, max_value)
+    engine = SimilarityEngine()
+    breq = SimilarityRequest(
+        metric=metrics[0], metrics=metrics[1:], subsets=subsets,
+        way=2, impl="levels", levels=levels,
+    )
+
+    def run_batched():
+        return engine.run(breq, V)
+
+    def run_seq():
+        results = []
+        for mname in metrics:
+            for _sname, idx in subsets:
+                results.append(engine.run(
+                    SimilarityRequest(metric=mname, way=2, impl="levels",
+                                      levels=levels),
+                    V[:, list(idx)],
+                ))
+        return results
+
+    campaigns = len(metrics) * len(subsets)
+    # identical logical work both ways: per campaign v(v-1)/2 pairs x k
+    pairs = len(metrics) * sum(
+        len(idx) * (len(idx) - 1) // 2 for _s, idx in subsets
+    )
+    bytes_moved = k * n * 4  # the shared payload, read once per traversal
+    entries = []
+    for impl, fn in (("batched_seq", run_seq), ("batched", run_batched)):
+        t = time_fn(lambda fn=fn: fn(), warmup=1, iters=5, reduce="min")
+        entries.append({
+            "impl": impl,
+            "m": n, "k": k, "n": n,
+            "campaigns": campaigns,
+            "seconds": t,
+            "gib_per_s": bytes_moved / t / 2**30,
+            "comparisons_per_s": pairs * k / t,
+        })
+    return entries
+
+
 def kernel_sweep(shapes=SWEEP_SHAPES, max_value=3):
     """Entries for BENCH_kernels.json: impl × size × GiB/s, comparisons/s."""
     entries = []

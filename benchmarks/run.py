@@ -38,11 +38,15 @@ BENCH_KERNELS = os.path.join(
 #: "popcount" is the binary (levels=1) bit-GEMM fast path
 #: (repro.kernels.popgemm) — its entries carry "levels": 1, alongside
 #: levels=1 "fused-levels"/"levels_xla" rows on the same binary operands.
+#: "batched"/"batched_seq" are the batched-campaign entries (multi-metric
+#: x multi-subset through one ring traversal vs the sequential loop it
+#: replaces) — they carry "campaigns".
 KNOWN_IMPLS = {
     "xla", "levels_xla", "levels_xla_hoisted", "levels",
     "pallas", "pallas_fused", "fused-levels", "popcount",
     "host_encode", "store_load",
     "stream", "stream_seq",
+    "batched", "batched_seq",
 }
 _ENTRY_NUMBER_KEYS = ("seconds", "gib_per_s", "comparisons_per_s")
 _ENTRY_INT_KEYS = ("m", "k", "n")
@@ -90,9 +94,11 @@ def write_bench_kernels(shapes=None, out: str = BENCH_KERNELS,
     import jax
 
     from benchmarks.bench_kernel import (
+        BATCHED_SHAPE,
         INGEST_SHAPES,
         STREAM_SHAPE,
         SWEEP_SHAPES,
+        batched_sweep,
         binary_sweep,
         ingest_entries,
         kernel_sweep,
@@ -107,13 +113,18 @@ def write_bench_kernels(shapes=None, out: str = BENCH_KERNELS,
                 "stream/stream_seq are out-of-core overlap entries with "
                 "staging floored to bench_kernel.STREAM_MODEL_MIB_S; "
                 "entries with levels=1 are the binary sweep (popcount "
-                "bit-GEMM vs the bf16 plane kernels on {0,1} data)",
+                "bit-GEMM vs the bf16 plane kernels on {0,1} data); "
+                "batched/batched_seq entries (tagged 'campaigns') run one "
+                "multi-metric x multi-subset job through one ring traversal "
+                "vs the sequential per-campaign loop",
         "entries": (kernel_sweep(shapes or SWEEP_SHAPES, max_value=max_value)
                     + binary_sweep(shapes or SWEEP_SHAPES)
                     + ingest_entries(shapes or INGEST_SHAPES,
                                      max_value=max_value)
                     + stream_entries(shapes[-1] if shapes else STREAM_SHAPE,
-                                     max_value=max_value)),
+                                     max_value=max_value)
+                    + batched_sweep(shapes[-1] if shapes
+                                    else BATCHED_SHAPE)),
     }
     with open(out, "w") as f:
         json.dump(payload, f, indent=2)

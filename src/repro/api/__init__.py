@@ -5,6 +5,7 @@ serving): build a frozen ``SimilarityRequest``, hand it to a
 ``SimilarityEngine``, stream the ``SimilarityResult``.  New metrics plug in
 through ``register_metric`` without touching engine code.
 """
+from repro.api.batch import BatchedSimilarityResult  # noqa: F401
 from repro.api.engine import SimilarityEngine  # noqa: F401
 from repro.api.registry import (  # noqa: F401
     CCC,
@@ -12,7 +13,11 @@ from repro.api.registry import (  # noqa: F401
     MetricSpec,
     UnknownMetricError,
     available_metrics,
+    batch_lead,
+    family_key,
     get_metric,
+    group_families,
+    plane_native,
     register_metric,
 )
 from repro.api.request import InputSpec, SimilarityRequest  # noqa: F401
@@ -23,12 +28,17 @@ __all__ = [
     "SimilarityRequest",
     "InputSpec",
     "SimilarityResult",
+    "BatchedSimilarityResult",
     "Tile",
     "MetricSpec",
     "UnknownMetricError",
     "register_metric",
     "get_metric",
     "available_metrics",
+    "family_key",
+    "group_families",
+    "plane_native",
+    "batch_lead",
     "CCC",
     "SORENSON",
 ]

@@ -30,6 +30,38 @@ from repro.parallel.mesh import COMET_AXES, make_comet_mesh
 __all__ = ["SimilarityEngine"]
 
 
+def _subset_positions(request, n_v: int, *, restrict: bool):
+    """Validate subset indices against ``n_v`` and compute each subset's
+    positions within the traversal payload.
+
+    ``restrict=True`` (in-memory): the payload is the sorted union of all
+    subset indices; each subset's positions index into the union, in
+    subset order.  ``restrict=False`` (streamed): the payload keeps the
+    full vector axis, so positions are the subset indices themselves.
+    Returns ``(subs, union, pos)``; union/pos are None/{} for full-set
+    requests."""
+    subs = request.campaign_subsets()
+    if not request.subsets:
+        return subs, None, {}
+    for name, idx in subs:
+        bad = [i for i in idx if i >= n_v]
+        if bad:
+            raise ValueError(
+                f"subset {name!r} indices {bad} out of range for n_v={n_v}"
+            )
+    if restrict:
+        union = np.unique(np.concatenate(
+            [np.asarray(idx, np.int64) for _, idx in subs]
+        ))
+        pos = {
+            name: np.searchsorted(union, np.asarray(idx, np.int64))
+            for name, idx in subs
+        }
+        return subs, union, pos
+    pos = {name: np.asarray(idx, np.int64) for name, idx in subs}
+    return subs, None, pos
+
+
 class SimilarityEngine:
     """Metric-agnostic front-end over the distributed similarity engines."""
 
@@ -117,6 +149,8 @@ class SimilarityEngine:
 
             if resolve_config(request.to_comet_config(), V, spec).streaming \
                     == "on":
+                if request.is_batched:
+                    return self._run_streamed_batched(request, V, meta)
                 return self._run_streamed(request, V, spec, meta)
             V = V.materialize()  # in-memory PackedPlanes path below
         if isinstance(V, PackedPlanes):
@@ -135,6 +169,8 @@ class SimilarityEngine:
         mesh = self._mesh_for(request)
         cfg = request.to_comet_config()
         stages = request.resolved_stages()
+        if request.is_batched:
+            return self._run_batched(request, V, meta, n_f, n_v, mesh, cfg)
 
         t0 = time.perf_counter()
         if request.way == 2:
@@ -160,6 +196,158 @@ class SimilarityEngine:
             out_dtype=request.out_dtype,
             seconds=seconds,
             meta=meta,
+        )
+
+    # -- batched campaigns --------------------------------------------------
+
+    def _batch_specs(self, request):
+        """Resolve every campaign metric and gate each against the way."""
+        names = request.campaign_metrics()
+        specs = [get_metric(n) for n in names]
+        for name, s in zip(names, specs):
+            if request.way not in s.ways:
+                raise ValueError(
+                    f"metric {name!r} supports ways {s.ways}, "
+                    f"requested {request.way}"
+                )
+        return names, specs
+
+    def _run_batched(self, request, V, meta, n_f, n_v, mesh, cfg):
+        """In-memory batched dispatch: one ring traversal, many campaigns.
+
+        Named subsets restrict the payload to the sorted UNION of all
+        subset indices before the traversal — a vector-axis view for value
+        matrices, a byte-column view (``take_planes_vectors``) for packed
+        planes, so pre-encoded payloads are never re-encoded — then each
+        subset's result is carved out of the union output host-side."""
+        from repro.core.threeway import threeway_batched
+        from repro.core.twoway import twoway_batched
+        from repro.kernels.mgemm_levels.planes import (
+            PackedPlanes,
+            take_planes_vectors,
+        )
+
+        names, specs = self._batch_specs(request)
+        subs, union, pos = _subset_positions(request, n_v, restrict=True)
+        Vu = V
+        if union is not None:
+            if isinstance(V, PackedPlanes):
+                Vu = PackedPlanes(
+                    np.ascontiguousarray(take_planes_vectors(V.planes, union)),
+                    n_f=V.n_f, origin=V.origin,
+                )
+            else:
+                Vu = np.ascontiguousarray(V[:, union])
+        stages = request.resolved_stages()
+
+        t0 = time.perf_counter()
+        if request.way == 2:
+            outs, binfo = twoway_batched(Vu, mesh, cfg, specs)
+            per_metric = [[o] for o in outs]
+        else:
+            per_metric = [[] for _ in specs]
+            for s in stages:
+                outs, binfo = threeway_batched(Vu, mesh, cfg, specs, stage=s)
+                for lst, o in zip(per_metric, outs):
+                    lst.append(o)
+        seconds = time.perf_counter() - t0
+        return self._assemble_batched(
+            request, names, subs, pos, per_metric, n_f, n_v, meta, binfo,
+            seconds, stages,
+        )
+
+    def _run_streamed_batched(self, request, sh, meta):
+        """Out-of-core batched dispatch over a lazy ShardedPlanes handle.
+
+        The streamed ring carries the FULL vector axis (the payload lives
+        in disk shards — there is no cheap union view), so named subsets
+        are extracted from the full-set outputs; ring accounting reflects
+        the full payload."""
+        from repro.stream import stream_threeway_batched, stream_twoway_batched
+
+        names, specs = self._batch_specs(request)
+        subs, _, pos = _subset_positions(request, sh.n_v, restrict=False)
+        mesh = self._mesh_for(request)
+        cfg = request.to_comet_config()
+        stages = request.resolved_stages()
+        if sh.origin:
+            meta["dataset"] = sh.origin
+
+        t0 = time.perf_counter()
+        if request.way == 2:
+            outs, binfo, sinfo = stream_twoway_batched(sh, mesh, cfg, specs)
+            per_metric = [[o] for o in outs]
+        else:
+            per_metric = [[] for _ in specs]
+            for s in stages:
+                outs, binfo, sinfo = stream_threeway_batched(
+                    sh, mesh, cfg, specs, stage=s
+                )
+                for lst, o in zip(per_metric, outs):
+                    lst.append(o)
+        seconds = time.perf_counter() - t0
+        meta["stream"] = sinfo
+        return self._assemble_batched(
+            request, names, subs, pos, per_metric, sh.n_f, sh.n_v, meta,
+            binfo, seconds, stages,
+        )
+
+    def _assemble_batched(self, request, names, subs, pos, per_metric,
+                          n_f, n_v, meta, binfo, seconds, stages):
+        """Wrap per-metric union outputs into one BatchedSimilarityResult.
+
+        Full-set campaigns reuse the distributed outputs directly (same
+        layout as a sequential run); named-subset campaigns are extracted
+        into single-rank plans.  Every campaign result carries the shared
+        ``meta["batch"]`` accounting."""
+        from repro.api.batch import (
+            BatchedSimilarityResult,
+            extract_threeway,
+            extract_twoway,
+        )
+
+        batch_meta = dict(binfo)
+        batch_meta.update(
+            campaigns=len(names) * len(subs),
+            subsets=[n for n, _ in subs if n],
+            encodes=1,
+            traversals=1 if request.way == 2 else len(stages),
+        )
+        cmeta = {**meta, "batch": batch_meta}
+        campaigns = []
+        for mi, mname in enumerate(names):
+            outs_m = per_metric[mi]
+            for sname, idx in subs:
+                if idx is None:  # full-set campaign
+                    outputs = outs_m
+                    if request.way == 2 and request.packed:
+                        outputs = [o.pack() for o in outputs]
+                    res = SimilarityResult(
+                        way=request.way, metric=mname, n_v=n_v, n_f=n_f,
+                        outputs=outputs,
+                        decomposition=(request.n_pf, request.n_pv,
+                                       request.n_pr),
+                        n_st=request.n_st, stages=stages,
+                        out_dtype=request.out_dtype, seconds=seconds,
+                        meta=cmeta,
+                    )
+                else:
+                    p = pos[sname]
+                    if request.way == 2:
+                        out = extract_twoway(outs_m[0], p)
+                        outputs = [out.pack() if request.packed else out]
+                    else:
+                        outputs = [extract_threeway(outs_m, p)]
+                    res = SimilarityResult(
+                        way=request.way, metric=mname, n_v=len(idx), n_f=n_f,
+                        outputs=outputs, decomposition=(1, 1, 1),
+                        n_st=1, stages=(0,),
+                        out_dtype=request.out_dtype, seconds=seconds,
+                        meta=cmeta,
+                    )
+                campaigns.append((mname, sname, res))
+        return BatchedSimilarityResult(
+            campaigns=campaigns, meta=cmeta, seconds=seconds
         )
 
     def _run_streamed(self, request, sh, spec, meta) -> SimilarityResult:

@@ -24,7 +24,14 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.metric_spec import CZEKANOWSKI, MetricSpec
+from repro.core.metric_spec import (  # noqa: F401  (family_* re-exported)
+    CZEKANOWSKI,
+    MetricSpec,
+    batch_lead,
+    family_key,
+    group_families,
+    plane_native,
+)
 from repro.core.metrics import safe_denom
 
 __all__ = [
@@ -33,6 +40,10 @@ __all__ = [
     "register_metric",
     "get_metric",
     "available_metrics",
+    "family_key",
+    "group_families",
+    "plane_native",
+    "batch_lead",
     "CCC",
     "SORENSON",
 ]

@@ -85,7 +85,19 @@ def _validate_matrix(V: np.ndarray, *, what: str) -> np.ndarray:
 
 @dataclass(frozen=True)
 class SimilarityRequest:
-    """Frozen description of one similarity campaign."""
+    """Frozen description of one similarity campaign.
+
+    Batching: ``metrics`` adds further metrics evaluated in the SAME ring
+    traversal (the primary ``metric`` always runs; duplicates are an
+    error), and ``subsets`` names vector-index subsets — ``(name, indices)``
+    pairs — each evaluated as its own campaign against a byte-slice view of
+    the shared plane payload (no re-encode).  Either field makes the
+    request *batched*: the engine returns a ``BatchedSimilarityResult``
+    holding one ordinary ``SimilarityResult`` per (metric, subset)
+    campaign, every one bit-identical to its sequential single-campaign
+    run, and ``meta["batch"]`` accounts the ring bytes moved (independent
+    of the campaign count).
+    """
 
     metric: str = "czekanowski"
     way: int = 2
@@ -128,12 +140,47 @@ class SimilarityRequest:
     max_host_bytes: int = 0
     #: optional input description (run() can also take V directly)
     input: InputSpec = None
+    #: extra metric names evaluated in the same ring traversal (the primary
+    #: ``metric`` is always first; names must be unique across both fields)
+    metrics: tuple = ()
+    #: named vector-index subsets, ``((name, (i0, i1, ...)), ...)`` — each
+    #: becomes its own campaign over a plane byte-slice view; ``()`` runs
+    #: the full vector set
+    subsets: tuple = ()
 
     # -- derived -----------------------------------------------------------
 
     @property
     def n_ranks(self) -> int:
         return self.n_pf * self.n_pv * self.n_pr
+
+    @property
+    def is_batched(self) -> bool:
+        """True when the request describes more than one campaign (extra
+        metrics and/or named subsets) — the engine then returns a
+        ``BatchedSimilarityResult`` instead of a ``SimilarityResult``."""
+        return bool(self.metrics) or bool(self.subsets)
+
+    def campaign_metrics(self) -> tuple:
+        """All metric names in request order (primary first)."""
+        return (self.metric,) + tuple(self.metrics)
+
+    def campaign_subsets(self) -> tuple:
+        """Normalized ``(name, indices)`` pairs; ``(("", None),)`` when the
+        request runs the full vector set."""
+        if not self.subsets:
+            return (("", None),)
+        return tuple(
+            (str(name), tuple(int(i) for i in idx))
+            for name, idx in self.subsets
+        )
+
+    def campaign_key(self) -> tuple:
+        """Hashable identity of WHICH campaigns this request computes —
+        metric names and subset (name, indices) pairs.  Cache layers key on
+        this so two requests differing only in campaign composition never
+        collide (same input + decomposition is not the same answer)."""
+        return (self.campaign_metrics(), self.campaign_subsets())
 
     def resolved_stages(self) -> tuple:
         if self.way == 2:
@@ -208,3 +255,39 @@ class SimilarityRequest:
                 f"metric {self.metric!r} supports ways {metric_spec.ways}, "
                 f"requested {self.way}"
             )
+        names = self.campaign_metrics()
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate metric names in batch: {names}")
+        if self.subsets:
+            seen = set()
+            for entry in self.subsets:
+                if not (isinstance(entry, tuple) and len(entry) == 2):
+                    raise ValueError(
+                        f"subsets entries must be (name, indices) pairs, "
+                        f"got {entry!r}"
+                    )
+                name, idx = entry
+                if not (isinstance(name, str) and name):
+                    raise ValueError(f"subset name must be a non-empty str, got {name!r}")
+                if name in seen:
+                    raise ValueError(f"duplicate subset name {name!r}")
+                seen.add(name)
+                idx = tuple(idx)
+                if not idx:
+                    raise ValueError(f"subset {name!r} is empty")
+                if any(not isinstance(i, (int, np.integer)) or i < 0 for i in idx):
+                    raise ValueError(
+                        f"subset {name!r} indices must be non-negative ints"
+                    )
+                if len(set(idx)) != len(idx):
+                    raise ValueError(f"subset {name!r} has duplicate indices")
+            if self.way == 3:
+                # subset extraction re-indexes triples out of the union
+                # run, so every computed triple must exist: a partial
+                # stage sweep would silently drop subset results
+                if set(self.resolved_stages()) != set(range(self.n_st)):
+                    raise ValueError(
+                        "way=3 with named subsets needs complete stage "
+                        f"coverage: stages {self.resolved_stages()} do not "
+                        f"cover n_st={self.n_st}"
+                    )

@@ -44,7 +44,15 @@ import jax.numpy as jnp
 
 from repro.core.metrics import safe_denom
 
-__all__ = ["MetricSpec", "CZEKANOWSKI", "czek_assemble_tile"]
+__all__ = [
+    "MetricSpec",
+    "CZEKANOWSKI",
+    "czek_assemble_tile",
+    "family_key",
+    "group_families",
+    "plane_native",
+    "batch_lead",
+]
 
 
 @dataclass(frozen=True)
@@ -119,6 +127,63 @@ class MetricSpec:
             return comb(A[:, :, None], B[None, :, :]).astype(jnp.float32).sum(1)
 
         return generic
+
+
+def family_key(spec: MetricSpec) -> tuple:
+    """Batching family of a metric: metrics in one family share a numerator.
+
+    Two metrics may share a single ring-step contraction (and differ only
+    in their assemble epilogues) iff they fold the same ``combine`` op over
+    the same contraction machinery and ring-carry the same per-vector
+    ``stat``.  Czekanowski and Sorenson are one family (min-plus numerator,
+    row-sum stat — Sorenson reuses Czekanowski's stat/assemble objects, so
+    identity comparison suffices); CCC is its own family (product combine,
+    custom contraction).  Batched campaigns compute ONE numerator per
+    family per tile and fan it out through each member's epilogue.
+    """
+    return (spec.combine, spec.stat,
+            "mgemm" if spec.uses_mgemm else spec.contract)
+
+
+def group_families(specs) -> list:
+    """Group MetricSpecs into numerator-sharing families, order-preserving.
+
+    Returns a list of lists; each inner list shares a ``family_key`` and
+    keeps the caller's metric order (results are emitted per-metric in
+    request order regardless of grouping).
+    """
+    groups, index = [], {}
+    for spec in specs:
+        key = family_key(spec)
+        if key not in index:
+            index[key] = len(groups)
+            groups.append([])
+        groups[index[key]].append(spec)
+    return groups
+
+
+def plane_native(spec: MetricSpec) -> bool:
+    """Whether this metric's numerator runs natively on packed bit-planes.
+
+    True for the min-plus family (the fused levels / popcount kernels
+    realize ``sum_q min`` directly on the packed payload).  Product-family
+    metrics (CCC) ride the same plane ring in a batch but reconstruct
+    exact values via ``values_from_planes`` before their own contraction.
+    """
+    return spec.contract_is_combine_sum and spec.combine is jnp.minimum
+
+
+def batch_lead(specs) -> MetricSpec:
+    """The spec whose knobs drive ``resolve_config`` for a batched campaign.
+
+    Plane-native metrics constrain encoding/ring choices the most, so the
+    first plane-native spec leads; an all-product batch falls back to the
+    first metric in request order.
+    """
+    for spec in specs:
+        if plane_native(spec):
+            return spec
+    return specs[0]
 
 
 def _czek_stat(Vl):

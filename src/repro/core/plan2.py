@@ -36,6 +36,13 @@ class TwoWayPlan:
         return self.n_pv // 2 + 1
 
     @property
+    def ring_steps(self) -> int:
+        """Payload ppermutes per rank across the traversal (step 0 uses the
+        resident block, every later step is one ring hop) — the batched-
+        campaign accounting's per-rank hop count."""
+        return self.n_steps - 1
+
+    @property
     def slots_per_rank(self) -> int:
         """Upper bound of steps any (p_v, p_r) rank executes (buffer size)."""
         return math.ceil(self.n_steps / self.n_pr)

@@ -91,6 +91,20 @@ class ThreeWayPlan:
     def slots_per_rank(self) -> int:
         return math.ceil(self.items_per_slab / self.n_pr)
 
+    @property
+    def ring_steps(self) -> int:
+        """Payload ppermutes per rank across one stage of the doubly-nested
+        traversal: the face phase advances the J payload ``n_pv`` times
+        (n_pv - 1 hops plus the realign hop back to dj = 1) and the volume
+        phase's inner loop advances K ``(n_pv - 1)(n_pv + 1)`` times
+        (n_pv + 1 inner hops — including the per-row realign — for each of
+        the n_pv - 1 outer rows).  ``n_pv == 1`` has no off-rank blocks and
+        never ppermutes.  Batched-campaign accounting only; independent of
+        metric count by construction."""
+        if self.n_pv == 1:
+            return 0
+        return self.n_pv + (self.n_pv - 1) * (self.n_pv + 1)
+
     def slab_items(self) -> list[ThreeWayItem]:
         """All items of one slab in Algorithm-2 order (same for every slab
         modulo the ring offsets, which is what makes the schedule SPMD)."""

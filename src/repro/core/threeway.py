@@ -52,12 +52,23 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.parallel.compat import shard_map
 
 from repro.core import checksum as ck
-from repro.core.metric_spec import CZEKANOWSKI, MetricSpec
+from repro.core.metric_spec import (
+    CZEKANOWSKI,
+    MetricSpec,
+    batch_lead,
+    group_families,
+    plane_native,
+)
 from repro.core.plan3 import ItemKind, ThreeWayPlan, PERMS
 from repro.core.tile_executor import TileExecutor
-from repro.core.twoway import CometConfig
+from repro.core.twoway import CometConfig, batch_accounting
 
-__all__ = ["ThreeWayOutput", "threeway_distributed", "czek3_distributed"]
+__all__ = [
+    "ThreeWayOutput",
+    "threeway_distributed",
+    "threeway_batched",
+    "czek3_distributed",
+]
 
 # lookup: (rank_own, rank_J, rank_K) base-3 -> permutation index (plan3.PERMS)
 _PERM_LUT = np.zeros(27, np.int32)
@@ -77,26 +88,32 @@ def _vol_rule_traced(own, bj, bk):
 
 def _item_metrics(
     pipe, left, right, s_p, s_l, s_r, j0, *, kind: ItemKind, L: int,
-    executor: TileExecutor, out_dtype, metric: MetricSpec = None,
-    deferred: bool = False,
+    execs, groups, out_dtype, deferred: bool = False,
 ):
-    """Masked metric slice (L, m, m) for one work item.
+    """Masked metric slices for one work item — (M, L, m, m), one per
+    requested metric in flattened family order.
 
     pipe/left/right: (n_fp, m) field-major value blocks, or (levels, kb, m)
     packed uint8 bit-planes on the plane ring (docs/BITPLANE_FORMAT.md);
-    s_*: (m,) per-vector stats (already psummed over pf); j0: traced
-    pipeline offset.
+    s_*: (G, m) per-FAMILY stats (already psummed over pf) — ``groups`` is
+    the ``group_families`` partition of the requested metrics, ``execs``
+    the parallel per-group executor lists (``execs[g][0]`` is the family's
+    contraction lead).  Each family contracts ONCE; members differ only in
+    their ``assemble3`` epilogue.  Product-family groups riding a plane
+    ring reconstruct exact values via ``values_from_planes`` first.  All
+    families' numerators psum in ONE fused collective, so the item costs
+    one collective regardless of metric count.  j0: traced pipeline offset.
 
     ``deferred=True`` (streamed chunk programs, ``repro.stream``) stops
     after the psum and returns the RAW fp32 numerator partials
-    ``(B, n2_pl, n2_pr, n2_lr)`` — shapes (L, m, m), (L, m), (L, m),
-    (m, m), zeros standing in when the metric needs no pair terms — so the
-    cross-shard merge epilogue can assemble and mask once per campaign
-    instead of once per chunk.
+    ``(B, n2_pl, n2_pr, n2_lr)`` — shapes (G, L, m, m), (G, L, m),
+    (G, L, m), (G, m, m), zeros standing in when the family needs no pair
+    terms — so the cross-shard merge epilogue can assemble and mask once
+    per campaign instead of once per chunk.
     """
-    metric = metric or CZEKANOWSKI
     m = pipe.shape[-1]
-    if pipe.ndim == 3:
+    planes = pipe.ndim == 3
+    if planes:
         # packed bit-plane ring: pipeline slicing along the vector axis is
         # a plain byte-range view of the (levels, kb, m) payload — the
         # field axis (where bits pack 8-per-byte) is untouched
@@ -106,31 +123,58 @@ def _item_metrics(
     else:
         n_fp = pipe.shape[0]
         ps = jax.lax.dynamic_slice(pipe, (0, j0), (n_fp, L))  # (n_fp, L)
-    # 3-way term B[t, l, r] via the executor (fused X_j kernel on pallas)
-    B = executor.threeway_slice(ps, left, right)
-    if metric.needs_pair_terms:
-        # pairwise numerators, one fused psum with the 3-way term
-        n2_pl = executor.pair_numerator(ps, left)  # (L, m)
-        n2_pr = executor.pair_numerator(ps, right)  # (L, m)
-        n2_lr = executor.pair_numerator(left, right)  # (m, m)
-        B, n2_pl, n2_pr, n2_lr = jax.lax.psum((B, n2_pl, n2_pr, n2_lr), "pf")
-    else:
-        n2_pl = n2_pr = n2_lr = None
-        B = jax.lax.psum(B, "pf")
+    if planes and any(not plane_native(grp[0]) for grp in groups):
+        # product-family members can't contract packed planes; V = Σ plane_t
+        # is exact, so they ride the SAME ring payload at full precision
+        from repro.kernels.mgemm_levels import values_from_planes
+
+        W_ps = values_from_planes(ps)
+        W_left = values_from_planes(left)
+        W_right = W_left if right is left else values_from_planes(right)
+
+    # one contraction per family, all partials fused into a single psum
+    parts, needs_of = [], []
+    for g, grp in enumerate(groups):
+        ex = execs[g][0]
+        if planes and not plane_native(grp[0]):
+            ops = (W_ps, W_left, W_right)
+        else:
+            ops = (ps, left, right)
+        B = ex.threeway_slice(*ops)
+        needs = any(s.needs_pair_terms for s in grp)
+        needs_of.append(needs)
+        parts.append(B)
+        if needs:
+            parts.append(ex.pair_numerator(ops[0], ops[1]))  # (L, m)
+            parts.append(ex.pair_numerator(ops[0], ops[2]))  # (L, m)
+            parts.append(ex.pair_numerator(ops[1], ops[2]))  # (m, m)
+    parts = jax.lax.psum(tuple(parts), "pf")
+
+    # unpack per group: (B, n2_pl, n2_pr, n2_lr) with None where unneeded
+    group_res, cursor = [], 0
+    for g in range(len(groups)):
+        if needs_of[g]:
+            group_res.append(tuple(parts[cursor:cursor + 4]))
+            cursor += 4
+        else:
+            group_res.append((parts[cursor], None, None, None))
+            cursor += 1
 
     if deferred:
-        m_ = B.shape[-1]
-        zero_lm = jnp.zeros((L, m_), jnp.float32)
-        zero_mm = jnp.zeros((m_, m_), jnp.float32)
-        return (
-            B.astype(jnp.float32),
-            zero_lm if n2_pl is None else n2_pl.astype(jnp.float32),
-            zero_lm if n2_pr is None else n2_pr.astype(jnp.float32),
-            zero_mm if n2_lr is None else n2_lr.astype(jnp.float32),
+        zero_lm = jnp.zeros((L, m), jnp.float32)
+        zero_mm = jnp.zeros((m, m), jnp.float32)
+        return tuple(
+            jnp.stack(bufs)
+            for bufs in zip(*[
+                (
+                    B.astype(jnp.float32),
+                    zero_lm if pl is None else pl.astype(jnp.float32),
+                    zero_lm if pr is None else pr.astype(jnp.float32),
+                    zero_mm if lr is None else lr.astype(jnp.float32),
+                )
+                for B, pl, pr, lr in group_res
+            ])
         )
-
-    sp = jax.lax.dynamic_slice(s_p, (j0,), (L,))
-    c3 = metric.assemble3(B, n2_pl, n2_pr, n2_lr, sp, s_l, s_r)
 
     jg = j0 + jnp.arange(L)  # global-in-block pipeline indices
     li = jnp.arange(m)
@@ -139,15 +183,32 @@ def _item_metrics(
             li[None, None, :] > jg[:, None, None]
         )
     elif kind == ItemKind.FACE:
-        mask = jnp.broadcast_to(li[None, None, :] > jg[:, None, None], c3.shape)
+        mask = jnp.broadcast_to(
+            li[None, None, :] > jg[:, None, None], (L, m, m)
+        )
     else:
-        mask = jnp.ones(c3.shape, bool)
-    return jnp.where(mask, c3, 0).astype(out_dtype)
+        mask = jnp.ones((L, m, m), bool)
+
+    outs = []
+    for g, grp in enumerate(groups):
+        B, n2_pl, n2_pr, n2_lr = group_res[g]
+        sp = jax.lax.dynamic_slice(s_p[g], (j0,), (L,))
+        for spec in grp:
+            use = spec.needs_pair_terms
+            c3 = spec.assemble3(
+                B,
+                n2_pl if use else None,
+                n2_pr if use else None,
+                n2_lr if use else None,
+                sp, s_l[g], s_r[g],
+            )
+            outs.append(jnp.where(mask, c3, 0).astype(out_dtype))
+    return jnp.stack(outs)
 
 
 def _threeway_program(
     Vl, *, cfg: CometConfig, plan: ThreeWayPlan, stage: int, out_dtype,
-    metric: MetricSpec = None, deferred: bool = False,
+    metric: MetricSpec = None, groups=None, deferred: bool = False,
 ):
     """Per-device program. Vl: (n_f/n_pf, n_vp) values, or — on the plane
     ring (resolved ``encoding == "bitplane"``) — the rank's packed plane
@@ -157,19 +218,38 @@ def _threeway_program(
     byte-range view fed straight to the level-decomposed kernels — no
     per-slice re-encode.
 
+    ``groups`` (batched campaigns) is the ``group_families`` partition of
+    several requested metrics: every item contracts once per family and
+    fans out through each member's epilogue, and the output gains a metric
+    axis — (slots, M, L, m, m), flattened family order.  When ``groups``
+    is None (the sequential API) the single ``metric`` runs as the
+    degenerate one-family batch and the metric axis is squeezed away, so
+    both entry points share one schedule implementation and the sequential
+    output layout is unchanged.  The payload ring is identical either way
+    — batching never adds a ppermute; only the (G, m) stat rows scale with
+    family count.
+
     ``deferred=True`` (streamed chunk programs): identical schedule and
     ring, but every item stores its raw fp32 numerator partials — a
-    4-tuple of slot buffers — and the per-vector stat partial is returned
-    alongside, so ``repro.stream`` can accumulate across byte-axis chunks
-    and assemble once in the cross-shard merge epilogue."""
-    metric = metric or CZEKANOWSKI
+    4-tuple of slot buffers, with a leading family axis under ``groups``
+    — and the per-vector stat partial is returned alongside, so
+    ``repro.stream`` can accumulate across byte-axis chunks and assemble
+    once in the cross-shard merge epilogue."""
+    squeeze = groups is None
+    if squeeze:
+        groups = [[metric or CZEKANOWSKI]]
     planes = Vl.ndim == 3  # plane shards are 3-D, value shards 2-D
     n_pv, n_pr, n_st = cfg.n_pv, cfg.n_pr, cfg.n_st
     m = Vl.shape[-1]
     assert m % (6 * n_st) == 0, "n_vp must divide 6*n_st"
     L = m // (6 * n_st)
-    executor = TileExecutor(cfg=cfg, metric=metric, out_dtype=out_dtype,
-                            axis="pf", deferred=deferred)
+    n_groups = len(groups)
+    n_metrics = sum(len(grp) for grp in groups)
+    execs = [
+        [TileExecutor(cfg=cfg, metric=s, out_dtype=out_dtype,
+                      axis="pf", deferred=deferred) for s in grp]
+        for grp in groups
+    ]
     slots = plan.slots_per_rank
 
     pv = jax.lax.axis_index("pv")
@@ -180,18 +260,22 @@ def _threeway_program(
         # stats from the exact value reconstruction V = sum_t plane_t
         from repro.kernels.mgemm_levels import values_from_planes
 
-        s_own = jax.lax.psum(metric.stat(values_from_planes(Vl)), "pf")
+        W = values_from_planes(Vl)
     else:
-        s_own = jax.lax.psum(metric.stat(Vl), "pf")
+        W = Vl
+    # (G, m): one psummed stat row per family, ring-carried as one array
+    s_own = jnp.stack(
+        [jax.lax.psum(grp[0].stat(W), "pf") for grp in groups]
+    )
     if deferred:
         out0 = (
-            jnp.zeros((slots, L, m, m), jnp.float32),  # 3-way numerators
-            jnp.zeros((slots, L, m), jnp.float32),  # pipe x left pairs
-            jnp.zeros((slots, L, m), jnp.float32),  # pipe x right pairs
-            jnp.zeros((slots, m, m), jnp.float32),  # left x right pairs
+            jnp.zeros((slots, n_groups, L, m, m), jnp.float32),  # 3-way
+            jnp.zeros((slots, n_groups, L, m), jnp.float32),  # pipe x left
+            jnp.zeros((slots, n_groups, L, m), jnp.float32),  # pipe x right
+            jnp.zeros((slots, n_groups, m, m), jnp.float32),  # left x right
         )
     else:
-        out0 = jnp.zeros((slots, L, m, m), out_dtype)
+        out0 = jnp.zeros((slots, n_metrics, L, m, m), out_dtype)
 
     def j0_of(idx):
         return L * (stage + n_st * idx)
@@ -211,7 +295,7 @@ def _threeway_program(
                     for oo, cc in zip(o, c3)
                 )
             return jax.lax.dynamic_update_slice(
-                o, c3[None], (slot_of(sb), 0, 0, 0)
+                o, c3[None], (slot_of(sb),) + (0,) * c3.ndim
             )
         return jax.lax.cond(execute, do, lambda o: o, out)
 
@@ -225,8 +309,8 @@ def _threeway_program(
             execute,
             lambda s=s: _item_metrics(
                 Vl, Vl, Vl, s_own, s_own, s_own, j0_of(s),
-                kind=ItemKind.DIAG, L=L, executor=executor,
-                out_dtype=out_dtype, metric=metric, deferred=deferred,
+                kind=ItemKind.DIAG, L=L, execs=execs, groups=groups,
+                out_dtype=out_dtype, deferred=deferred,
             ),
         )
 
@@ -244,8 +328,8 @@ def _threeway_program(
                 execute,
                 lambda s=s, bufj=bufj, sbj=sbj: _item_metrics(
                     bufj, Vl, bufj, sbj, s_own, sbj, j0_of(s),
-                    kind=ItemKind.FACE, L=L, executor=executor,
-                    out_dtype=out_dtype, metric=metric, deferred=deferred,
+                    kind=ItemKind.FACE, L=L, execs=execs, groups=groups,
+                    out_dtype=out_dtype, deferred=deferred,
                 ),
             )
         return bufj, sbj, out
@@ -294,8 +378,8 @@ def _threeway_program(
             )
             return _item_metrics(
                 pipe, left, right, s_p, s_l, s_r, j0,
-                kind=ItemKind.VOL, L=L, executor=executor,
-                out_dtype=out_dtype, metric=metric, deferred=deferred,
+                kind=ItemKind.VOL, L=L, execs=execs, groups=groups,
+                out_dtype=out_dtype, deferred=deferred,
             )
 
         out = emit(out, sb, execute, thunk)
@@ -320,7 +404,12 @@ def _threeway_program(
             (Vl, s_own, bufj, sbj, jnp.int32(sb_base), out),
         )
     if deferred:
+        if squeeze:  # drop the one-family axis (sequential streamed API)
+            out = tuple(o[:, 0] for o in out)
+            return tuple(o[None, None] for o in out) + (s_own[0][None],)
         return tuple(o[None, None] for o in out) + (s_own[None],)
+    if squeeze:  # drop the one-metric axis (sequential API layout)
+        out = out[:, 0]
     return out[None, None]
 
 
@@ -387,6 +476,58 @@ class ThreeWayOutput:
         return sum(len(I) for I, _, _, _ in self.entries())
 
 
+def _prep_payload3(V, cfg: CometConfig, metric: MetricSpec):
+    """Resolve the config against V and build the sharded 3-way payload.
+
+    Shared by the sequential and batched entry points (identical payload
+    bytes either way).  Returns ``(cfg, arg, in_specs, n_vp, n_v)``.
+
+    With the resolved ``encoding == "bitplane"`` the campaign encodes
+    packed bit-planes ONCE here and the doubly-nested ring carries THEM
+    through Phases B/C (for {0,1,2} SNP data 1/16 of the fp32 wire
+    volume; see docs/BITPLANE_FORMAT.md) — otherwise the ring carries
+    values (int8 auto-selection still quarters the fp32 wire traffic).
+
+    Algorithm 3's pipeline geometry needs the per-rank block size to split
+    into 6 sixths x n_st stages: round n_vp up to a multiple of 6*n_st and
+    zero-pad.  All pad columns land at the global tail, so global index ==
+    padded column index and entries() masks them with < n_v.
+    """
+    from repro.kernels.mgemm_levels.planes import PackedPlanes, pad_planes
+
+    from repro.core.twoway import resolve_config
+
+    unit = 6 * cfg.n_st
+    if isinstance(V, PackedPlanes):
+        n_v = V.n_v
+        cfg = resolve_config(cfg, V, metric)  # always "bitplane" (or raises)
+        n_vp = -(-n_v // cfg.n_pv)
+        n_vp += (-n_vp) % unit
+        Pp = pad_planes(V.planes, byte_align=cfg.n_pf, n_v=cfg.n_pv * n_vp)
+        return cfg, jnp.asarray(Pp), P(None, "pf", "pv"), n_vp, n_v
+    n_v = V.shape[1]
+    V = np.asarray(V)
+    cfg = resolve_config(cfg, V, metric)
+    planes = cfg.encoding == "bitplane"
+    n_vp = -(-n_v // cfg.n_pv)
+    n_vp += (-n_vp) % unit
+    fp = (-V.shape[0]) % cfg.n_pf
+    Vp = np.pad(V, ((0, fp), (0, cfg.n_pv * n_vp - n_v)))
+    if planes:
+        # field_align pads fields to 8*n_pf so the BYTE axis splits
+        # evenly over "pf" (planes.py owns the rule); pad bits are inert
+        from repro.kernels.mgemm_levels import encode_bitplanes_np
+
+        arg = jnp.asarray(
+            encode_bitplanes_np(Vp, cfg.levels, field_align=cfg.n_pf)
+        )
+        in_specs = P(None, "pf", "pv")
+    else:
+        arg = jnp.asarray(Vp, dtype=jnp.dtype(cfg.ring_dtype))
+        in_specs = P("pf", "pv")
+    return cfg, arg, in_specs, n_vp, n_v
+
+
 def threeway_distributed(
     V, mesh: Mesh, cfg: CometConfig, stage: int = 0,
     metric: MetricSpec = None,
@@ -396,51 +537,8 @@ def threeway_distributed(
     ``V``: (n_f, n_v) value matrix, or a pre-encoded ``PackedPlanes``
     payload (``repro.store`` zero-encode loading) — re-padded packed, never
     re-encoded on the host."""
-    from repro.kernels.mgemm_levels.planes import PackedPlanes, pad_planes
-
     metric = metric or CZEKANOWSKI
-    # Resolve 'auto' knobs.  With the resolved ``encoding == "bitplane"``
-    # the campaign encodes packed bit-planes ONCE here and the doubly-
-    # nested ring carries THEM through Phases B/C (for {0,1,2} SNP data
-    # 1/16 of the fp32 wire volume; see docs/BITPLANE_FORMAT.md) —
-    # otherwise the ring carries values (int8 auto-selection still
-    # quarters the fp32 wire traffic).
-    from repro.core.twoway import resolve_config
-
-    # Algorithm 3's pipeline geometry needs the per-rank block size to split
-    # into 6 sixths x n_st stages: round n_vp up to a multiple of 6*n_st and
-    # zero-pad.  All pad columns land at the global tail, so global index ==
-    # padded column index and entries() masks them with < n_v.
-    unit = 6 * cfg.n_st
-    if isinstance(V, PackedPlanes):
-        n_v = V.n_v
-        cfg = resolve_config(cfg, V, metric)  # always "bitplane" (or raises)
-        n_vp = -(-n_v // cfg.n_pv)
-        n_vp += (-n_vp) % unit
-        Pp = pad_planes(V.planes, byte_align=cfg.n_pf, n_v=cfg.n_pv * n_vp)
-        arg = jnp.asarray(Pp)
-        in_specs = P(None, "pf", "pv")
-    else:
-        n_v = V.shape[1]
-        V = np.asarray(V)
-        cfg = resolve_config(cfg, V, metric)
-        planes = cfg.encoding == "bitplane"
-        n_vp = -(-n_v // cfg.n_pv)
-        n_vp += (-n_vp) % unit
-        fp = (-V.shape[0]) % cfg.n_pf
-        Vp = np.pad(V, ((0, fp), (0, cfg.n_pv * n_vp - n_v)))
-        if planes:
-            # field_align pads fields to 8*n_pf so the BYTE axis splits
-            # evenly over "pf" (planes.py owns the rule); pad bits are inert
-            from repro.kernels.mgemm_levels import encode_bitplanes_np
-
-            arg = jnp.asarray(
-                encode_bitplanes_np(Vp, cfg.levels, field_align=cfg.n_pf)
-            )
-            in_specs = P(None, "pf", "pv")
-        else:
-            arg = jnp.asarray(Vp, dtype=jnp.dtype(cfg.ring_dtype))
-            in_specs = P("pf", "pv")
+    cfg, arg, in_specs, n_vp, n_v = _prep_payload3(V, cfg, metric)
     plan = ThreeWayPlan(cfg.n_pv, cfg.n_pr, cfg.n_st)
     out_dtype = jnp.dtype(cfg.out_dtype)
 
@@ -458,6 +556,52 @@ def threeway_distributed(
         cfg.n_pv, cfg.n_pr, plan.slots_per_rank, L, n_vp, n_vp
     )
     return ThreeWayOutput(blocks=blocks, plan=plan, n_v=n_v, n_vp=n_vp, stage=stage)
+
+
+def threeway_batched(
+    V, mesh: Mesh, cfg: CometConfig, specs, stage: int = 0,
+) -> tuple:
+    """Batched 3-way campaigns: one tetrahedral traversal, one result per
+    metric.
+
+    ``specs``: MetricSpecs sharing the SAME payload ('auto' knobs resolve
+    against ``batch_lead(specs)``).  Returns ``(outputs, binfo)``:
+    per-spec ``ThreeWayOutput`` in request order, each bit-identical to
+    its sequential ``threeway_distributed`` run, plus the per-stage
+    ring-traffic accounting (payload hops independent of metric count).
+    """
+    specs = list(specs)
+    cfg, arg, in_specs, n_vp, n_v = _prep_payload3(V, cfg, batch_lead(specs))
+    groups = group_families(specs)
+    flat = [s for grp in groups for s in grp]
+    plan = ThreeWayPlan(cfg.n_pv, cfg.n_pr, cfg.n_st)
+    out_dtype = jnp.dtype(cfg.out_dtype)
+
+    fn = shard_map(
+        partial(_threeway_program, cfg=cfg, plan=plan, stage=stage,
+                out_dtype=out_dtype, groups=groups),
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=P("pv", "pr", None, None, None, None, None),
+        check=False,
+    )
+    blocks = np.asarray(jax.jit(fn)(arg))
+    L = n_vp // (6 * cfg.n_st)
+    blocks = blocks.reshape(
+        cfg.n_pv, cfg.n_pr, plan.slots_per_rank, len(flat), L, n_vp, n_vp
+    )
+    by_name = {
+        s.name: ThreeWayOutput(
+            blocks=np.ascontiguousarray(blocks[:, :, :, i]), plan=plan,
+            n_v=n_v, n_vp=n_vp, stage=stage,
+        )
+        for i, s in enumerate(flat)
+    }
+    binfo = batch_accounting(
+        int(arg.nbytes), cfg, plan, groups, n_vp,
+        planes=(arg.ndim == 3), way=3,
+    )
+    return [by_name[s.name] for s in specs], binfo
 
 
 def czek3_distributed(

@@ -375,6 +375,80 @@ class TileExecutor:
             vals = jnp.where(tri, vals, 0)
         return vals
 
+    def pair_raw(self, Va, sa, Vb, sb, *, diagonal: bool = False):
+        """Raw psummed fp32 numerator of one 2-way block — the batched-
+        campaign contraction primitive.
+
+        One call produces the COMPLETE numerator a whole metric *family*
+        shares; the batched programs then fan it out through each member's
+        ``merge_pair`` epilogue (same ``assemble2`` fp ops as the in-kernel
+        ``assemble_tile``, so batched values stay bit-identical to the
+        sequential run).  On the levels paths this is exactly the
+        ``n_pf > 1`` merge-epilogue contraction: the fused kernels run with
+        ``epilogue=None`` and the triangular diagonal schedule preserved.
+        Product-family metrics riding a plane ring reconstruct exact values
+        via ``values_from_planes`` first (integer sums stay below the fp32
+        mantissa limit, so this is lossless).
+        """
+        if diagonal:
+            Vb = Va
+        if Va.ndim == 3 and not (
+            self.metric.contract_is_combine_sum
+            and self.metric.combine is jnp.minimum
+        ):
+            # plane payload, non-min metric (e.g. CCC): V = Σ plane_t exactly
+            from repro.kernels.mgemm_levels import values_from_planes
+
+            Wa = values_from_planes(Va)
+            Wb = Wa if Vb is Va else values_from_planes(Vb)
+            return self._psum(
+                self.contract(Wa.T, Wb).astype(jnp.float32)
+            )
+        path = self.path
+        if path in ("fused-levels", "fused-popcount"):
+            from repro.kernels.mgemm import unpack_tri_tiles
+
+            if path == "fused-popcount":
+                from repro.kernels.popgemm import (
+                    metric2_pop as metric2_fn,
+                    metric2_pop_tri as metric2_tri_fn,
+                )
+                from repro.kernels.popgemm.kernel import (
+                    DEFAULT_BKB,
+                    DEFAULT_BM as LEVELS_BM,
+                    DEFAULT_BN as LEVELS_BN,
+                )
+            else:
+                from repro.kernels.mgemm_levels import (
+                    metric2_levels as metric2_fn,
+                    metric2_levels_tri as metric2_tri_fn,
+                )
+                from repro.kernels.mgemm_levels.kernel import (
+                    DEFAULT_BKB,
+                    DEFAULT_BM as LEVELS_BM,
+                    DEFAULT_BN as LEVELS_BN,
+                )
+
+            m = Va.shape[-1]
+            n = Vb.shape[-1]
+            Pa, Pb = self._pair_planes(Va, Vb)
+            kw = dict(
+                epilogue=None,
+                bkb=max(1, min(DEFAULT_BKB, Pa.shape[1])),
+                out_dtype=jnp.float32,
+            )
+            if diagonal:
+                bt = _auto_tile(m, LEVELS_BM)
+                raw = unpack_tri_tiles(metric2_tri_fn(Pa, sa, bt=bt, **kw), m, bt)
+            else:
+                raw = metric2_fn(
+                    Pa, Pb, sa, sb,
+                    bm=_auto_tile(m, LEVELS_BM), bn=_auto_tile(n, LEVELS_BN),
+                    **kw,
+                )
+            return self._psum(raw)
+        return self._psum(self.pair_numerator(Va, Vb).astype(jnp.float32))
+
     def pair_partial(self, Va, Vb):
         """Deferred-flush block contraction: the raw fp32 numerator partial
         psummed over the contraction axis — what streamed chunk programs

@@ -38,7 +38,12 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.parallel.compat import shard_map
 
 from repro.core import checksum as ck
-from repro.core.metric_spec import CZEKANOWSKI, MetricSpec
+from repro.core.metric_spec import (
+    CZEKANOWSKI,
+    MetricSpec,
+    batch_lead,
+    group_families,
+)
 from repro.core.mgemm import get_impl
 from repro.core.plan2 import TwoWayPlan, global_pairs_of_block
 from repro.core.tile_executor import TileExecutor
@@ -47,6 +52,7 @@ __all__ = [
     "CometConfig",
     "TwoWayOutput",
     "twoway_distributed",
+    "twoway_batched",
     "czek2_distributed",
     "pad_vectors",
     "resolve_config",
@@ -457,6 +463,43 @@ def _twoway_deferred_program(
     return out[None, None], s_own[None]
 
 
+def _prep_payload(V, cfg: CometConfig, metric: MetricSpec):
+    """Resolve the config against V and build the sharded ring payload.
+
+    The one payload-preparation path shared by the sequential and batched
+    2-way entry points (so a batched campaign's payload is byte-identical
+    to the sequential campaign's).  Returns
+    ``(cfg, arg, in_specs, planes, n_vp, n_v)``.
+    """
+    from repro.kernels.mgemm_levels.planes import PackedPlanes, pad_planes
+
+    if isinstance(V, PackedPlanes):
+        n_v = V.n_v
+        cfg = resolve_config(cfg, V, metric)  # always "bitplane" (or raises)
+        Pp = pad_planes(
+            V.planes, byte_align=cfg.n_pf,
+            n_v=n_v + (-n_v) % cfg.n_pv,
+        )
+        return cfg, jnp.asarray(Pp), P(None, "pf", "pv"), True, \
+            Pp.shape[2] // cfg.n_pv, n_v
+    n_v = V.shape[1]
+    V = np.asarray(V)
+    cfg = resolve_config(cfg, V, metric)
+    planes = cfg.encoding == "bitplane"
+    if planes:
+        # encode ONCE before shard_map; the byte axis shards over "pf"
+        from repro.kernels.mgemm_levels import encode_bitplanes_np
+
+        Vp = pad_vectors(V, cfg, field_align=8)
+        arg = jnp.asarray(encode_bitplanes_np(Vp, cfg.levels))
+        in_specs = P(None, "pf", "pv")
+    else:
+        Vp = pad_vectors(V, cfg)
+        arg = jnp.asarray(Vp, dtype=jnp.dtype(cfg.ring_dtype))
+        in_specs = P("pf", "pv")
+    return cfg, arg, in_specs, planes, Vp.shape[1] // cfg.n_pv, n_v
+
+
 def twoway_distributed(
     V, mesh: Mesh, cfg: CometConfig, metric: MetricSpec = None
 ) -> TwoWayOutput:
@@ -466,37 +509,8 @@ def twoway_distributed(
     payload (``repro.store`` zero-encode loading) — the packed planes are
     re-padded with inert zero bytes/columns to the campaign geometry and
     ring-carried directly; the host encoder never runs."""
-    from repro.kernels.mgemm_levels.planes import PackedPlanes, pad_planes
-
     metric = metric or CZEKANOWSKI
-    if isinstance(V, PackedPlanes):
-        n_v = V.n_v
-        cfg = resolve_config(cfg, V, metric)  # always "bitplane" (or raises)
-        Pp = pad_planes(
-            V.planes, byte_align=cfg.n_pf,
-            n_v=n_v + (-n_v) % cfg.n_pv,
-        )
-        arg = jnp.asarray(Pp)
-        in_specs = P(None, "pf", "pv")
-        planes = True
-        n_vp = Pp.shape[2] // cfg.n_pv
-    else:
-        n_v = V.shape[1]
-        V = np.asarray(V)
-        cfg = resolve_config(cfg, V, metric)
-        planes = cfg.encoding == "bitplane"
-        if planes:
-            # encode ONCE before shard_map; the byte axis shards over "pf"
-            from repro.kernels.mgemm_levels import encode_bitplanes_np
-
-            Vp = pad_vectors(V, cfg, field_align=8)
-            arg = jnp.asarray(encode_bitplanes_np(Vp, cfg.levels))
-            in_specs = P(None, "pf", "pv")
-        else:
-            Vp = pad_vectors(V, cfg)
-            arg = jnp.asarray(Vp, dtype=jnp.dtype(cfg.ring_dtype))
-            in_specs = P("pf", "pv")
-        n_vp = Vp.shape[1] // cfg.n_pv
+    cfg, arg, in_specs, planes, n_vp, n_v = _prep_payload(V, cfg, metric)
     plan = TwoWayPlan(cfg.n_pv, cfg.n_pr)
     out_dtype = jnp.dtype(cfg.out_dtype)
 
@@ -513,6 +527,188 @@ def twoway_distributed(
         cfg.n_pv, cfg.n_pr, plan.slots_per_rank, n_vp, n_vp
     )
     return TwoWayOutput(blocks=blocks, plan=plan, n_v=n_v, n_vp=n_vp)
+
+
+def _twoway_batched_program(
+    Vl, *, cfg: CometConfig, plan: TwoWayPlan, out_dtype,
+    groups, planes: bool = False,
+):
+    """Batched-campaign per-device program: ONE ring traversal, M results.
+
+    ``groups`` is the ``group_families`` partition of the requested
+    metrics: each family shares a numerator contraction per ring step
+    (``TileExecutor.pair_raw``) and fans it out through every member's
+    ``merge_pair`` epilogue — extra metrics in a family cost one extra
+    elementwise assembly, never another contraction or ring step.  The
+    payload ring (``Vr``) is metric-agnostic and moves EXACTLY the bytes
+    of the sequential single-metric program; only the small per-family
+    (m,) stat vectors scale with family count.
+
+    Emits (M, slots, m, m) metric values, M = total metrics in flattened
+    family order (the entry point restores request order).
+    """
+    from repro.kernels.mgemm_levels import values_from_planes
+
+    n_pv, n_pr = cfg.n_pv, cfg.n_pr
+    m = Vl.shape[-1]
+    execs = [
+        [TileExecutor(cfg=cfg, metric=s, out_dtype=out_dtype, axis="pf")
+         for s in grp]
+        for grp in groups
+    ]
+    W = values_from_planes(Vl) if planes else Vl
+    # one psummed stat per family (members share the stat by definition
+    # of family_key) — bitwise the sequential program's s_own
+    stats = tuple(
+        jax.lax.psum(grp[0].stat(W), "pf") for grp in groups
+    )
+    n_metrics = sum(len(grp) for grp in groups)
+    pv = jax.lax.axis_index("pv")
+    pr = jax.lax.axis_index("pr")
+    perm = [((i + 1) % n_pv, i) for i in range(n_pv)]
+
+    Vr, srs = Vl, stats
+    out = jnp.zeros((n_metrics, plan.slots_per_rank, m, m), out_dtype)
+    for d in range(plan.n_steps):
+        if d > 0:
+            Vr = jax.lax.ppermute(Vr, "pv", perm)
+            srs = tuple(jax.lax.ppermute(s, "pv", perm) for s in srs)
+        execute = (d % n_pr) == pr
+        if plan.is_half_step(d):
+            execute = jnp.logical_and(execute, pv < n_pv // 2)
+
+        def compute(o, Vr=Vr, srs=srs, d=d):
+            vals = []
+            for g, ex_grp in enumerate(execs):
+                raw = ex_grp[0].pair_raw(
+                    Vl, stats[g], Vr, srs[g], diagonal=(d == 0)
+                )
+                vals.extend(
+                    ex.merge_pair(raw, stats[g], srs[g], diagonal=(d == 0))
+                    for ex in ex_grp
+                )
+            return o.at[:, d // n_pr].set(jnp.stack(vals))
+
+        out = jax.lax.cond(execute, compute, lambda o: o, out)
+    return out[None, None]  # leading (pv=1, pr=1) device dims
+
+
+def _twoway_deferred_batched_program(
+    Pl, *, cfg: CometConfig, plan: TwoWayPlan, groups,
+):
+    """Deferred-flush batched chunk program (streamed batched campaigns):
+    one byte-axis chunk, one ring, one raw fp32 numerator partial per
+    metric FAMILY (members share it) plus per-family stat partials.
+    Returns ``(partials (G, slots, m, m) fp32, stats (G, m) fp32)`` — the
+    host accumulates both across chunks and fans the merge epilogue out
+    per metric after the last chunk."""
+    from repro.kernels.mgemm_levels import values_from_planes
+
+    n_pv, n_pr = cfg.n_pv, cfg.n_pr
+    m = Pl.shape[-1]
+    execs = [
+        TileExecutor(cfg=cfg, metric=grp[0], out_dtype=jnp.float32,
+                     axis="pf", deferred=True)
+        for grp in groups
+    ]
+    W = values_from_planes(Pl)
+    stats = jnp.stack([jax.lax.psum(grp[0].stat(W), "pf") for grp in groups])
+    pv = jax.lax.axis_index("pv")
+    pr = jax.lax.axis_index("pr")
+    perm = [((i + 1) % n_pv, i) for i in range(n_pv)]
+
+    Pr = Pl
+    out = jnp.zeros((len(groups), plan.slots_per_rank, m, m), jnp.float32)
+    for d in range(plan.n_steps):
+        if d > 0:
+            Pr = jax.lax.ppermute(Pr, "pv", perm)
+        execute = (d % n_pr) == pr
+        if plan.is_half_step(d):
+            execute = jnp.logical_and(execute, pv < n_pv // 2)
+
+        def compute(o, Pr=Pr, d=d):
+            parts = jnp.stack(
+                [ex.pair_raw(Pl, None, Pr, None) for ex in execs]
+            )
+            return o.at[:, d // n_pr].set(parts)
+
+        out = jax.lax.cond(execute, compute, lambda o: o, out)
+    return out[None, None], stats[None]
+
+
+def twoway_batched(
+    V, mesh: Mesh, cfg: CometConfig, specs,
+) -> tuple:
+    """Batched 2-way campaigns: one ring traversal, one result per metric.
+
+    ``specs`` is a sequence of MetricSpecs sharing the SAME payload; the
+    config's 'auto' knobs resolve against ``batch_lead(specs)`` (the
+    plane-native member constrains encoding the most).  Returns
+    ``(outputs, binfo)``: per-spec ``TwoWayOutput`` in request order —
+    each bit-identical to its sequential ``twoway_distributed`` run — and
+    the ring-traffic accounting dict behind ``meta["batch"]``
+    (``ring_payload_bytes`` is a function of payload shape and plan ONLY,
+    independent of how many metrics ride the traversal).
+    """
+    specs = list(specs)
+    cfg, arg, in_specs, planes, n_vp, n_v = _prep_payload(
+        V, cfg, batch_lead(specs)
+    )
+    groups = group_families(specs)
+    flat = [s for grp in groups for s in grp]
+    plan = TwoWayPlan(cfg.n_pv, cfg.n_pr)
+    out_dtype = jnp.dtype(cfg.out_dtype)
+
+    fn = shard_map(
+        partial(_twoway_batched_program, cfg=cfg, plan=plan,
+                out_dtype=out_dtype, groups=groups, planes=planes),
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=P("pv", "pr", None, None, None, None),
+        check=False,
+    )
+    blocks = np.asarray(jax.jit(fn)(arg)).reshape(
+        cfg.n_pv, cfg.n_pr, len(flat), plan.slots_per_rank, n_vp, n_vp
+    )
+    by_name = {
+        s.name: TwoWayOutput(
+            blocks=np.ascontiguousarray(blocks[:, :, i]), plan=plan,
+            n_v=n_v, n_vp=n_vp,
+        )
+        for i, s in enumerate(flat)
+    }
+    binfo = batch_accounting(
+        int(arg.nbytes), cfg, plan, groups, n_vp, planes=planes, way=2
+    )
+    return [by_name[s.name] for s in specs], binfo
+
+
+def batch_accounting(
+    payload_nbytes: int, cfg: CometConfig, plan, groups,
+    n_vp: int, *, planes: bool, way: int,
+) -> dict:
+    """Ring-traffic accounting for one batched traversal (either way).
+
+    ``ring_payload_bytes`` counts the V/plane payload actually ppermuted:
+    per-rank shard bytes x the plan's ``ring_steps`` x ranks —
+    deliberately independent of metric count (that is the whole point of
+    batching).  The per-family (m,) fp32 stat vectors are the only traffic
+    that scales with the batch; they are reported separately and are
+    negligible next to the payload (m floats vs m payload columns)."""
+    shard = payload_nbytes // (cfg.n_pf * cfg.n_pv)
+    return {
+        "way": way,
+        "families": len(groups),
+        "metrics": [s.name for grp in groups for s in grp],
+        "planes": planes,
+        "payload_bytes_per_rank": shard,
+        "ring_steps": plan.ring_steps,
+        "n_ranks": cfg.n_ranks,
+        "ring_payload_bytes": shard * plan.ring_steps * cfg.n_ranks,
+        "stat_ring_bytes": (
+            len(groups) * n_vp * 4 * plan.ring_steps * cfg.n_ranks
+        ),
+    }
 
 
 def czek2_distributed(V: np.ndarray, mesh: Mesh, cfg: CometConfig) -> TwoWayOutput:

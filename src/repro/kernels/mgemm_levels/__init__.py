@@ -16,6 +16,7 @@ from .planes import (  # noqa: F401
     planes_nbytes,
     shard_planes_fields,
     slice_planes_vectors,
+    take_planes_vectors,
     values_from_planes,
 )
 from .ref import metric2_levels_planes_ref, mgemm_levels_ref  # noqa: F401

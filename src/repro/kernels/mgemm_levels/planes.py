@@ -73,6 +73,7 @@ __all__ = [
     "planes_nbytes",
     "pad_planes",
     "slice_planes_vectors",
+    "take_planes_vectors",
     "shard_planes_fields",
 ]
 
@@ -252,6 +253,27 @@ def slice_planes_vectors(P, start, count: int):
     """
     levels, kb, _ = P.shape
     return jax.lax.dynamic_slice(P, (0, 0, start), (levels, kb, count))
+
+
+def take_planes_vectors(P, idx) -> np.ndarray:
+    """Subset view: gather arbitrary vector columns of packed planes.
+
+    The general-index sibling of ``slice_planes_vectors``: packing is along
+    the *field* axis, so ANY vector-axis gather commutes with encoding —
+    ``take_planes_vectors(encode(V), idx) == encode(V[:, idx])``
+    bit-for-bit.  This is what lets batched phenotype-subset campaigns
+    share one encoded payload: the union of all subsets is gathered once
+    and the wire format is reused unmodified (no re-encode).  Host-side
+    (numpy); indices may repeat and need not be sorted.
+
+    >>> import numpy as np
+    >>> V = np.arange(24).reshape(4, 6) % 3
+    >>> lhs = take_planes_vectors(encode_bitplanes_np(V, 2), [4, 1, 3])
+    >>> bool((lhs == encode_bitplanes_np(V[:, [4, 1, 3]], 2)).all())
+    True
+    """
+    idx = np.asarray(idx, dtype=np.int64)
+    return np.asarray(P)[:, :, idx]
 
 
 def shard_planes_fields(P, rank: int, n_shards: int):

@@ -14,11 +14,91 @@ import os
 import sys
 
 
+def _parse_metrics(metrics: str, metric: str) -> list:
+    """'czekanowski,sorenson' -> campaign metric names (primary first);
+    an empty --metrics falls back to the single --metric."""
+    if not metrics:
+        return [metric]
+    names = [m.strip() for m in metrics.split(",") if m.strip()]
+    if not names:
+        raise ValueError("--metrics given but no metric names parsed")
+    return names
+
+
+def _parse_subsets(subsets: str) -> tuple:
+    """';'-separated 'name=lo:hi[:step]' or 'name=i,j,k' -> request tuples."""
+    if not subsets:
+        return ()
+    out = []
+    for part in subsets.split(";"):
+        part = part.strip()
+        if not part:
+            continue
+        name, eq, spec = part.partition("=")
+        if not eq or not name.strip() or not spec.strip():
+            raise ValueError(
+                f"--subsets entry {part!r} is not 'name=lo:hi[:step]' "
+                f"or 'name=i,j,k'"
+            )
+        name, spec = name.strip(), spec.strip()
+        try:
+            if ":" in spec:
+                fields = [int(x) for x in spec.split(":")]
+                if len(fields) not in (2, 3):
+                    raise ValueError
+                idx = tuple(range(*fields))
+            else:
+                idx = tuple(int(x) for x in spec.split(","))
+        except ValueError:
+            raise ValueError(
+                f"--subsets entry {part!r}: bad index spec {spec!r}"
+            ) from None
+        out.append((name, idx))
+    return tuple(out)
+
+
+def _report_batched(batched, request, args) -> int:
+    """Per-campaign result rows + the shared ring-traffic accounting."""
+    b = batched.meta["batch"]
+    print(f"batched campaigns={b['campaigns']} "
+          f"metrics={','.join(request.campaign_metrics())} "
+          f"subsets={','.join(b['subsets']) or '(full)'} "
+          f"families={b['families']} way={b['way']}")
+    print(f"ring payload_bytes_per_rank={b['payload_bytes_per_rank']} "
+          f"ring_steps={b['ring_steps']} n_ranks={b['n_ranks']} "
+          f"ring_payload_bytes={b['ring_payload_bytes']} "
+          f"stat_ring_bytes={b['stat_ring_bytes']} "
+          f"traversals={b['traversals']} encodes={b['encodes']}")
+    for mname, sname, result in batched:
+        n_results = result.num_results()
+        print(f"campaign metric={mname} subset={sname or '(full)'} "
+              f"n_v={result.n_v} results={n_results} "
+              f"checksum={hex(result.checksum())}")
+        if args.out:
+            sub = mname + (f"__{sname}" if sname else "")
+            result.save(os.path.join(args.out, sub))
+    print(f"time={batched.seconds:.3f}s")
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--metric", default="czekanowski",
                     help="registered metric name (see --list-metrics)")
-    ap.add_argument("--list-metrics", action="store_true")
+    ap.add_argument("--metrics", default="",
+                    help="comma-separated metric list for a BATCHED campaign "
+                         "— every metric rides ONE ring traversal of the "
+                         "shared payload (overrides --metric; first name is "
+                         "the primary)")
+    ap.add_argument("--subsets", default="",
+                    help="named vector-index subsets for a batched campaign, "
+                         "';'-separated 'name=SPEC' with SPEC either "
+                         "'lo:hi[:step]' or 'i,j,k'; each subset runs as its "
+                         "own campaign against a byte-slice view of the "
+                         "shared plane payload (no re-encode)")
+    ap.add_argument("--list-metrics", action="store_true",
+                    help="print every registered metric (sorted) with its "
+                         "one-line description and exit")
     ap.add_argument("--way", type=int, default=2, choices=(2, 3))
     ap.add_argument("--n-f", type=int, default=512)
     ap.add_argument("--n-v", type=int, default=240)
@@ -90,9 +170,19 @@ def main(argv=None):
     )
 
     if args.list_metrics:
-        for name in available_metrics():
-            print(name)
+        from repro.api import get_metric
+
+        for name in sorted(available_metrics()):
+            desc = get_metric(name).description.split("\n")[0].strip()
+            print(f"{name:16s} {desc}" if desc else name)
         return 0
+
+    try:
+        names = _parse_metrics(args.metrics, args.metric)
+        subsets = _parse_subsets(args.subsets)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
 
     if args.dataset and args.input:
         print("error: --input and --dataset are mutually exclusive",
@@ -125,7 +215,8 @@ def main(argv=None):
         (args.stage,) if args.way == 3 else None
     )
     request = SimilarityRequest(
-        metric=args.metric, way=args.way,
+        metric=names[0], metrics=tuple(names[1:]), subsets=subsets,
+        way=args.way,
         n_pf=args.n_pf, n_pv=args.n_pv, n_pr=args.n_pr, n_st=args.n_st,
         stages=stages, impl=impl, levels=levels,
         out_dtype=args.out_dtype, ring_dtype=args.ring_dtype,
@@ -145,8 +236,9 @@ def main(argv=None):
         from repro.core.twoway import resolve_config
 
         try:
-            spec = get_metric(args.metric)
+            spec = get_metric(request.metric)
             request.validate(metric_spec=spec)
+            specs = [get_metric(n) for n in request.campaign_metrics()]
             if (request.input.source == "planes"
                     and request.streaming != "off"):
                 # lazy handle: the streaming decision resolves without
@@ -156,20 +248,36 @@ def main(argv=None):
                 probe = DatasetReader(request.input.path).sharded()
             else:
                 probe = request.input.materialize()
-            cfg = resolve_config(request.to_comet_config(), probe, spec)
+            # batched campaigns resolve the shared-payload knobs against
+            # the lead (plane-native) metric — same rule as the engines
+            from repro.api.registry import batch_lead
+
+            cfg = resolve_config(
+                request.to_comet_config(), probe,
+                batch_lead(specs) if request.is_batched else spec,
+            )
         except (UnknownMetricError, ValueError) as e:
             print(f"error: {e}", file=sys.stderr)
             return 2
-        ex = TileExecutor(cfg=cfg, metric=spec,
-                          out_dtype=jnp.dtype(args.out_dtype), axis=None,
-                          deferred=(cfg.streaming == "on"))
-        path, why = ((ex.path, ex.path_reason) if args.way == 2
-                     else (ex.path3, ex.path3_reason))
-        reason = f" ({why})" if why else ""
+        # one row per campaign: the per-metric executor path over the
+        # SHARED resolved payload (subsets never change the path — they
+        # are byte-slice views of the same planes)
+        for mspec in specs:
+            ex = TileExecutor(cfg=cfg, metric=mspec,
+                              out_dtype=jnp.dtype(args.out_dtype), axis=None,
+                              deferred=(cfg.streaming == "on"))
+            path, why = ((ex.path, ex.path_reason) if args.way == 2
+                         else (ex.path3, ex.path3_reason))
+            reason = f" ({why})" if why else ""
+            for sname, _ in request.campaign_subsets():
+                row = f"path={path}{reason}"
+                if request.is_batched:
+                    row = (f"campaign metric={mspec.name} "
+                           f"subset={sname or '(full)'} " + row)
+                print(row)
         # with encoding=bitplane BOTH engines pre-encode once and ring-carry
         # the packed planes (3-way: path3 == "fused-levels-ring"); with
         # streaming=on the streamed-* chunk paths + merge epilogue run
-        print(f"path={path}{reason}")
         print(f"encoding={cfg.encoding} ring_dtype={cfg.ring_dtype} "
               f"impl={cfg.impl} levels={cfg.levels}")
         print(f"streaming={cfg.streaming} "
@@ -181,6 +289,9 @@ def main(argv=None):
     except (UnknownMetricError, ValueError) as e:
         print(f"error: {e}", file=sys.stderr)
         return 2
+
+    if request.is_batched:
+        return _report_batched(result, request, args)
 
     n_results = result.num_results()
     comparisons = n_results * result.n_f

@@ -113,8 +113,21 @@ class SimilarityService:
 
     @staticmethod
     def _fingerprint(request, V) -> tuple:
+        """(normalized request, campaign identity, payload hash).
+
+        The campaign key — metric name(s) + subset (name, indices) pairs —
+        is part of the cache identity: two requests over the same payload
+        and decomposition that differ only in which campaigns they batch
+        are DIFFERENT answers.  Normalizing the ``subsets`` field first
+        (list indices, numpy ints) keeps equivalent requests hashable and
+        cache-equal regardless of how the caller spelled the indices."""
+        if request.subsets:
+            from dataclasses import replace
+
+            request = replace(request, subsets=request.campaign_subsets())
+        ckey = request.campaign_key()
         if V is None:
-            return (request, None)
+            return (request, ckey, None)
         from repro.kernels.mgemm_levels.planes import PackedPlanes
 
         h = hashlib.sha256()
@@ -128,10 +141,11 @@ class SimilarityService:
         h.update(str(a.shape).encode())
         h.update(str(a.dtype).encode())
         h.update(a.tobytes())
-        return (request, h.hexdigest())
+        return (request, ckey, h.hexdigest())
 
     def submit(self, request, V=None):
-        """Run (or serve from cache) one campaign; returns SimilarityResult."""
+        """Run (or serve from cache) one campaign — a ``SimilarityResult``,
+        or a ``BatchedSimilarityResult`` for batched requests."""
         if V is None and request.input is not None:
             # materialize BEFORE fingerprinting: a request-only key would go
             # stale if the backing file (or generator defaults) changed

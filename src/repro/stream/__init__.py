@@ -9,7 +9,12 @@ bit-identical to an in-memory campaign.  Peak host payload memory is the
 two staging buffers — bounded by ``CometConfig.max_host_bytes`` — never
 the dataset size.
 """
-from repro.stream.pipeline import stream_threeway, stream_twoway  # noqa: F401
+from repro.stream.pipeline import (  # noqa: F401
+    stream_threeway,
+    stream_threeway_batched,
+    stream_twoway,
+    stream_twoway_batched,
+)
 from repro.stream.plan import StreamChunk, StreamPlan, fill_chunk  # noqa: F401
 from repro.stream.prefetch import ShardPrefetcher  # noqa: F401
 
@@ -20,4 +25,6 @@ __all__ = [
     "ShardPrefetcher",
     "stream_twoway",
     "stream_threeway",
+    "stream_twoway_batched",
+    "stream_threeway_batched",
 ]

@@ -39,7 +39,12 @@ from jax.sharding import PartitionSpec as P
 
 from repro.parallel.compat import shard_map
 
-from repro.core.metric_spec import CZEKANOWSKI, MetricSpec
+from repro.core.metric_spec import (
+    CZEKANOWSKI,
+    MetricSpec,
+    batch_lead,
+    group_families,
+)
 from repro.core.plan2 import TwoWayPlan
 from repro.core.plan3 import ItemKind, ThreeWayPlan
 from repro.core.threeway import ThreeWayOutput, _threeway_program
@@ -47,13 +52,20 @@ from repro.core.tile_executor import TileExecutor
 from repro.core.twoway import (
     CometConfig,
     TwoWayOutput,
+    _twoway_deferred_batched_program,
     _twoway_deferred_program,
+    batch_accounting,
     resolve_config,
 )
 from repro.stream.plan import StreamPlan, fill_chunk
 from repro.stream.prefetch import ShardPrefetcher
 
-__all__ = ["stream_twoway", "stream_threeway"]
+__all__ = [
+    "stream_twoway",
+    "stream_threeway",
+    "stream_twoway_batched",
+    "stream_threeway_batched",
+]
 
 
 def _as_sharded(dataset):
@@ -116,6 +128,28 @@ def _run_chunks(sh, splan: StreamPlan, jfn, accs, stat_acc):
     return sum(b.nbytes for b in buffers)
 
 
+def _merge_twoway_blocks(cfg, plan, executor, acc, stats) -> np.ndarray:
+    """Cross-shard merge epilogue for ONE metric: assemble every computed
+    block once from its complete fp32 numerator/stat partials.  ``acc`` is
+    (n_pv, n_pr, slots, m, m), ``stats`` (n_pv, m) — the single-metric
+    slices; batched campaigns call this once per metric over the shared
+    per-family accumulators."""
+    blocks = np.zeros(acc.shape, executor.out_dtype)
+    for p_v in range(cfg.n_pv):
+        for p_r in range(cfg.n_pr):
+            for d in plan.steps_of_pr(p_r):
+                if not plan.rank_computes(p_v, p_r, d):
+                    continue
+                row, col = plan.block_of(p_v, d)
+                blocks[p_v, p_r, d // cfg.n_pr] = np.asarray(
+                    executor.merge_pair(
+                        acc[p_v, p_r, d // cfg.n_pr],
+                        stats[row], stats[col], diagonal=(d == 0),
+                    )
+                )
+    return blocks
+
+
 def stream_twoway(
     dataset, mesh, cfg: CometConfig, metric: MetricSpec = None,
 ) -> tuple:
@@ -155,23 +189,58 @@ def stream_twoway(
         cfg=cfg, metric=metric, out_dtype=jnp.dtype(cfg.out_dtype),
         axis=None, deferred=True,
     )
-    blocks = np.zeros(acc.shape, jnp.dtype(cfg.out_dtype))
-    for p_v in range(cfg.n_pv):
-        for p_r in range(cfg.n_pr):
-            for d in plan.steps_of_pr(p_r):
-                if not plan.rank_computes(p_v, p_r, d):
-                    continue
-                row, col = plan.block_of(p_v, d)
-                blocks[p_v, p_r, d // cfg.n_pr] = np.asarray(
-                    executor.merge_pair(
-                        acc[p_v, p_r, d // cfg.n_pr],
-                        stats[row], stats[col], diagonal=(d == 0),
-                    )
-                )
+    blocks = _merge_twoway_blocks(cfg, plan, executor, acc, stats)
     out = TwoWayOutput(blocks=blocks, plan=plan, n_v=n_v, n_vp=n_vp)
     info = _stream_info(splan, cfg, sh.n_shards)
     info["staged_bytes"] = staged
     return out, info
+
+
+def _merge_threeway_blocks(
+    cfg, plan, stage, executor, needs, accs, stats, L, n_vp,
+) -> np.ndarray:
+    """Cross-shard 3-way merge epilogue for ONE metric (mask logic mirrors
+    ``ThreeWayOutput.entries()``).  ``accs`` is the single-metric 4-tuple
+    of slot-partial accumulators, ``stats`` the metric's (n_pv, m) stat
+    rows; batched campaigns call this once per metric over its family's
+    slices of the shared accumulators."""
+    B_acc, pl_acc, pr_acc, lr_acc = accs
+    blocks = np.zeros(B_acc.shape, executor.out_dtype)
+    li = np.arange(n_vp)
+    for p_v in range(cfg.n_pv):
+        for p_r in range(cfg.n_pr):
+            for slot, it in enumerate(plan.items_of(p_v, p_r)):
+                own, bj, bk = it.blocks(p_v, cfg.n_pv)
+                lo, _ = plan.sixth_bounds(n_vp, it.slice_idx, stage)
+                jg = lo + np.arange(L)
+                if it.kind == ItemKind.DIAG:
+                    pipe_b = left_b = right_b = own
+                    mask = (li[None, :, None] < jg[:, None, None]) & (
+                        li[None, None, :] > jg[:, None, None]
+                    )
+                elif it.kind == ItemKind.FACE:
+                    pipe_b, left_b, right_b = bj, own, bj
+                    mask = np.broadcast_to(
+                        li[None, None, :] > jg[:, None, None],
+                        (L, n_vp, n_vp),
+                    )
+                else:
+                    if it.slice_axis == 0:
+                        pipe_b, left_b, right_b = own, bj, bk
+                    elif it.slice_axis == 1:
+                        pipe_b, left_b, right_b = bj, own, bk
+                    else:
+                        pipe_b, left_b, right_b = bk, own, bj
+                    mask = np.ones((L, n_vp, n_vp), bool)
+                c3 = np.asarray(executor.merge_three(
+                    B_acc[p_v, p_r, slot],
+                    pl_acc[p_v, p_r, slot] if needs else None,
+                    pr_acc[p_v, p_r, slot] if needs else None,
+                    lr_acc[p_v, p_r, slot] if needs else None,
+                    stats[pipe_b][jg], stats[left_b], stats[right_b],
+                ))
+                blocks[p_v, p_r, slot] = np.where(mask, c3, 0)
+    return blocks
 
 
 def stream_threeway(
@@ -227,45 +296,150 @@ def stream_threeway(
     # -- cross-shard merge epilogue (mask logic mirrors entries()) ---------
     executor = TileExecutor(cfg=cfg, metric=metric, out_dtype=out_dtype,
                             axis=None, deferred=True)
-    needs = metric.needs_pair_terms
-    blocks = np.zeros(shape + (L, n_vp, n_vp), out_dtype)
-    li = np.arange(n_vp)
-    B_acc, pl_acc, pr_acc, lr_acc = accs
-    for p_v in range(cfg.n_pv):
-        for p_r in range(cfg.n_pr):
-            for slot, it in enumerate(plan.items_of(p_v, p_r)):
-                own, bj, bk = it.blocks(p_v, cfg.n_pv)
-                lo, _ = plan.sixth_bounds(n_vp, it.slice_idx, stage)
-                jg = lo + np.arange(L)
-                if it.kind == ItemKind.DIAG:
-                    pipe_b = left_b = right_b = own
-                    mask = (li[None, :, None] < jg[:, None, None]) & (
-                        li[None, None, :] > jg[:, None, None]
-                    )
-                elif it.kind == ItemKind.FACE:
-                    pipe_b, left_b, right_b = bj, own, bj
-                    mask = np.broadcast_to(
-                        li[None, None, :] > jg[:, None, None],
-                        (L, n_vp, n_vp),
-                    )
-                else:
-                    if it.slice_axis == 0:
-                        pipe_b, left_b, right_b = own, bj, bk
-                    elif it.slice_axis == 1:
-                        pipe_b, left_b, right_b = bj, own, bk
-                    else:
-                        pipe_b, left_b, right_b = bk, own, bj
-                    mask = np.ones((L, n_vp, n_vp), bool)
-                c3 = np.asarray(executor.merge_three(
-                    B_acc[p_v, p_r, slot],
-                    pl_acc[p_v, p_r, slot] if needs else None,
-                    pr_acc[p_v, p_r, slot] if needs else None,
-                    lr_acc[p_v, p_r, slot] if needs else None,
-                    stats[pipe_b][jg], stats[left_b], stats[right_b],
-                ))
-                blocks[p_v, p_r, slot] = np.where(mask, c3, 0)
+    blocks = _merge_threeway_blocks(
+        cfg, plan, stage, executor, metric.needs_pair_terms, accs, stats,
+        L, n_vp,
+    )
     out = ThreeWayOutput(blocks=blocks, plan=plan, n_v=n_v, n_vp=n_vp,
                          stage=stage)
     info = _stream_info(splan, cfg, sh.n_shards)
     info["staged_bytes"] = staged
     return out, info
+
+
+def stream_twoway_batched(dataset, mesh, cfg: CometConfig, specs) -> tuple:
+    """Streamed batched 2-way campaigns: one chunked ring traversal, one
+    ``TwoWayOutput`` per metric (request order), each bit-identical to its
+    sequential streamed/in-memory run.
+
+    The chunk program accumulates ONE raw numerator partial per metric
+    FAMILY (plus per-family stat partials); after the last chunk the merge
+    epilogue fans each family's accumulator out through every member's
+    assembly.  Returns ``(outputs, binfo, info)`` — the batched ring
+    accounting plus the usual streaming accounting.
+    """
+    specs = list(specs)
+    sh = _as_sharded(dataset)
+    cfg = resolve_config(cfg, sh, batch_lead(specs))
+    groups = group_families(specs)
+    flat = [s for grp in groups for s in grp]
+    gidx = {s.name: g for g, grp in enumerate(groups) for s in grp}
+    n_v = sh.n_v
+    n_vp = -(-n_v // cfg.n_pv)
+    plan = TwoWayPlan(cfg.n_pv, cfg.n_pr)
+    splan = StreamPlan.for_reader(
+        sh.reader, n_v=cfg.n_pv * n_vp, n_pf=cfg.n_pf,
+        max_host_bytes=cfg.max_host_bytes,
+    )
+
+    jfn = jax.jit(shard_map(
+        partial(_twoway_deferred_batched_program, cfg=cfg, plan=plan,
+                groups=groups),
+        mesh=mesh,
+        in_specs=P(None, "pf", "pv"),
+        out_specs=(P("pv", "pr", None, None, None, None),
+                   P("pv", None, None)),
+        check=False,
+    ))
+
+    G = len(groups)
+    acc = np.zeros(
+        (cfg.n_pv, cfg.n_pr, G, plan.slots_per_rank, n_vp, n_vp), np.float32
+    )
+    stats = np.zeros((cfg.n_pv, G, n_vp), np.float32)
+    staged = _run_chunks(sh, splan, jfn, [acc], stats)
+
+    by_name = {}
+    for s in flat:
+        g = gidx[s.name]
+        executor = TileExecutor(
+            cfg=cfg, metric=s, out_dtype=jnp.dtype(cfg.out_dtype),
+            axis=None, deferred=True,
+        )
+        blocks = _merge_twoway_blocks(
+            cfg, plan, executor, acc[:, :, g], stats[:, g]
+        )
+        by_name[s.name] = TwoWayOutput(
+            blocks=blocks, plan=plan, n_v=n_v, n_vp=n_vp
+        )
+    info = _stream_info(splan, cfg, sh.n_shards)
+    info["staged_bytes"] = staged
+    binfo = batch_accounting(
+        splan.chunk_nbytes * splan.n_chunks, cfg, plan, groups, n_vp,
+        planes=True, way=2,
+    )
+    return [by_name[s.name] for s in specs], binfo, info
+
+
+def stream_threeway_batched(
+    dataset, mesh, cfg: CometConfig, specs, stage: int = 0,
+) -> tuple:
+    """Streamed batched 3-way campaign stage; see ``stream_twoway_batched``.
+
+    Returns ``(outputs, binfo, info)`` with one ``ThreeWayOutput`` per
+    metric in request order.
+    """
+    specs = list(specs)
+    sh = _as_sharded(dataset)
+    cfg = resolve_config(cfg, sh, batch_lead(specs))
+    groups = group_families(specs)
+    flat = [s for grp in groups for s in grp]
+    gidx = {s.name: g for g, grp in enumerate(groups) for s in grp}
+    n_v = sh.n_v
+    unit = 6 * cfg.n_st
+    n_vp = -(-n_v // cfg.n_pv)
+    n_vp += (-n_vp) % unit
+    L = n_vp // unit
+    plan = ThreeWayPlan(cfg.n_pv, cfg.n_pr, cfg.n_st)
+    slots = plan.slots_per_rank
+    splan = StreamPlan.for_reader(
+        sh.reader, n_v=cfg.n_pv * n_vp, n_pf=cfg.n_pf,
+        max_host_bytes=cfg.max_host_bytes,
+    )
+
+    out_dtype = jnp.dtype(cfg.out_dtype)
+    jfn = jax.jit(shard_map(
+        partial(_threeway_program, cfg=cfg, plan=plan, stage=stage,
+                out_dtype=out_dtype, groups=groups, deferred=True),
+        mesh=mesh,
+        in_specs=P(None, "pf", "pv"),
+        out_specs=(
+            P("pv", "pr", None, None, None, None, None),  # 3-way numerators
+            P("pv", "pr", None, None, None, None),  # pipe x left
+            P("pv", "pr", None, None, None, None),  # pipe x right
+            P("pv", "pr", None, None, None, None),  # left x right
+            P("pv", None, None),  # per-family stat partials
+        ),
+        check=False,
+    ))
+
+    G = len(groups)
+    shape = (cfg.n_pv, cfg.n_pr, slots, G)
+    accs = [
+        np.zeros(shape + (L, n_vp, n_vp), np.float32),
+        np.zeros(shape + (L, n_vp), np.float32),
+        np.zeros(shape + (L, n_vp), np.float32),
+        np.zeros(shape + (n_vp, n_vp), np.float32),
+    ]
+    stats = np.zeros((cfg.n_pv, G, n_vp), np.float32)
+    staged = _run_chunks(sh, splan, jfn, accs, stats)
+
+    by_name = {}
+    for s in flat:
+        g = gidx[s.name]
+        executor = TileExecutor(cfg=cfg, metric=s, out_dtype=out_dtype,
+                                axis=None, deferred=True)
+        blocks = _merge_threeway_blocks(
+            cfg, plan, stage, executor, s.needs_pair_terms,
+            [a[:, :, :, g] for a in accs], stats[:, g], L, n_vp,
+        )
+        by_name[s.name] = ThreeWayOutput(
+            blocks=blocks, plan=plan, n_v=n_v, n_vp=n_vp, stage=stage
+        )
+    info = _stream_info(splan, cfg, sh.n_shards)
+    info["staged_bytes"] = staged
+    binfo = batch_accounting(
+        splan.chunk_nbytes * splan.n_chunks, cfg, plan, groups, n_vp,
+        planes=True, way=3,
+    )
+    return [by_name[s.name] for s in specs], binfo, info

@@ -1,0 +1,322 @@
+"""Batched multi-metric / multi-subset campaigns.
+
+Pins the batching acceptance contract (ISSUE / docs/ARCHITECTURE.md
+"Batched campaigns"):
+
+* every batched campaign result is BIT-IDENTICAL (checksum) to its
+  sequential single-campaign run — across every registered metric, every
+  mgemm impl (xla / levels / levels_xla / popcount), both ways, in-memory
+  and store-backed/streamed payloads;
+* ``meta["batch"]`` proves the ring payload bytes moved are a function of
+  payload shape and plan ONLY — independent of how many metrics/subsets
+  ride the traversal (the whole point of batching);
+* named-subset campaigns equal encode-of-subset: running the batch over a
+  subset view of the shared planes gives the same result as encoding the
+  subset columns from scratch (hypothesis property — slicing commutes
+  with encoding);
+* family grouping: czekanowski + sorenson share one numerator family,
+  ccc keeps its own; ``group_families`` drives one contraction per family;
+* the serving cache keys on campaign identity (metric names + subset
+  indices), so batched and differently-batched requests never collide.
+"""
+import numpy as np
+import pytest
+
+from repro.api import (
+    BatchedSimilarityResult,
+    SimilarityEngine,
+    SimilarityRequest,
+    batch_lead,
+    family_key,
+    get_metric,
+    group_families,
+    plane_native,
+)
+from repro.core.synthetic import random_integer_vectors
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+ALL_METRICS = ("czekanowski", "sorenson", "ccc")
+SUBSETS = (("caseA", (4, 1, 9, 13)), ("caseB", (0, 9, 2, 15, 5)))
+
+
+@pytest.fixture(scope="module")
+def engine():
+    return SimilarityEngine()
+
+
+@pytest.fixture(scope="module")
+def V():
+    # {0, 1, 2} SNP-like data: valid for every registered metric (sorenson
+    # shares czekanowski's arithmetic) and exercises the levels planes
+    return random_integer_vectors(40, 18, max_value=2, seed=3)
+
+
+@pytest.fixture(scope="module")
+def Vbin():
+    return random_integer_vectors(40, 18, max_value=1, seed=4)
+
+
+def _sequential(engine, V, metric, way, **kw):
+    return engine.run(SimilarityRequest(metric=metric, way=way, **kw), V)
+
+
+# ------------------------------------------------------------- family math --
+
+def test_family_grouping():
+    czek, sor, ccc = (get_metric(n) for n in ALL_METRICS)
+    assert family_key(czek) == family_key(sor) != family_key(ccc)
+    groups = group_families([czek, ccc, sor])
+    assert [[s.name for s in g] for g in groups] == [
+        ["czekanowski", "sorenson"], ["ccc"],
+    ]
+    assert plane_native(czek) and plane_native(sor)
+    assert not plane_native(ccc)
+    # the plane-native member leads config resolution even when not first
+    assert batch_lead([ccc, czek]).name == "czekanowski"
+    assert batch_lead([ccc]).name == "ccc"
+
+
+# ----------------------------------------------- batched == sequential -----
+
+@pytest.mark.parametrize("impl", ["xla", "levels", "levels_xla", "pallas"])
+def test_twoway_batched_matches_sequential(engine, V, impl):
+    req = SimilarityRequest(
+        metric="czekanowski", metrics=("sorenson", "ccc"), way=2, impl=impl,
+    )
+    br = engine.run(req, V)
+    assert isinstance(br, BatchedSimilarityResult) and len(br) == 3
+    for name in ALL_METRICS:
+        seq = _sequential(engine, V, name, 2)  # impl=xla reference
+        assert br.get(name).checksum() == seq.checksum(), name
+
+
+def test_twoway_batched_popcount_matches_sequential(engine, Vbin):
+    """levels=1 binary data routes the batch through the popcount bit-GEMM."""
+    req = SimilarityRequest(
+        metric="sorenson", metrics=("czekanowski", "ccc"), way=2,
+        impl="levels", levels=1,
+    )
+    br = engine.run(req, Vbin)
+    for name in ALL_METRICS:
+        seq = _sequential(engine, Vbin, name, 2)
+        assert br.get(name).checksum() == seq.checksum(), name
+
+
+@pytest.mark.parametrize("impl", ["xla", "levels"])
+def test_threeway_batched_matches_sequential(engine, V, impl):
+    req = SimilarityRequest(
+        metric="czekanowski", metrics=("sorenson", "ccc"), way=3, impl=impl,
+    )
+    br = engine.run(req, V)
+    for name in ALL_METRICS:
+        seq = _sequential(engine, V, name, 3)
+        assert br.get(name).checksum() == seq.checksum(), name
+
+
+def test_threeway_batched_staged_matches_sequential(engine, V):
+    req = SimilarityRequest(
+        metric="czekanowski", metrics=("ccc",), way=3, n_st=2, impl="levels",
+    )
+    br = engine.run(req, V)
+    for name in ("czekanowski", "ccc"):
+        seq = _sequential(engine, V, name, 3)  # n_st=1, all triples
+        assert br.get(name).checksum() == seq.checksum(), name
+
+
+# ---------------------------------------------------------- named subsets --
+
+@pytest.mark.parametrize("way", [2, 3])
+def test_subset_campaigns_match_sequential_slices(engine, V, way):
+    """Each (metric, subset) campaign == the sequential run over exactly
+    those columns — byte-slice plane views never re-encode, unsorted and
+    overlapping index lists included."""
+    req = SimilarityRequest(
+        metric="czekanowski", metrics=("ccc",), subsets=SUBSETS, way=way,
+        impl="levels",
+    )
+    br = engine.run(req, V)
+    assert br.meta["batch"]["campaigns"] == 4
+    for name in ("czekanowski", "ccc"):
+        for sname, idx in SUBSETS:
+            seq = _sequential(engine, V[:, list(idx)], name, way)
+            got = br.get(name, sname)
+            assert got.n_v == len(idx)
+            assert got.checksum() == seq.checksum(), (name, sname)
+
+
+def test_subset_result_dense_matches_slice(engine, V):
+    """Beyond checksums: the dense subset matrix equals the dense slice."""
+    idx = [7, 3, 11]
+    req = SimilarityRequest(metric="czekanowski", subsets=(("s", tuple(idx)),))
+    br = engine.run(req, V)
+    seq = _sequential(engine, V[:, idx], "czekanowski", 2)
+    np.testing.assert_array_equal(br.get("czekanowski", "s").dense(),
+                                  seq.dense())
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        data=st.data(),
+    )
+    def test_subset_equals_encode_of_subset(seed, data):
+        """Property: a subset campaign over the shared payload is bit-
+        identical to encoding the subset's columns from scratch — the
+        vector axis commutes with plane encoding and with the metric."""
+        n_v = data.draw(st.integers(4, 14), label="n_v")
+        k = data.draw(st.integers(2, n_v), label="k")
+        idx = tuple(data.draw(
+            st.permutations(range(n_v)), label="perm"
+        )[:k])
+        V = random_integer_vectors(24, n_v, max_value=2, seed=seed)
+        engine = SimilarityEngine()
+        br = engine.run(SimilarityRequest(
+            metric="czekanowski", subsets=(("s", idx),), impl="levels",
+        ), V)
+        seq = engine.run(
+            SimilarityRequest(metric="czekanowski", way=2),
+            V[:, list(idx)],
+        )
+        assert br.get("czekanowski", "s").checksum() == seq.checksum()
+
+
+# ----------------------------------------------------- ring-byte invariance --
+
+def test_ring_bytes_independent_of_campaign_count(engine, V):
+    """The tentpole's accounting claim: a batched campaign with M metrics
+    and S subsets moves the SAME ring payload bytes as a single campaign —
+    only the (negligible) per-family stat rows scale with the batch."""
+    base = dict(way=2, n_pv=1, impl="levels")
+    b1 = engine.run(SimilarityRequest(metric="czekanowski",
+                                      metrics=("sorenson",), **base), V)
+    b3 = engine.run(SimilarityRequest(metric="czekanowski",
+                                      metrics=("sorenson", "ccc"),
+                                      subsets=SUBSETS, **base), V)
+    m1, m3 = b1.meta["batch"], b3.meta["batch"]
+    assert m1["encodes"] == m3["encodes"] == 1
+    assert m1["traversals"] == m3["traversals"] == 1
+    # single-rank: nothing moves; the per-rank payload is the whole payload
+    assert m1["ring_payload_bytes"] == m3["ring_payload_bytes"] == 0
+    assert m3["campaigns"] == 6 and m1["campaigns"] == 2
+
+
+def test_ring_bytes_metric_count_invariant_multirank(V):
+    """Direct core check on a (1, 2, 1) mesh: ring bytes move and are
+    equal for 1 vs 3 metrics; stat ring bytes scale with FAMILIES."""
+    from repro.core.twoway import CometConfig, twoway_batched
+    from repro.parallel.mesh import make_comet_mesh
+
+    import jax
+
+    if len(jax.devices()) < 2:
+        pytest.skip("needs 2 devices")
+    mesh = make_comet_mesh(1, 2, 1)
+    cfg = CometConfig(n_pv=2, impl="levels")
+    specs1 = [get_metric("czekanowski")]
+    specs3 = [get_metric(n) for n in ALL_METRICS]
+    _, b1 = twoway_batched(V, mesh, cfg, specs1)
+    _, b3 = twoway_batched(V, mesh, cfg, specs3)
+    assert b1["ring_payload_bytes"] == b3["ring_payload_bytes"] > 0
+    assert b3["families"] == 2 and b1["families"] == 1
+    assert b3["stat_ring_bytes"] == 2 * b1["stat_ring_bytes"]
+
+
+# ------------------------------------------------------------- validation --
+
+def test_batched_request_validation():
+    with pytest.raises(ValueError, match="duplicate metric"):
+        SimilarityRequest(metric="czekanowski",
+                          metrics=("czekanowski",)).validate()
+    with pytest.raises(ValueError, match="duplicate indices"):
+        SimilarityRequest(subsets=(("a", (1, 1)),)).validate()
+    with pytest.raises(ValueError, match="empty"):
+        SimilarityRequest(subsets=(("a", ()),)).validate()
+    with pytest.raises(ValueError, match="duplicate subset name"):
+        SimilarityRequest(subsets=(("a", (1,)), ("a", (2,)))).validate()
+    with pytest.raises(ValueError, match="stage coverage"):
+        SimilarityRequest(way=3, n_st=2, stages=(0,),
+                          subsets=(("a", (1, 2)),)).validate()
+    # complete coverage is fine
+    SimilarityRequest(way=3, n_st=2, subsets=(("a", (1, 2)),)).validate()
+
+
+def test_subset_indices_out_of_range(engine, V):
+    with pytest.raises(ValueError, match="out of range"):
+        engine.run(SimilarityRequest(
+            metric="czekanowski", subsets=(("a", (0, 99)),)
+        ), V)
+
+
+# ------------------------------------------------------------- serve cache --
+
+def test_serve_cache_keys_on_campaign_identity(V):
+    from repro.serve.engine import SimilarityService
+
+    svc = SimilarityService()
+    r1 = SimilarityRequest(metric="czekanowski")
+    r2 = SimilarityRequest(metric="czekanowski", metrics=("sorenson",))
+    r3 = SimilarityRequest(metric="czekanowski",
+                           subsets=(("a", (0, 1, 2)),))
+    svc.submit(r1, V)
+    svc.submit(r2, V)
+    svc.submit(r3, V)
+    assert svc.stats()["misses"] == 3 and svc.stats()["hits"] == 0
+    # same campaigns spelled differently (list indices) hit the cache
+    svc.submit(SimilarityRequest(metric="czekanowski",
+                                 subsets=(("a", [0, 1, 2]),)), V)
+    assert svc.stats()["hits"] == 1
+
+
+# --------------------------------------------------- store-backed / stream --
+
+def test_store_backed_and_streamed_batched(engine, tmp_path):
+    """Batched over a packed dataset store — materialized AND streamed —
+    matches the sequential in-memory impl=xla reference per campaign."""
+    import os
+
+    from repro.api import InputSpec
+    from repro.store import write_dataset
+
+    V = random_integer_vectors(56, 20, max_value=2, seed=11)
+    path = os.path.join(str(tmp_path), "ds")
+    write_dataset(path, V, levels=2, n_shards=2)
+    inp = InputSpec(source="planes", path=path)
+    for streaming in ("off", "on"):
+        br = engine.run(SimilarityRequest(
+            metric="czekanowski", metrics=("sorenson", "ccc"),
+            subsets=SUBSETS, way=2, impl="levels",
+            streaming=streaming, input=inp,
+        ))
+        if streaming == "on":
+            assert "stream" in br.meta
+        for name in ALL_METRICS:
+            for sname, idx in SUBSETS:
+                seq = _sequential(engine, V[:, list(idx)], name, 2)
+                assert br.get(name, sname).checksum() == seq.checksum(), (
+                    streaming, name, sname,
+                )
+
+
+def test_streamed_threeway_batched(engine, tmp_path):
+    import os
+
+    from repro.api import InputSpec
+    from repro.store import write_dataset
+
+    V = random_integer_vectors(56, 18, max_value=2, seed=12)
+    path = os.path.join(str(tmp_path), "ds3")
+    write_dataset(path, V, levels=2, n_shards=2)
+    br = engine.run(SimilarityRequest(
+        metric="czekanowski", metrics=("ccc",), way=3, impl="levels",
+        streaming="on", input=InputSpec(source="planes", path=path),
+    ))
+    for name in ("czekanowski", "ccc"):
+        seq = _sequential(engine, V, name, 3)
+        assert br.get(name).checksum() == seq.checksum(), name
