@@ -121,6 +121,10 @@ class SimilarityEngine:
 
         spec = get_metric(request.metric)
         request.validate(n_devices=self._device_count(), metric_spec=spec)
+        if request.delta_from:
+            # load() verifies the prior's checksum before we merge into it
+            prior = SimilarityResult.load(request.delta_from)
+            return self.run_delta(request, prior, V)
         meta = {}
         if V is None:
             if request.input is None:
@@ -193,6 +197,128 @@ class SimilarityEngine:
             decomposition=(request.n_pf, request.n_pv, request.n_pr),
             n_st=request.n_st,
             stages=stages,
+            out_dtype=request.out_dtype,
+            seconds=seconds,
+            meta=meta,
+        )
+
+    # -- delta campaigns ----------------------------------------------------
+
+    def run_delta(self, request: SimilarityRequest, prior: SimilarityResult,
+                  V=None) -> SimilarityResult:
+        """Border-block delta campaign: given ``prior`` covering the input's
+        first ``prior.n_v`` vectors, compute ONLY the new-vs-all rectangle
+        and new-vs-new triangle (``repro.core.delta``) and merge into packed
+        upper-triangular storage — checksum bit-identical to a full
+        recompute, compute proportional to the border (``meta["delta"]``).
+
+        Lineage: when the input is an appended dataset store, its
+        manifest's ``parent.checksum`` must match the dataset checksum the
+        prior recorded (if it recorded one) — a delta against the wrong
+        ancestor raises instead of silently merging unrelated results.
+        The merged result round-trips ``save()/load()`` as a single-rank
+        packed result and is itself a valid prior for the next append
+        (deltas chain)."""
+        from repro.core.delta import merge_delta, twoway_delta
+        from repro.kernels.mgemm_levels.planes import PackedPlanes
+        from repro.store.reader import ShardedPlanes
+
+        spec = get_metric(request.metric)
+        request.validate(n_devices=self._device_count(), metric_spec=spec)
+        if request.way != 2 or request.is_batched:
+            raise ValueError("delta campaigns are 2-way, non-batched only")
+        if prior.way != 2:
+            raise ValueError(f"prior result is {prior.way}-way, need 2-way")
+        if prior.metric != request.metric:
+            raise ValueError(
+                f"prior result is metric {prior.metric!r}, request says "
+                f"{request.metric!r}"
+            )
+        if prior.out_dtype != request.out_dtype:
+            raise ValueError(
+                f"prior out_dtype {prior.out_dtype!r} != request "
+                f"{request.out_dtype!r} (merged storage is one array)"
+            )
+        meta = {}
+        if V is None:
+            if request.input is None:
+                raise ValueError("no input: pass V or set request.input")
+            if (request.input.source == "planes"
+                    and request.streaming != "off"):
+                from repro.store import DatasetReader
+
+                V = DatasetReader(request.input.path).sharded()
+            else:
+                V = request.input.materialize()
+        if isinstance(V, (PackedPlanes, ShardedPlanes)):
+            n_f, n_v = V.n_f, V.n_v
+            origin = dict(V.origin) if V.origin else {}
+        else:
+            V = np.asarray(V)
+            if V.ndim != 2:
+                raise ValueError(f"V must be (n_f, n_v), got shape {V.shape}")
+            n_f, n_v = V.shape
+            origin = {}
+        n_old = prior.n_v
+        m = n_v - n_old
+        if m < 1:
+            raise ValueError(
+                f"input has n_v={n_v} vectors, prior already covers "
+                f"{n_old} — nothing appended"
+            )
+        if prior.n_f != n_f:
+            raise ValueError(
+                f"prior covers n_f={prior.n_f} fields, input has {n_f} — "
+                "not the same cohort"
+            )
+        if origin:
+            meta["dataset"] = origin
+            prior_ck = prior.meta.get("dataset", {}).get("checksum")
+            parent = origin.get("parent")
+            if prior_ck and parent and parent["checksum"] != prior_ck:
+                raise ValueError(
+                    f"dataset lineage mismatch: manifest parent checksum "
+                    f"{parent['checksum']} != prior result's dataset "
+                    f"{prior_ck}"
+                )
+        mesh = self._mesh_for(request)
+        cfg = request.to_comet_config()
+
+        t0 = time.perf_counter()
+        dinfo = None
+        if isinstance(V, ShardedPlanes):
+            from repro.core.twoway import resolve_config
+
+            if resolve_config(cfg, V, spec).streaming == "on":
+                from repro.stream import stream_twoway_delta
+
+                rect, tri, rcfg, dinfo, sinfo = stream_twoway_delta(
+                    V, n_old, mesh, cfg, spec
+                )
+                meta["stream"] = sinfo
+            else:
+                V = V.materialize()
+        if dinfo is None:
+            rect, tri, rcfg, dinfo = twoway_delta(V, n_old, mesh, cfg, spec)
+        out = merge_delta(
+            prior.outputs[0], rect, tri, n_old, m, rcfg.out_dtype
+        )
+        seconds = time.perf_counter() - t0
+        dinfo["prior"] = {"n_v": n_old, "checksum": hex(prior.checksum())}
+        meta["delta"] = dinfo
+
+        # single-rank packed decomposition so save()/load() round-trips the
+        # merged storage; the border's requested decomposition is recorded
+        # in meta["delta"]["decomposition"]
+        return SimilarityResult(
+            way=2,
+            metric=request.metric,
+            n_v=n_v,
+            n_f=n_f,
+            outputs=[out],
+            decomposition=(1, 1, 1),
+            n_st=1,
+            stages=(0,),
             out_dtype=request.out_dtype,
             seconds=seconds,
             meta=meta,

@@ -147,6 +147,13 @@ class SimilarityRequest:
     #: becomes its own campaign over a plane byte-slice view; ``()`` runs
     #: the full vector set
     subsets: tuple = ()
+    #: path to a saved prior ``SimilarityResult`` covering the input's first
+    #: vectors: the engine then runs a border-block DELTA campaign — only
+    #: the new-vs-all rectangle and new-vs-new triangle are computed and
+    #: merged into the prior (``repro.core.delta``); checksum bit-identical
+    #: to a full recompute, ``meta["delta"]`` proves border-proportional
+    #: compute.  2-way, non-batched requests only.
+    delta_from: str = ""
 
     # -- derived -----------------------------------------------------------
 
@@ -244,6 +251,18 @@ class SimilarityRequest:
                 "streaming='on' needs a store-backed dataset input "
                 "(source='planes')"
             )
+        if self.delta_from:
+            if not isinstance(self.delta_from, str):
+                raise ValueError(
+                    f"delta_from must be a path string, got {self.delta_from!r}"
+                )
+            if self.way != 2:
+                raise ValueError("delta campaigns are 2-way only")
+            if self.is_batched:
+                raise ValueError(
+                    "delta campaigns cannot be batched (metrics/subsets): "
+                    "a prior result covers exactly one campaign"
+                )
         if self.stages is not None:
             if self.way == 2:
                 raise ValueError("stages apply to 3-way requests only")

@@ -371,6 +371,33 @@ class TwoWayOutput:
         return sum(len(I) for I, _, _ in self.entries())
 
 
+#: Compiled-program cache for the 2-way shard_map programs.  ``jax.jit``
+#: memoizes per function object, and the entry points used to build a fresh
+#: ``partial`` (hence a fresh jit cache) per campaign — every repeated
+#: request paid trace+compile again.  Keying the jitted callable on
+#: (mesh, cfg, plan geometry, metric name, flags) lets a hot serving
+#: process — and ``SimilarityService.warmup`` — reuse the compiled
+#: executable across requests; jit still retraces on a shape change.
+_PROGRAM_CACHE: "OrderedDict" = None
+
+
+def _cached_jit(key, build):
+    """Return (building if absent) the jitted program for ``key``."""
+    global _PROGRAM_CACHE
+    if _PROGRAM_CACHE is None:
+        from collections import OrderedDict
+
+        _PROGRAM_CACHE = OrderedDict()
+    fn = _PROGRAM_CACHE.get(key)
+    if fn is None:
+        fn = _PROGRAM_CACHE[key] = jax.jit(build())
+        while len(_PROGRAM_CACHE) > 128:
+            _PROGRAM_CACHE.popitem(last=False)
+    else:
+        _PROGRAM_CACHE.move_to_end(key)
+    return fn
+
+
 def _twoway_program(
     Vl, *, cfg: CometConfig, plan: TwoWayPlan, out_dtype,
     metric: MetricSpec = None, planes: bool = False,
@@ -514,15 +541,18 @@ def twoway_distributed(
     plan = TwoWayPlan(cfg.n_pv, cfg.n_pr)
     out_dtype = jnp.dtype(cfg.out_dtype)
 
-    fn = shard_map(
-        partial(_twoway_program, cfg=cfg, plan=plan, out_dtype=out_dtype,
-                metric=metric, planes=planes),
-        mesh=mesh,
-        in_specs=in_specs,
-        out_specs=P("pv", "pr", None, None, None),
-        check=False,
+    fn = _cached_jit(
+        ("twoway", mesh, cfg, plan, metric.name, str(out_dtype), planes),
+        lambda: shard_map(
+            partial(_twoway_program, cfg=cfg, plan=plan, out_dtype=out_dtype,
+                    metric=metric, planes=planes),
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=P("pv", "pr", None, None, None),
+            check=False,
+        ),
     )
-    blocks = jax.jit(fn)(arg)
+    blocks = fn(arg)
     blocks = np.asarray(blocks).reshape(
         cfg.n_pv, cfg.n_pr, plan.slots_per_rank, n_vp, n_vp
     )

@@ -6,6 +6,11 @@
         --max-value 2 --seed 0 --out ds/ --shards 4
     python -m repro.launch.dataset encode --bed cohort --missing drop --out ds/
 
+    # append: grow a dataset with new vectors (byte-column append — the
+    # existing payload is never re-encoded); omit --out to grow in place
+    python -m repro.launch.dataset append --to ds/ --input new.npy --out ds2/
+    python -m repro.launch.dataset append --to ds/ --synthetic --n-v 32 --seed 1
+
     # inspect: manifest + stats summary
     python -m repro.launch.dataset inspect ds/
 
@@ -67,6 +72,43 @@ def _cmd_encode(args) -> int:
     return 0
 
 
+def _cmd_append(args) -> int:
+    import numpy as np
+
+    from repro.store import append_dataset, read_manifest
+
+    if bool(args.input) == args.synthetic:
+        print("error: pick exactly one of --input / --synthetic",
+              file=sys.stderr)
+        return 2
+    if args.input:
+        from repro.core.validate import validate_matrix
+
+        V_new = validate_matrix(np.load(args.input), what=args.input,
+                                check_fp32_sums=True)
+    else:
+        from repro.core.synthetic import random_integer_vectors
+
+        parent = read_manifest(args.to)
+        # synthetic appends inherit the target's field count and draw
+        # within its encoded level range so the grown payload stays valid
+        V_new = random_integer_vectors(
+            parent["n_f"], args.n_v,
+            max_value=(args.max_value if args.max_value is not None
+                       else parent["levels"]),
+            seed=args.seed,
+        )
+    manifest = append_dataset(args.to, V_new, out=(args.out or None))
+    where = args.out or args.to
+    parent = manifest["parent"]
+    print(f"appended {V_new.shape[1]} vector(s): {where} now n_v="
+          f"{manifest['n_v']} (v{manifest['dataset_version']}, parent n_v="
+          f"{parent['n_v']})")
+    print(f"checksum={manifest['checksum']}")
+    print(f"parent_checksum={parent['checksum']}")
+    return 0
+
+
 def _cmd_inspect(args) -> int:
     from repro.kernels.mgemm_levels import planes_nbytes
     from repro.store import DatasetReader
@@ -121,6 +163,25 @@ def main(argv=None) -> int:
                      help="field shards on disk (= the n_pf byte ranges)")
     enc.add_argument("--out", required=True, help="dataset directory")
     enc.set_defaults(fn=_cmd_encode)
+
+    app = sub.add_parser("append",
+                         help="append vectors to a dataset (byte-column "
+                              "append; no re-encode of the existing payload)")
+    app.add_argument("--to", required=True, help="existing dataset directory")
+    app.add_argument("--input", default="",
+                     help=".npy (n_f, m) matrix of new vectors")
+    app.add_argument("--synthetic", action="store_true",
+                     help="draw new synthetic vectors matching the "
+                          "dataset's n_f and levels")
+    app.add_argument("--n-v", type=int, default=32,
+                     help="synthetic vector count to append")
+    app.add_argument("--max-value", type=int, default=None,
+                     help="synthetic value range (default: dataset levels)")
+    app.add_argument("--seed", type=int, default=1)
+    app.add_argument("--out", default="",
+                     help="write the grown dataset here (default: grow "
+                          "--to in place)")
+    app.set_defaults(fn=_cmd_append)
 
     ins = sub.add_parser("inspect", help="print manifest + stats summary")
     ins.add_argument("path")

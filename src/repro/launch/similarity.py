@@ -154,6 +154,17 @@ def main(argv=None):
                          "runs the host encoder")
     ap.add_argument("--max-value", type=int, default=15)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--append", default="",
+                    help=".npy (n_f, m) matrix appended to --dataset before "
+                         "the campaign (byte-column append — the existing "
+                         "payload is never re-encoded); grows the dataset "
+                         "in place")
+    ap.add_argument("--delta-from", default="",
+                    help="saved prior result directory covering the "
+                         "dataset's first vectors: run a border-block DELTA "
+                         "campaign — only the new-vs-all rectangle and "
+                         "new-vs-new triangle are computed and merged, "
+                         "checksum bit-identical to a full recompute")
     ap.add_argument("--out", default="")
     args = ap.parse_args(argv)
 
@@ -188,6 +199,24 @@ def main(argv=None):
         print("error: --input and --dataset are mutually exclusive",
               file=sys.stderr)
         return 2
+    if args.append:
+        if not args.dataset:
+            print("error: --append grows a --dataset store", file=sys.stderr)
+            return 2
+        import numpy as np
+
+        from repro.core.validate import validate_matrix
+        from repro.store import append_dataset
+
+        try:
+            V_new = validate_matrix(np.load(args.append), what=args.append,
+                                    check_fp32_sums=True)
+            manifest = append_dataset(args.dataset, V_new)
+        except ValueError as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 2
+        print(f"appended {V_new.shape[1]} vector(s): {args.dataset} now "
+              f"n_v={manifest['n_v']} (v{manifest['dataset_version']})")
     impl = args.impl or ("levels" if args.dataset else "xla")
     levels = args.levels
     if args.dataset:
@@ -222,7 +251,7 @@ def main(argv=None):
         out_dtype=args.out_dtype, ring_dtype=args.ring_dtype,
         encoding=args.encoding, chunk=args.chunk,
         streaming=args.streaming, max_host_bytes=args.max_host_bytes,
-        input=input_spec,
+        input=input_spec, delta_from=args.delta_from,
     )
     from repro.api import UnknownMetricError
 
@@ -308,6 +337,16 @@ def main(argv=None):
               f"chunk_bytes={stream['chunk_bytes']} "
               f"peak_host_bytes={stream['peak_host_bytes']} "
               f"n_shards={stream['n_shards']}")
+    delta = result.meta.get("delta")
+    if delta:
+        # border-proportional proof: computed_entries ~ m*n + m^2/2, not
+        # the full n^2/2 — the CI smoke step greps this line
+        print(f"delta n_old={delta['n_old']} n_new={delta['n_new']} "
+              f"border_entries={delta['border_entries']} "
+              f"computed_entries={delta['computed_entries']} "
+              f"full_entries={delta['full_entries']} "
+              f"ring_payload_bytes={delta['ring_payload_bytes']} "
+              f"streamed={delta['streamed']}")
     print(f"checksum={hex(checksum)}")
     if args.out:
         result.save(args.out)

@@ -17,8 +17,12 @@ Two request families share this module:
 from __future__ import annotations
 
 import hashlib
+import queue
+import threading
+import time
 from collections import OrderedDict
-from dataclasses import dataclass
+from concurrent.futures import Future
+from dataclasses import dataclass, replace
 
 import jax
 import jax.numpy as jnp
@@ -92,79 +96,267 @@ class ServeEngine:
         return jax.random.categorical(key, scaled)[:, None].astype(jnp.int32)
 
 
+def _payload_hash(V) -> str:
+    """sha256 over a dense payload's bytes (module-level so tests can stub
+    it to prove store-backed fingerprinting never reads the payload)."""
+    from repro.kernels.mgemm_levels.planes import PackedPlanes
+
+    h = hashlib.sha256()
+    if isinstance(V, PackedPlanes):
+        # pre-encoded payload without store provenance: key on the plane
+        # bytes + true n_f (np.ascontiguousarray on the dataclass would
+        # hash object pointers — unstable across materializations)
+        h.update(f"planes:{V.n_f}".encode())
+        V = V.planes
+    a = np.ascontiguousarray(V)
+    h.update(str(a.shape).encode())
+    h.update(str(a.dtype).encode())
+    h.update(a.tobytes())
+    return "payload:" + h.hexdigest()
+
+
+_STOP = object()
+
+
 class SimilarityService:
-    """Similarity campaigns behind a serving front-end.
+    """Similarity campaigns behind an async serving front-end.
 
     Every request is executed by ``repro.api.SimilarityEngine`` — the exact
     code path of the CLI and benchmarks — so serving never drifts from the
-    validated engines.  Results are LRU-cached by (request, input
-    fingerprint); the engine itself caches meshes per decomposition, so a
-    hot service reuses compiled programs across requests.
+    validated engines.  ``submit_async`` enqueues the campaign to a worker
+    thread pool and returns a ``concurrent.futures.Future``; ``submit`` is
+    the blocking wrapper.  Results are LRU-cached by (normalized request,
+    payload identity): duplicate submissions — cached OR still in flight —
+    share one compute and one result object.
+
+    Payload identity never touches payload bytes for store-backed inputs:
+    a ``source="planes"`` request (or a handle carrying store provenance)
+    is keyed by the manifest's dataset checksum + ``campaign_key()``, so
+    fingerprinting a terabyte mmap'd dataset costs one JSON read.  Raw
+    arrays fall back to hashing via ``_payload_hash``.
+
+    Delta awareness: when a store-backed 2-way request arrives for a
+    dataset whose manifest records a ``parent`` block, and the parent's
+    result is still cached under the same request identity, the service
+    schedules ONLY the border blocks (``SimilarityEngine.run_delta``) and
+    merges into the cached prior — bit-identical to the full recompute,
+    counted in ``delta_hits``.
+
+    ``warmup`` compiles a request's programs on an all-zeros payload of
+    identical geometry (manifest dims only for store inputs — no shard
+    read) without polluting the cache or counters; the compiled-program
+    cache in ``repro.core`` then serves the real submission.
     """
 
-    def __init__(self, max_cached_results: int = 16, devices=None):
+    def __init__(self, max_cached_results: int = 16, devices=None,
+                 workers: int = 1):
         from repro.api import SimilarityEngine
 
         self.engine = SimilarityEngine(devices=devices)
         self.max_cached_results = max_cached_results
         self._results = OrderedDict()
+        self._inflight = {}
+        self._lock = threading.Lock()
+        self._queue = queue.Queue()
+        self._closed = False
         self.hits = 0
         self.misses = 0
+        self.delta_hits = 0
+        self.warmups = 0
+        if not (isinstance(workers, int) and workers >= 1):
+            raise ValueError(f"workers must be a positive int, got {workers!r}")
+        self._threads = [
+            threading.Thread(
+                target=self._worker, name=f"similarity-worker-{i}", daemon=True
+            )
+            for i in range(workers)
+        ]
+        for t in self._threads:
+            t.start()
+
+    # -- identity ----------------------------------------------------------
 
     @staticmethod
-    def _fingerprint(request, V) -> tuple:
-        """(normalized request, campaign identity, payload hash).
+    def _request_key(request) -> tuple:
+        """Hashable campaign identity of the request itself.
 
         The campaign key — metric name(s) + subset (name, indices) pairs —
-        is part of the cache identity: two requests over the same payload
-        and decomposition that differ only in which campaigns they batch
-        are DIFFERENT answers.  Normalizing the ``subsets`` field first
-        (list indices, numpy ints) keeps equivalent requests hashable and
-        cache-equal regardless of how the caller spelled the indices."""
+        is part of the identity: two requests over the same payload and
+        decomposition that differ only in which campaigns they batch are
+        DIFFERENT answers.  ``subsets`` is normalized first so equivalent
+        spellings (list indices, numpy ints) are cache-equal.  ``input``
+        and ``delta_from`` are excluded — the payload is keyed separately
+        (below), which is what lets a parent dataset's cached result be
+        found when an appended child arrives."""
         if request.subsets:
-            from dataclasses import replace
-
             request = replace(request, subsets=request.campaign_subsets())
-        ckey = request.campaign_key()
-        if V is None:
-            return (request, ckey, None)
-        from repro.kernels.mgemm_levels.planes import PackedPlanes
+        request = replace(request, input=None, delta_from="")
+        return (request, request.campaign_key())
 
-        h = hashlib.sha256()
-        if isinstance(V, PackedPlanes):
-            # pre-encoded store input: key on the payload bytes + true n_f
-            # (np.ascontiguousarray on the dataclass would hash object
-            # pointers — unstable across materializations)
-            h.update(f"planes:{V.n_f}".encode())
-            V = V.planes
-        a = np.ascontiguousarray(V)
-        h.update(str(a.shape).encode())
-        h.update(str(a.dtype).encode())
-        h.update(a.tobytes())
-        return (request, ckey, h.hexdigest())
+    def _fingerprint(self, request, V) -> tuple:
+        """-> ((request key, payload key), V) — V materialized only when
+        payload bytes are genuinely needed for identity."""
+        rkey = self._request_key(request)
+        if V is None and request.input is not None:
+            if request.input.source == "planes":
+                from repro.store.format import read_manifest
+
+                # manifest-only read: V stays None so the engine opens the
+                # dataset itself (and can stream / record provenance)
+                ck = read_manifest(request.input.path)["checksum"]
+                return (rkey, ("dataset", ck)), None
+            V = request.input.materialize()
+        if V is None:
+            return (rkey, None), None
+        ck = (getattr(V, "origin", None) or {}).get("checksum")
+        if ck:
+            # store-provenance handle (PackedPlanes / ShardedPlanes): the
+            # dataset checksum IS the payload identity — no byte hashing
+            return (rkey, ("dataset", ck)), V
+        return (rkey, ("payload", _payload_hash(V))), V
+
+    # -- submission --------------------------------------------------------
+
+    def submit_async(self, request, V=None) -> Future:
+        """Enqueue one campaign; -> Future resolving to the result (a
+        ``SimilarityResult``, or ``BatchedSimilarityResult`` for batched
+        requests).  Duplicate submissions — cached or in flight — share one
+        compute; engine errors propagate through the future."""
+        key, V = self._fingerprint(request, V)
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("SimilarityService is shut down")
+            cached = self._results.get(key)
+            if cached is not None:
+                self.hits += 1
+                self._results.move_to_end(key)
+                fut = Future()
+                fut.set_result(cached)
+                return fut
+            fut = self._inflight.get(key)
+            if fut is not None:
+                self.hits += 1
+                return fut
+            self.misses += 1
+            fut = Future()
+            self._inflight[key] = fut
+        self._queue.put((key, request, V, fut))
+        return fut
 
     def submit(self, request, V=None):
-        """Run (or serve from cache) one campaign — a ``SimilarityResult``,
-        or a ``BatchedSimilarityResult`` for batched requests."""
+        """Blocking wrapper: run (or serve from cache) one campaign."""
+        return self.submit_async(request, V).result()
+
+    def _worker(self):
+        while True:
+            item = self._queue.get()
+            if item is _STOP:
+                break
+            key, request, V, fut = item
+            try:
+                result = self._execute(key, request, V)
+            except BaseException as e:
+                with self._lock:
+                    self._inflight.pop(key, None)
+                fut.set_exception(e)
+                continue
+            with self._lock:
+                self._results[key] = result
+                self._results.move_to_end(key)
+                while len(self._results) > self.max_cached_results:
+                    self._results.popitem(last=False)
+                self._inflight.pop(key, None)
+            fut.set_result(result)
+
+    def _execute(self, key, request, V):
+        rkey, pkey = key
+        if (
+            request.way == 2
+            and not request.is_batched
+            and not request.delta_from
+            and isinstance(pkey, tuple)
+            and pkey[0] == "dataset"
+        ):
+            prior = None
+            parent_ck = self._parent_checksum(request, V)
+            if parent_ck:
+                with self._lock:
+                    prior = self._results.get((rkey, ("dataset", parent_ck)))
+            if prior is not None:
+                self.delta_hits += 1
+                return self.engine.run_delta(request, prior, V)
+        return self.engine.run(request, V)
+
+    @staticmethod
+    def _parent_checksum(request, V):
+        parent = (getattr(V, "origin", None) or {}).get("parent")
+        if parent is None and request.input is not None \
+                and request.input.source == "planes":
+            from repro.store.format import read_manifest
+
+            parent = read_manifest(request.input.path).get("parent")
+        return parent["checksum"] if parent else None
+
+    # -- warmup ------------------------------------------------------------
+
+    def warmup(self, request, V=None) -> float:
+        """Compile the request's programs on an all-zeros payload of
+        identical geometry; -> seconds spent.  Nothing is cached and
+        hit/miss counters are untouched.  Store-backed requests build the
+        zeros payload from manifest dims alone (no shard read); zero
+        denominators are safe (``safe_denom``)."""
+        from repro.kernels.mgemm_levels.planes import PackedPlanes
+
+        request = replace(request, delta_from="")
         if V is None and request.input is not None:
-            # materialize BEFORE fingerprinting: a request-only key would go
-            # stale if the backing file (or generator defaults) changed
-            V = request.input.materialize()
-        key = self._fingerprint(request, V)
-        if key in self._results:
-            self.hits += 1
-            self._results.move_to_end(key)
-            return self._results[key]
-        self.misses += 1
-        result = self.engine.run(request, V)
-        self._results[key] = result
-        while len(self._results) > self.max_cached_results:
-            self._results.popitem(last=False)
-        return result
+            if request.input.source == "planes":
+                from repro.store.format import read_manifest
+
+                m = read_manifest(request.input.path)
+                V = PackedPlanes(
+                    np.zeros((m["levels"], m["kb"], m["n_v"]), np.uint8),
+                    n_f=m["n_f"],
+                )
+            else:
+                V = request.input.materialize()
+        if V is None:
+            raise ValueError("warmup needs a payload or request.input")
+        if isinstance(V, PackedPlanes):
+            V = PackedPlanes(np.zeros_like(V.planes), n_f=V.n_f)
+        else:
+            V = np.zeros_like(np.asarray(V))
+        t0 = time.perf_counter()
+        self.engine.run(replace(request, input=None, streaming="off"), V)
+        self.warmups += 1
+        return time.perf_counter() - t0
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def shutdown(self, wait: bool = True):
+        """Stop accepting submissions and stop the workers.  Campaigns
+        already queued still run (their futures resolve) — the stop
+        sentinels sit behind them in the queue."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+        for _ in self._threads:
+            self._queue.put(_STOP)
+        if wait:
+            for t in self._threads:
+                t.join()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.shutdown(wait=True)
+        return False
 
     def stats(self) -> dict:
-        return {
-            "hits": self.hits,
-            "misses": self.misses,
-            "cached_results": len(self._results),
-        }
+        with self._lock:
+            return {
+                "hits": self.hits,
+                "misses": self.misses,
+                "cached_results": len(self._results),
+            }

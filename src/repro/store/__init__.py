@@ -19,12 +19,17 @@ from repro.store.format import (  # noqa: F401
     read_manifest,
 )
 from repro.store.reader import DatasetReader, ShardedPlanes  # noqa: F401
-from repro.store.writer import validate_leveled, write_dataset  # noqa: F401
+from repro.store.writer import (  # noqa: F401
+    append_dataset,
+    validate_leveled,
+    write_dataset,
+)
 
 __all__ = [
     "DatasetReader",
     "ShardedPlanes",
     "write_dataset",
+    "append_dataset",
     "validate_leveled",
     "read_bed",
     "bed_paths",

@@ -26,6 +26,12 @@ Checksum rule: ``sha256`` over the raw C-order bytes of every shard array,
 shards concatenated in rank order (array bytes, NOT file bytes — the npy
 header is excluded so the rule survives npy-version bumps).  Stored as
 ``"sha256:<hex>"`` in the manifest; ``DatasetReader.validate`` recomputes it.
+
+Lineage (append): a dataset grown with ``append_dataset`` carries
+``dataset_version`` (parent's + 1) and a ``parent`` block —
+``{path, checksum, n_v, dataset_version}`` of the dataset it was appended
+onto — so delta campaigns can prove a prior result belongs to this
+dataset's ancestry before merging border blocks into it.
 """
 from __future__ import annotations
 
@@ -120,4 +126,23 @@ def read_manifest(path: str) -> dict:
         )
     if not isinstance(m.get("checksum"), str) or not m["checksum"].startswith("sha256:"):
         raise ValueError(f"{target}: checksum must be 'sha256:<hex>'")
+    dv = m.get("dataset_version", 1)
+    if not isinstance(dv, int) or dv < 1:
+        raise ValueError(
+            f"{target}: dataset_version must be a positive int, got {dv!r}"
+        )
+    parent = m.get("parent")
+    if parent is not None:
+        if not isinstance(parent, dict):
+            raise ValueError(f"{target}: parent must be a dict, got {parent!r}")
+        if (
+            not isinstance(parent.get("checksum"), str)
+            or not parent["checksum"].startswith("sha256:")
+        ):
+            raise ValueError(f"{target}: parent.checksum must be 'sha256:<hex>'")
+        pn = parent.get("n_v")
+        if not isinstance(pn, int) or not 1 <= pn < m["n_v"]:
+            raise ValueError(
+                f"{target}: parent.n_v must be an int in [1, n_v), got {pn!r}"
+            )
     return m

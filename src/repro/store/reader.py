@@ -119,13 +119,21 @@ class DatasetReader:
         return out
 
     def origin(self) -> dict:
-        """Provenance block result manifests record (path + exact bytes)."""
-        return {
+        """Provenance block result manifests record (path + exact bytes).
+
+        Appended datasets also carry ``dataset_version`` and the ``parent``
+        lineage block, so a result manifest proves which ancestor a delta
+        campaign's prior belongs to."""
+        o = {
             "path": self.path,
             "checksum": self.manifest["checksum"],
             "levels": self.levels,
             "source": self.manifest.get("source", {}),
+            "dataset_version": self.manifest.get("dataset_version", 1),
         }
+        if self.manifest.get("parent") is not None:
+            o["parent"] = self.manifest["parent"]
+        return o
 
     def sharded(self) -> "ShardedPlanes":
         """Lazy engine-facing handle: geometry + provenance, NO payload.

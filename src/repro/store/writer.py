@@ -30,7 +30,7 @@ from repro.store.format import (
     write_manifest,
 )
 
-__all__ = ["write_dataset", "validate_leveled", "POPCOUNT"]
+__all__ = ["write_dataset", "append_dataset", "validate_leveled", "POPCOUNT"]
 
 
 def validate_leveled(V: np.ndarray, levels: int, *, what: str = "input") -> None:
@@ -96,7 +96,85 @@ def write_dataset(
         "shard_files": files,
         "stats_file": STATS_NAME,
         "checksum": "sha256:" + h.hexdigest(),
+        "dataset_version": 1,
         "source": source or {"kind": "array"},
     }
     write_manifest(path, manifest)
+    return manifest
+
+
+def append_dataset(
+    path: str,
+    V_new: np.ndarray,
+    *,
+    out: str = None,
+) -> dict:
+    """Append ``V_new`` (n_f, m) as new vectors (byte-columns) to a dataset.
+
+    The wire layout packs bits along the FIELD axis, so vector columns are
+    independent: appending ``m`` vectors is, per shard, a concatenation of
+    ``m`` freshly-encoded byte-columns onto the last axis — byte-identical
+    to re-encoding ``concat([V_old, V_new], axis=1)`` from scratch with the
+    same shard count (property-tested in tests/test_delta.py).  The stats
+    sidecar grows by the new columns' popcounts; the manifest gets a fresh
+    checksum, ``dataset_version = parent + 1`` and a ``parent`` lineage
+    block naming the dataset it grew from (path / checksum / n_v) so delta
+    campaigns can verify ancestry.
+
+    ``out=None`` appends in place; ``out=<dir>`` writes the appended copy
+    there and leaves the parent untouched.  Returns the new manifest.
+    """
+    from repro.store.reader import DatasetReader
+
+    reader = DatasetReader(path)
+    parent = reader.manifest
+    V_new = np.asarray(V_new)
+    validate_leveled(V_new, parent["levels"], what="append_dataset")
+    if V_new.shape[0] != parent["n_f"]:
+        raise ValueError(
+            f"append_dataset: new vectors have n_f={V_new.shape[0]}, "
+            f"dataset has n_f={parent['n_f']}"
+        )
+    m = V_new.shape[1]
+    if m < 1:
+        raise ValueError("append_dataset: no vectors to append")
+    levels, n_shards = parent["levels"], parent["n_shards"]
+    kbs = parent["kb"] // n_shards
+    n_f, n_v = parent["n_f"], parent["n_v"] + m
+
+    target = path if out is None else out
+    os.makedirs(target, exist_ok=True)
+
+    new_stats = np.zeros((levels, m), np.int64)
+    h = hashlib.sha256()
+    files = []
+    for r in range(n_shards):
+        f0, f1 = 8 * r * kbs, min(8 * (r + 1) * kbs, n_f)
+        chunk = V_new[f0:f1] if f1 > f0 else V_new[:0]
+        P = encode_bitplanes_np(chunk, levels)  # (levels, <=kbs, m)
+        if P.shape[1] < kbs:  # tail shard: pad with inert zero bytes
+            P = np.pad(P, ((0, 0), (0, kbs - P.shape[1]), (0, 0)))
+        new_stats += POPCOUNT[P].sum(axis=1, dtype=np.int64)
+        grown = np.concatenate([reader.shard(r), P], axis=2)
+        fname = shard_name(r)
+        np.save(os.path.join(target, fname), grown)
+        h.update(np.ascontiguousarray(grown).tobytes())
+        files.append(fname)
+    stats = np.concatenate([reader.stats(), new_stats], axis=1)
+    np.save(os.path.join(target, STATS_NAME), stats)
+
+    manifest = dict(parent)
+    manifest.update(
+        n_v=int(n_v),
+        shard_files=files,
+        checksum="sha256:" + h.hexdigest(),
+        dataset_version=int(parent.get("dataset_version", 1)) + 1,
+        parent={
+            "path": path,
+            "checksum": parent["checksum"],
+            "n_v": int(parent["n_v"]),
+            "dataset_version": int(parent.get("dataset_version", 1)),
+        },
+    )
+    write_manifest(target, manifest)
     return manifest

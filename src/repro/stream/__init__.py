@@ -14,6 +14,7 @@ from repro.stream.pipeline import (  # noqa: F401
     stream_threeway_batched,
     stream_twoway,
     stream_twoway_batched,
+    stream_twoway_delta,
 )
 from repro.stream.plan import StreamChunk, StreamPlan, fill_chunk  # noqa: F401
 from repro.stream.prefetch import ShardPrefetcher  # noqa: F401
@@ -27,4 +28,5 @@ __all__ = [
     "stream_threeway",
     "stream_twoway_batched",
     "stream_threeway_batched",
+    "stream_twoway_delta",
 ]

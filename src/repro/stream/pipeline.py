@@ -65,6 +65,7 @@ __all__ = [
     "stream_threeway",
     "stream_twoway_batched",
     "stream_threeway_batched",
+    "stream_twoway_delta",
 ]
 
 
@@ -305,6 +306,114 @@ def stream_threeway(
     info = _stream_info(splan, cfg, sh.n_shards)
     info["staged_bytes"] = staged
     return out, info
+
+
+def stream_twoway_delta(
+    dataset, n_old: int, mesh, cfg: CometConfig, metric: MetricSpec = None,
+) -> tuple:
+    """Streamed border-block delta over a ``repro.store`` dataset whose
+    first ``n_old`` columns a prior result already covers (``core.delta``).
+
+    The chunk loop stages each byte chunk into a PAIR of staging buffers —
+    the sharded old columns and the replicated new columns — following the
+    overlap-staging idiom of the streamed full campaign: the prefetch
+    thread splits chunk ``s+1``'s columns while the device contracts chunk
+    ``s``.  Each chunk runs ``_twoway_delta_deferred_program`` (raw fp32
+    rectangle/triangle partials + stat partials, no ring), the host
+    accumulates, and the merge epilogue assembles once — bit-identical to
+    the in-memory border and therefore to a full recompute.
+
+    Returns ``(rect, tri, cfg, dinfo, sinfo)`` — the assembled border
+    blocks (merge with ``core.delta.merge_delta``), the resolved config,
+    the ``meta["delta"]`` accounting and the usual streaming accounting.
+    """
+    from repro.core.delta import _twoway_delta_deferred_program, delta_accounting
+
+    metric = metric or CZEKANOWSKI
+    sh = _as_sharded(dataset)
+    cfg = resolve_config(cfg, sh, metric)  # plane path or raises
+    n_v = sh.n_v
+    if not 1 <= n_old < n_v:
+        raise ValueError(f"n_old={n_old} must be in [1, n_v={n_v})")
+    m = n_v - n_old
+    R = cfg.n_pv * cfg.n_pr
+    n_op = -(-n_old // R)
+    n_op_total = n_op * R
+    splan = StreamPlan.for_reader(
+        sh.reader, n_v=n_op_total + m, n_pf=cfg.n_pf,
+        max_host_bytes=cfg.max_host_bytes,
+    )
+
+    jfn = jax.jit(shard_map(
+        partial(_twoway_delta_deferred_program, cfg=cfg, metric=metric),
+        mesh=mesh,
+        in_specs=(P(None, "pf", ("pv", "pr")), P(None, "pf", None)),
+        out_specs=(
+            P(("pv", "pr"), None),  # rectangle partial
+            P(("pv", "pr"), None, None),  # triangle partial (rank 0 only)
+            P(("pv", "pr")),  # old stat partial
+            P(("pv", "pr"), None),  # new stat partial (replicated)
+        ),
+        check=False,
+    ))
+
+    rect_acc = np.zeros((n_op_total, m), np.float32)
+    tri_acc = np.zeros((m, m), np.float32)
+    so_acc = np.zeros((n_op_total,), np.float32)
+    sn_acc = np.zeros((m,), np.float32)
+
+    chunks = splan.chunks()
+    buffers = [
+        (np.zeros((splan.levels, splan.chunk_kb, n_op_total), np.uint8),
+         np.zeros((splan.levels, splan.chunk_kb, m), np.uint8))
+        for _ in range(splan.n_buffers)
+    ]
+    shard_cache = {}
+
+    def shard_of(rank):
+        if rank not in shard_cache:
+            shard_cache[rank] = sh.reader.shard(rank)
+        return shard_cache[rank]
+
+    def fill(idx, bufs):
+        ob, nb = bufs
+        chunk = chunks[idx]
+        for rank, lo, hi, off in chunk.spans:
+            sv = shard_of(rank)
+            ob[:, off:off + (hi - lo), :n_old] = sv[:, lo:hi, :n_old]
+            nb[:, off:off + (hi - lo), :] = sv[:, lo:hi, n_old:]
+        used = chunk.nbytes_valid
+        if used < ob.shape[1]:
+            ob[:, used:, :] = 0
+            nb[:, used:, :] = 0
+
+    with ShardPrefetcher(fill, len(chunks), buffers) as pf:
+        for _idx, bufs in pf:
+            outs = jfn(jnp.asarray(bufs[0]), jnp.asarray(bufs[1]))
+            np.add(rect_acc, np.asarray(outs[0]).reshape(rect_acc.shape),
+                   out=rect_acc)
+            np.add(tri_acc, np.asarray(outs[1])[0], out=tri_acc)
+            np.add(so_acc, np.asarray(outs[2]).reshape(so_acc.shape),
+                   out=so_acc)
+            np.add(sn_acc, np.asarray(outs[3])[0], out=sn_acc)
+            pf.release(bufs)
+    staged = sum(b.nbytes for bufs in buffers for b in bufs)
+
+    executor = TileExecutor(
+        cfg=cfg, metric=metric, out_dtype=jnp.dtype(cfg.out_dtype),
+        axis=None, deferred=True,
+    )
+    rect = np.asarray(executor.merge_pair(rect_acc, so_acc, sn_acc))
+    tri = np.asarray(
+        executor.merge_pair(tri_acc, sn_acc, sn_acc, diagonal=True)
+    )
+    sinfo = _stream_info(splan, cfg, sh.n_shards)
+    sinfo["staged_bytes"] = staged
+    dinfo = delta_accounting(
+        cfg, n_old=n_old, n_new=m, n_op=n_op,
+        payload_bytes=splan.chunk_nbytes * splan.n_chunks, streamed=True,
+    )
+    return rect, tri, cfg, dinfo, sinfo
 
 
 def stream_twoway_batched(dataset, mesh, cfg: CometConfig, specs) -> tuple:

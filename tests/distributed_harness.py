@@ -404,6 +404,77 @@ def check_binary_popcount(Vb):
         print(f"  binary streamed chunks={info2['chunks']}: OK (2way+3way)")
 
 
+def check_delta(V):
+    """Border-block delta campaigns under multi-device meshes: for a split
+    n_old | n_new of V's columns, compute the prior on [0, n_old), run the
+    delta program (new-vs-all rectangle + new-vs-new triangle, NO ring)
+    across decompositions — including the n_pf=2 merge-epilogue case and a
+    streamed run — merge into the packed prior, and require checksums
+    BIT-IDENTICAL to the full recompute.  Accounting must report
+    border-proportional compute with zero ring payload bytes."""
+    import tempfile
+
+    from repro.core.delta import merge_delta, twoway_delta
+    from repro.store import DatasetReader, append_dataset, write_dataset
+    from repro.stream import stream_twoway_delta
+
+    n_old = 15
+    m = N_V - n_old
+    for impl, levels in [("xla", 15), ("levels", 15)]:
+        base = CometConfig(impl=impl, levels=levels)
+        want = czek2_distributed(V, make_comet_mesh(1, 1, 1), base).checksum()
+        prior = czek2_distributed(
+            V[:, :n_old], make_comet_mesh(1, 1, 1), base
+        ).pack()
+        for n_pf, n_pv, n_pr in [(1, 1, 1), (1, 2, 2), (2, 2, 1), (1, 4, 2),
+                                 (2, 2, 2)]:
+            cfg = CometConfig(n_pf=n_pf, n_pv=n_pv, n_pr=n_pr, impl=impl,
+                              levels=levels)
+            mesh = make_comet_mesh(n_pf, n_pv, n_pr)
+            rect, tri, rcfg, info = twoway_delta(V, n_old, mesh, cfg)
+            merged = merge_delta(prior, rect, tri, n_old, m, rcfg.out_dtype)
+            assert merged.checksum() == want, (
+                f"delta {impl} != full ({n_pf},{n_pv},{n_pr})"
+            )
+            assert info["ring_payload_bytes"] == 0, info
+            assert info["computed_entries"] < info["full_entries"], info
+            print(f"  delta {impl} pf={n_pf} pv={n_pv} pr={n_pr}: OK "
+                  f"({info['computed_entries']}/{info['full_entries']} "
+                  f"entries)")
+
+    # streamed delta over an APPENDED store dataset (byte-column append),
+    # multi-device + a budget forcing >1 chunk per shard, incl. the n_pf=2
+    # merge-epilogue case
+    base = CometConfig(impl="levels", levels=15)
+    want = czek2_distributed(V, make_comet_mesh(1, 1, 1), base).checksum()
+    prior = czek2_distributed(
+        V[:, :n_old], make_comet_mesh(1, 1, 1), base
+    ).pack()
+    with tempfile.TemporaryDirectory() as tmp:
+        write_dataset(tmp, V[:, :n_old], levels=15, n_shards=2)
+        append_dataset(tmp, V[:, n_old:])
+        sh = DatasetReader(tmp).sharded()
+        for n_pf, n_pv, n_pr, budget in [(1, 2, 1, 0), (2, 2, 1, 0),
+                                         (1, 2, 2, 800)]:
+            cfg = CometConfig(n_pf=n_pf, n_pv=n_pv, n_pr=n_pr, impl="levels",
+                              levels=15, streaming="on",
+                              max_host_bytes=budget)
+            mesh = make_comet_mesh(n_pf, n_pv, n_pr)
+            rect, tri, rcfg, dinfo, sinfo = stream_twoway_delta(
+                sh, n_old, mesh, cfg
+            )
+            merged = merge_delta(prior, rect, tri, n_old, m, rcfg.out_dtype)
+            assert merged.checksum() == want, (
+                f"streamed delta != full ({n_pf},{n_pv},{n_pr})"
+            )
+            assert dinfo["streamed"] and dinfo["ring_payload_bytes"] == 0
+            if budget:
+                assert sinfo["peak_host_bytes"] <= budget, sinfo
+                assert sinfo["chunks"] > sh.n_shards, sinfo
+            print(f"  streamed delta pf={n_pf} pv={n_pv} pr={n_pr} "
+                  f"chunks={sinfo['chunks']}: OK")
+
+
 def main():
     V = random_integer_vectors(N_F, N_V, max_value=15, seed=42)
     print("2-way decomposition invariance:")
@@ -419,6 +490,8 @@ def main():
     print("binary popcount campaigns (kernels/popgemm):")
     check_binary_popcount(random_integer_vectors(N_F, N_V, max_value=1,
                                                  seed=43))
+    print("border-block delta campaigns (repro.core.delta):")
+    check_delta(V)
     print("ALL DISTRIBUTED CHECKS PASSED")
 
 

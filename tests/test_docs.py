@@ -123,6 +123,43 @@ def test_store_spec_names_real_code():
     assert "--dataset" in readme
 
 
+def test_append_delta_docs_name_real_code():
+    """The "Append & delta" chapter (BITPLANE_FORMAT.md) and the serving /
+    delta sections (ARCHITECTURE.md) must name code that exists."""
+    from repro.api.engine import SimilarityEngine
+    from repro.core.delta import (  # noqa: F401
+        delta_accounting,
+        merge_delta,
+        packed_upper_index,
+        twoway_delta,
+    )
+    from repro.core.twoway import _cached_jit  # noqa: F401
+    from repro.serve.engine import SimilarityService, _payload_hash  # noqa: F401
+    from repro.store import append_dataset  # noqa: F401
+    from repro.stream import stream_twoway_delta  # noqa: F401
+
+    assert hasattr(SimilarityEngine, "run_delta")
+    for attr in ("submit_async", "submit", "warmup", "shutdown"):
+        assert hasattr(SimilarityService, attr), attr
+
+    with open(os.path.join(REPO, "docs", "BITPLANE_FORMAT.md")) as f:
+        spec = f.read()
+    for name in ("Append & delta", "append_dataset", "dataset_version",
+                 "parent", "merge_delta", "packed_upper_index",
+                 "ring_payload_bytes = 0"):
+        assert name in spec, f"BITPLANE_FORMAT.md lost its {name!r} mention"
+    with open(os.path.join(REPO, "docs", "ARCHITECTURE.md")) as f:
+        arch = f.read()
+    for name in ("Delta campaigns", "Serving layer", "SimilarityService",
+                 "submit_async", "run_delta", "delta_from", "warmup",
+                 "delta_hits", "stream_twoway_delta"):
+        assert name in arch, f"ARCHITECTURE.md lost its {name!r} mention"
+    with open(os.path.join(REPO, "README.md")) as f:
+        readme = f.read()
+    assert "--delta-from" in readme, "README lost the delta quickstart"
+    assert "append" in readme
+
+
 def test_architecture_path_matrix_matches_executor():
     """The fallback matrix documented in docs/ARCHITECTURE.md is the one
     the executor implements (spot-check the load-bearing rows)."""

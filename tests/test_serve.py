@@ -1,0 +1,253 @@
+"""SimilarityService: the async serving front-end's concurrency battery.
+
+Pins the serving contract (docs/ARCHITECTURE.md serving layer):
+
+* ``submit_async`` returns futures; N threads firing mixed duplicate /
+  unique requests get exactly ONE compute per fingerprint (duplicates —
+  cached or still in flight — share the result object) and every future
+  resolves;
+* an engine exception propagates through the future, the worker thread
+  survives it, and the failed fingerprint is retryable;
+* ``shutdown`` drains queued campaigns, then joins every worker — no
+  leaked threads, later submits are refused; the context manager form
+  shuts down on exit;
+* store-backed requests are fingerprinted by dataset checksum +
+  ``campaign_key()`` — NEVER by payload bytes: submitting a ~1 GiB-scale
+  sparse mmap'd dataset completes without reading a payload byte
+  (``_payload_hash`` stubbed to raise, shard files unreadable);
+* delta awareness: an appended dataset whose parent's result is cached
+  schedules only the border blocks (``delta_hits``), bit-identical to
+  the cold full recompute;
+* ``warmup`` compiles on a zeros payload from manifest dims alone without
+  touching the cache or hit/miss counters.
+"""
+import json
+import os
+import threading
+
+import numpy as np
+import pytest
+
+import repro.serve.engine as serve_engine
+from repro.api import InputSpec, SimilarityRequest
+from repro.core.synthetic import random_integer_vectors
+from repro.serve.engine import SimilarityService
+from repro.store import append_dataset, write_dataset
+from repro.store.format import shard_name
+
+
+def _matrix(n_f=24, n_v=10, seed=0):
+    return random_integer_vectors(n_f, n_v, max_value=2, seed=seed)
+
+
+# -- futures + exactly-one-compute -------------------------------------------
+
+
+def test_duplicate_submits_share_one_compute():
+    V = _matrix()
+    req = SimilarityRequest(way=2, metric="czekanowski")
+    with SimilarityService(workers=2) as svc:
+        futs = [svc.submit_async(req, V) for _ in range(10)]
+        results = [f.result(timeout=60) for f in futs]
+        assert all(r is results[0] for r in results)
+        assert svc.misses == 1 and svc.hits == 9
+        assert svc.stats()["cached_results"] == 1
+
+
+def test_threaded_mixed_requests_all_resolve():
+    """N client threads, mixed duplicate/unique requests: every future
+    resolves, each unique fingerprint computes exactly once."""
+    V = _matrix()
+    uniques = [
+        SimilarityRequest(way=2, metric="czekanowski", chunk=c)
+        for c in (32, 64, 96, 128)
+    ]
+    with SimilarityService(workers=3) as svc:
+        futures, lock = [], threading.Lock()
+
+        def client(i):
+            req = uniques[i % len(uniques)]
+            f = svc.submit_async(req, V)
+            with lock:
+                futures.append((i % len(uniques), f))
+
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(16)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        by_req = {}
+        for k, f in futures:
+            by_req.setdefault(k, set()).add(id(f.result(timeout=60)))
+        # each unique request resolved, to exactly one result object
+        assert len(by_req) == len(uniques)
+        assert all(len(ids) == 1 for ids in by_req.values())
+        assert svc.misses == len(uniques)
+        assert svc.hits == 16 - len(uniques)
+        # chunking is a perf knob: all four computed the same answer
+        cks = {f.result().checksum() for _, f in futures}
+        assert len(cks) == 1
+
+
+def test_sync_submit_compat():
+    """The blocking façade: second submit returns the SAME object and the
+    stats dict keeps its exact legacy shape."""
+    V = _matrix()
+    svc = SimilarityService()
+    try:
+        req = SimilarityRequest(way=2, metric="czekanowski")
+        r1 = svc.submit(req, V)
+        r2 = svc.submit(req, V)
+        assert r2 is r1
+        assert svc.stats() == {"hits": 1, "misses": 1, "cached_results": 1}
+    finally:
+        svc.shutdown()
+
+
+# -- error propagation + lifecycle -------------------------------------------
+
+
+def test_engine_error_propagates_and_worker_survives():
+    V = _matrix()
+    with SimilarityService() as svc:
+        bad = SimilarityRequest(way=2, metric="czekanowski", n_pv=1024)
+        f = svc.submit_async(bad, V)
+        with pytest.raises(ValueError, match="devices"):
+            f.result(timeout=60)
+        # the failed fingerprint did not get cached or stuck in flight
+        assert svc.stats()["cached_results"] == 0
+        f2 = svc.submit_async(bad, V)
+        with pytest.raises(ValueError, match="devices"):
+            f2.result(timeout=60)
+        # worker is alive and computes fresh requests
+        good = svc.submit(SimilarityRequest(way=2, metric="czekanowski"), V)
+        assert good.n_v == V.shape[1]
+
+
+def test_shutdown_joins_workers_and_refuses_submits():
+    V = _matrix()
+    svc = SimilarityService(workers=2)
+    req = SimilarityRequest(way=2, metric="czekanowski")
+    fut = svc.submit_async(req, V)
+    svc.shutdown()
+    # queued campaign drained before the workers exited
+    assert fut.result(timeout=5).n_v == V.shape[1]
+    assert not any(t.is_alive() for t in svc._threads)
+    with pytest.raises(RuntimeError, match="shut down"):
+        svc.submit_async(req, V)
+    svc.shutdown()  # idempotent
+
+
+def test_no_leaked_threads_after_exception():
+    V = _matrix()
+    svc = SimilarityService(workers=2)
+    for _ in range(3):
+        f = svc.submit_async(
+            SimilarityRequest(way=2, metric="czekanowski", n_pv=1024), V
+        )
+        with pytest.raises(ValueError):
+            f.result(timeout=60)
+    svc.shutdown()
+    assert not any(t.is_alive() for t in svc._threads)
+
+
+# -- store-backed fingerprinting: no payload read ----------------------------
+
+
+def test_store_fingerprint_never_hashes_payload(tmp_path, monkeypatch):
+    """Regression for the whole-payload-hashing fingerprint: store-backed
+    submissions must key on the manifest checksum.  ``_payload_hash`` is
+    stubbed to raise, so ANY payload hashing fails the test."""
+    path = os.path.join(str(tmp_path), "ds")
+    write_dataset(path, _matrix(seed=3), levels=2, n_shards=2)
+    monkeypatch.setattr(
+        serve_engine, "_payload_hash",
+        lambda V: (_ for _ in ()).throw(AssertionError("payload was hashed")),
+    )
+    req = SimilarityRequest(way=2, metric="czekanowski", impl="levels",
+                            levels=2, input=InputSpec(source="planes",
+                                                      path=path))
+    with SimilarityService() as svc:
+        r1 = svc.submit(req)
+        r2 = svc.submit(req)
+        assert r2 is r1
+        assert svc.hits == 1 and svc.misses == 1
+        assert r1.meta["dataset"]["checksum"].startswith("sha256:")
+
+
+def test_giant_mmap_dataset_fingerprint_reads_no_payload(tmp_path):
+    """Fingerprinting a ~1 GiB-scale dataset submit must complete from the
+    manifest alone: the shard file is a crafted sparse npy made unreadable
+    after writing — any payload open would raise."""
+    path = os.path.join(str(tmp_path), "big")
+    os.makedirs(path)
+    levels, kb, n_v = 2, 4096, 131072  # 2 * 4096 * 131072 = 1 GiB payload
+    shard = os.path.join(path, shard_name(0))
+    big = np.lib.format.open_memmap(
+        shard, mode="w+", dtype=np.uint8, shape=(levels, kb, n_v)
+    )
+    del big  # sparse file: headers + holes, no data blocks written
+    np.save(os.path.join(path, "stats.npy"),
+            np.zeros((levels, n_v), np.int64))
+    manifest = {
+        "format": "repro-bitplane-dataset", "format_version": 1,
+        "levels": levels, "n_f": 8 * kb, "n_v": n_v, "kb": kb,
+        "n_shards": 1, "shard_files": [shard_name(0)],
+        "stats_file": "stats.npy", "checksum": "sha256:" + "0" * 64,
+        "dataset_version": 1,
+    }
+    json.dump(manifest, open(os.path.join(path, "dataset.json"), "w"))
+    os.chmod(shard, 0)  # any payload read now raises PermissionError
+    try:
+        req = SimilarityRequest(way=2, metric="czekanowski", impl="levels",
+                                levels=2, input=InputSpec(source="planes",
+                                                          path=path))
+        with SimilarityService() as svc:
+            key, V = svc._fingerprint(req, None)
+            assert V is None  # nothing materialized
+            assert key[1] == ("dataset", manifest["checksum"])
+    finally:
+        os.chmod(shard, 0o600)
+
+
+# -- delta-aware serving + warmup --------------------------------------------
+
+
+def test_delta_aware_serving_matches_cold_recompute(tmp_path):
+    V0, Vn = _matrix(n_v=12, seed=4), _matrix(n_v=5, seed=5)
+    path = os.path.join(str(tmp_path), "ds")
+    write_dataset(path, V0, levels=2, n_shards=2)
+    base = dict(way=2, metric="czekanowski", impl="levels", levels=2)
+    with SimilarityService() as svc:
+        parent = svc.submit(SimilarityRequest(
+            **base, input=InputSpec(source="planes", path=path)))
+        append_dataset(path, Vn)
+        child = svc.submit(SimilarityRequest(
+            **base, input=InputSpec(source="planes", path=path)))
+        assert svc.delta_hits == 1
+        d = child.meta["delta"]
+        assert d["n_old"] == 12 and d["n_new"] == 5
+        assert d["computed_entries"] < d["full_entries"]
+        assert d["prior"]["checksum"] == hex(parent.checksum())
+    with SimilarityService() as cold:
+        full = cold.submit(SimilarityRequest(
+            **base, input=InputSpec(source="planes", path=path)))
+        assert cold.delta_hits == 0 and "delta" not in full.meta
+    assert child.checksum() == full.checksum()
+
+
+def test_warmup_compiles_without_caching(tmp_path):
+    path = os.path.join(str(tmp_path), "ds")
+    write_dataset(path, _matrix(seed=6), levels=2, n_shards=1)
+    req = SimilarityRequest(way=2, metric="czekanowski", impl="levels",
+                            levels=2, input=InputSpec(source="planes",
+                                                      path=path))
+    with SimilarityService() as svc:
+        dt = svc.warmup(req)
+        assert dt >= 0 and svc.warmups == 1
+        assert svc.stats() == {"hits": 0, "misses": 0, "cached_results": 0}
+        # the real submission still computes the real answer
+        r = svc.submit(req)
+        assert svc.stats() == {"hits": 0, "misses": 1, "cached_results": 1}
+        assert r.n_v == 10
