@@ -367,6 +367,30 @@ def batched_sweep(shape=BATCHED_SHAPE, max_value=2):
             "gib_per_s": bytes_moved / t / 2**30,
             "comparisons_per_s": pairs * k / t,
         })
+    # Attach the per-phase wall-time breakdown from ONE traced rerun to
+    # the batched entry (where did the traversal's time go: encode vs
+    # ring-step vs merge), so a phase-share regression is visible across
+    # committed BENCH_kernels.json revisions.  Best-effort: the timing
+    # entries above stand alone, and existing files without "obs" stay
+    # valid (benchmarks.run gates the schema).
+    try:
+        from repro.obs import trace as obs
+
+        obs.enable()
+        try:
+            result = run_batched()
+        finally:
+            tracer = obs.disable()
+        entries[-1]["obs"] = {
+            "phases": {
+                name: p["seconds"]
+                for name, p in sorted(tracer.phase_stats().items())
+                if name != "roofline"
+            },
+            "comparisons_per_s": result.meta["obs"]["comparisons_per_s"],
+        }
+    except Exception:
+        pass
     return entries
 
 

@@ -76,6 +76,19 @@ def validate_bench_kernels(path: str) -> None:
             if not isinstance(v, (int, float)) or not v > 0:
                 raise ValueError(f"{path}: entries[{i}].{key} must be a "
                                  f"positive number, got {v!r}")
+        obs = e.get("obs")
+        if obs is not None:  # optional per-phase breakdown (traced rerun)
+            if not isinstance(obs, dict) \
+                    or not isinstance(obs.get("phases"), dict):
+                raise ValueError(f"{path}: entries[{i}].obs must be a dict "
+                                 "with a 'phases' dict")
+            for pname, secs in obs["phases"].items():
+                if not isinstance(pname, str) \
+                        or not isinstance(secs, (int, float)) or secs < 0:
+                    raise ValueError(
+                        f"{path}: entries[{i}].obs.phases[{pname!r}] must "
+                        f"be a non-negative number, got {secs!r}"
+                    )
 
 
 def _parse_shapes(text: str):

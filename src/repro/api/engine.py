@@ -25,9 +25,66 @@ from repro.api.request import SimilarityRequest
 from repro.api.result import SimilarityResult
 from repro.core.threeway import threeway_distributed
 from repro.core.twoway import twoway_distributed
+from repro.obs import trace as obs
 from repro.parallel.mesh import COMET_AXES, make_comet_mesh
 
 __all__ = ["SimilarityEngine"]
+
+
+def _campaign_comparisons(result) -> int:
+    """Achieved element-comparison count — the paper's comparisons/s
+    numerator: result entries x vector length, summed over a batch's
+    campaigns.  Delta campaigns count only the border entries actually
+    computed (that is the work the engine did)."""
+    if hasattr(result, "campaigns"):  # BatchedSimilarityResult
+        return sum(
+            int(r.num_results()) * int(r.n_f)
+            for _m, _s, r in result.campaigns
+        )
+    d = result.meta.get("delta")
+    if d is not None:
+        return int(d["computed_entries"]) * int(result.n_f)
+    return int(result.num_results()) * int(result.n_f)
+
+
+def _obs_block(comparisons, seconds, tracer, i0) -> dict:
+    """The normalized ``meta["obs"]`` block every campaign result carries.
+
+    Always: achieved ``comparisons``, wall ``seconds``,
+    ``comparisons_per_s``.  When tracing was enabled for the run, also the
+    per-phase breakdown (from the span events recorded since index ``i0``)
+    and — when the core engines recorded roofline events — the summed
+    ``bound_seconds``, the binding ``bottleneck`` term, and
+    ``utilization`` = bound / measured device-phase seconds (1.0 means
+    running AT the cost-model bound)."""
+    block = {
+        "comparisons": int(comparisons),
+        "seconds": float(seconds),
+        "comparisons_per_s": float(comparisons) / max(float(seconds), 1e-12),
+    }
+    if tracer is None:
+        return block
+    events = tracer.events(i0)
+    phases = obs.aggregate_phases(events)
+    block["phases"] = {
+        n: {"count": int(p["count"]), "seconds": float(p["seconds"])}
+        for n, p in sorted(phases.items()) if n != "roofline"
+    }
+    bound, bottleneck = 0.0, None
+    for ph, name, _ts, _tid, args in events:
+        if ph == "E" and name == "roofline" and args:
+            bound += float(args.get("bound_seconds", 0.0))
+            bottleneck = args.get("bottleneck", bottleneck)
+    if bound > 0.0:
+        block["bound_seconds"] = bound
+        block["bottleneck"] = bottleneck
+        measured = sum(
+            p["seconds"] for n, p in phases.items()
+            if n in ("ring-step", "delta-border")
+        )
+        if measured > 0.0:
+            block["utilization"] = bound / measured
+    return block
 
 
 def _subset_positions(request, n_v: int, *, restrict: bool):
@@ -115,16 +172,33 @@ class SimilarityEngine:
         knob is "on" (multi-shard or budgeted datasets under "auto"), the
         campaign runs the out-of-core ``repro.stream`` pipeline: the
         payload never materializes in host memory beyond the double
-        buffers, and ``meta["stream"]`` records the chunk accounting."""
-        from repro.kernels.mgemm_levels.planes import PackedPlanes
-        from repro.store.reader import ShardedPlanes
+        buffers, and ``meta["stream"]`` records the chunk accounting.
 
-        spec = get_metric(request.metric)
-        request.validate(n_devices=self._device_count(), metric_spec=spec)
+        Every result's ``meta["obs"]`` records achieved comparisons/s;
+        under an enabled ``repro.obs`` tracer it adds the per-phase
+        breakdown and roofline utilization (docs/OBSERVABILITY.md)."""
         if request.delta_from:
             # load() verifies the prior's checksum before we merge into it
             prior = SimilarityResult.load(request.delta_from)
             return self.run_delta(request, prior, V)
+        tracer = obs.get_tracer()
+        i0 = tracer.event_count() if tracer is not None else 0
+        t0 = time.perf_counter()
+        with obs.span("campaign"):
+            result = self._run(request, V)
+        result.meta["obs"] = _obs_block(
+            _campaign_comparisons(result), time.perf_counter() - t0,
+            tracer, i0,
+        )
+        return result
+
+    def _run(self, request: SimilarityRequest, V=None) -> SimilarityResult:
+        from repro.kernels.mgemm_levels.planes import PackedPlanes
+        from repro.store.reader import ShardedPlanes
+
+        spec = get_metric(request.metric)
+        with obs.span("validate"):
+            request.validate(n_devices=self._device_count(), metric_spec=spec)
         meta = {}
         if V is None:
             if request.input is None:
@@ -219,12 +293,25 @@ class SimilarityEngine:
         The merged result round-trips ``save()/load()`` as a single-rank
         packed result and is itself a valid prior for the next append
         (deltas chain)."""
+        tracer = obs.get_tracer()
+        i0 = tracer.event_count() if tracer is not None else 0
+        t0 = time.perf_counter()
+        with obs.span("campaign"):
+            result = self._run_delta(request, prior, V)
+        result.meta["obs"] = _obs_block(
+            _campaign_comparisons(result), time.perf_counter() - t0,
+            tracer, i0,
+        )
+        return result
+
+    def _run_delta(self, request, prior, V=None) -> SimilarityResult:
         from repro.core.delta import merge_delta, twoway_delta
         from repro.kernels.mgemm_levels.planes import PackedPlanes
         from repro.store.reader import ShardedPlanes
 
         spec = get_metric(request.metric)
-        request.validate(n_devices=self._device_count(), metric_spec=spec)
+        with obs.span("validate"):
+            request.validate(n_devices=self._device_count(), metric_spec=spec)
         if request.way != 2 or request.is_batched:
             raise ValueError("delta campaigns are 2-way, non-batched only")
         if prior.way != 2:

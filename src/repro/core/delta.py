@@ -49,6 +49,7 @@ from repro.parallel.compat import shard_map
 from repro.core.metric_spec import CZEKANOWSKI, MetricSpec
 from repro.core.plan2 import TwoWayPlan
 from repro.core.tile_executor import TileExecutor
+from repro.obs import trace as obs
 from repro.core.twoway import (
     CometConfig,
     TwoWayOutput,
@@ -260,7 +261,11 @@ def twoway_delta(
             check=False,
         ),
     )
-    rect, tri = fn(*args)
+    with obs.span("delta-border") as sp:
+        rect, tri = obs.fence(fn(*args))
+        sp.add(n_old=int(n_old), n_new=int(m),
+               payload_bytes=sum(int(a.nbytes) for a in args))
+    obs.roofline_event(fn, args, int(mesh.devices.size))
     info = delta_accounting(
         cfg, n_old=n_old, n_new=m, n_op=n_op,
         payload_bytes=sum(int(a.nbytes) for a in args),
@@ -285,18 +290,20 @@ def merge_delta(
             f"prior covers n_v={prior.n_v} vectors, delta says n_old={n_old}"
         )
     N = n_old + n_new
-    flat = np.zeros((1, 1, N * (N - 1) // 2), np.dtype(out_dtype))
-    buf = flat[0, 0]
-    for I, J, vals in prior.entries():
-        lo, hi = np.minimum(I, J), np.maximum(I, J)
-        buf[packed_upper_index(lo, hi, N)] = vals
-    i = np.arange(n_old)[:, None]
-    j = n_old + np.arange(n_new)[None, :]
-    buf[packed_upper_index(i, j, N).ravel()] = (
-        rect[:n_old].astype(buf.dtype).ravel()
-    )
-    a, b = np.triu_indices(n_new, 1)
-    buf[packed_upper_index(n_old + a, n_old + b, N)] = tri[a, b]
+    with obs.span("merge") as sp:
+        flat = np.zeros((1, 1, N * (N - 1) // 2), np.dtype(out_dtype))
+        buf = flat[0, 0]
+        for I, J, vals in prior.entries():
+            lo, hi = np.minimum(I, J), np.maximum(I, J)
+            buf[packed_upper_index(lo, hi, N)] = vals
+        i = np.arange(n_old)[:, None]
+        j = n_old + np.arange(n_new)[None, :]
+        buf[packed_upper_index(i, j, N).ravel()] = (
+            rect[:n_old].astype(buf.dtype).ravel()
+        )
+        a, b = np.triu_indices(n_new, 1)
+        buf[packed_upper_index(n_old + a, n_old + b, N)] = tri[a, b]
+        sp.add(entries=int(buf.size), n_old=int(n_old), n_new=int(n_new))
     return TwoWayOutput(
         blocks=flat, plan=TwoWayPlan(1, 1), n_v=N, n_vp=N, storage="packed",
     )

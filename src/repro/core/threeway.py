@@ -62,6 +62,7 @@ from repro.core.metric_spec import (
 from repro.core.plan3 import ItemKind, ThreeWayPlan, PERMS
 from repro.core.tile_executor import TileExecutor
 from repro.core.twoway import CometConfig, batch_accounting
+from repro.obs import trace as obs
 
 __all__ = [
     "ThreeWayOutput",
@@ -518,9 +519,11 @@ def _prep_payload3(V, cfg: CometConfig, metric: MetricSpec):
         # evenly over "pf" (planes.py owns the rule); pad bits are inert
         from repro.kernels.mgemm_levels import encode_bitplanes_np
 
-        arg = jnp.asarray(
-            encode_bitplanes_np(Vp, cfg.levels, field_align=cfg.n_pf)
-        )
+        with obs.span("encode") as sp:
+            arg = jnp.asarray(
+                encode_bitplanes_np(Vp, cfg.levels, field_align=cfg.n_pf)
+            )
+            sp.add(bytes=int(arg.nbytes), levels=int(cfg.levels))
         in_specs = P(None, "pf", "pv")
     else:
         arg = jnp.asarray(Vp, dtype=jnp.dtype(cfg.ring_dtype))
@@ -550,7 +553,11 @@ def threeway_distributed(
         out_specs=P("pv", "pr", None, None, None, None),
         check=False,
     )
-    blocks = jax.jit(fn, static_argnames=())(arg)
+    jfn = jax.jit(fn, static_argnames=())
+    with obs.span("ring-step") as sp:
+        blocks = obs.fence(jfn(arg))
+        sp.add(stage=int(stage), payload_bytes=int(arg.nbytes))
+    obs.roofline_event(jfn, (arg,), int(mesh.devices.size))
     L = n_vp // (6 * cfg.n_st)
     blocks = np.asarray(blocks).reshape(
         cfg.n_pv, cfg.n_pr, plan.slots_per_rank, L, n_vp, n_vp
@@ -585,7 +592,13 @@ def threeway_batched(
         out_specs=P("pv", "pr", None, None, None, None, None),
         check=False,
     )
-    blocks = np.asarray(jax.jit(fn)(arg))
+    jfn = jax.jit(fn)
+    with obs.span("ring-step") as sp:
+        blocks = obs.fence(jfn(arg))
+        sp.add(stage=int(stage), payload_bytes=int(arg.nbytes),
+               metrics=len(flat))
+    obs.roofline_event(jfn, (arg,), int(mesh.devices.size))
+    blocks = np.asarray(blocks)
     L = n_vp // (6 * cfg.n_st)
     blocks = blocks.reshape(
         cfg.n_pv, cfg.n_pr, plan.slots_per_rank, len(flat), L, n_vp, n_vp

@@ -38,6 +38,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.parallel.compat import shard_map
 
 from repro.core import checksum as ck
+from repro.obs import trace as obs
 from repro.core.metric_spec import (
     CZEKANOWSKI,
     MetricSpec,
@@ -518,7 +519,9 @@ def _prep_payload(V, cfg: CometConfig, metric: MetricSpec):
         from repro.kernels.mgemm_levels import encode_bitplanes_np
 
         Vp = pad_vectors(V, cfg, field_align=8)
-        arg = jnp.asarray(encode_bitplanes_np(Vp, cfg.levels))
+        with obs.span("encode") as sp:
+            arg = jnp.asarray(encode_bitplanes_np(Vp, cfg.levels))
+            sp.add(bytes=int(arg.nbytes), levels=int(cfg.levels))
         in_specs = P(None, "pf", "pv")
     else:
         Vp = pad_vectors(V, cfg)
@@ -552,7 +555,10 @@ def twoway_distributed(
             check=False,
         ),
     )
-    blocks = fn(arg)
+    with obs.span("ring-step") as sp:
+        blocks = obs.fence(fn(arg))
+        sp.add(steps=int(plan.n_steps), payload_bytes=int(arg.nbytes))
+    obs.roofline_event(fn, (arg,), int(mesh.devices.size))
     blocks = np.asarray(blocks).reshape(
         cfg.n_pv, cfg.n_pr, plan.slots_per_rank, n_vp, n_vp
     )
@@ -697,7 +703,13 @@ def twoway_batched(
         out_specs=P("pv", "pr", None, None, None, None),
         check=False,
     )
-    blocks = np.asarray(jax.jit(fn)(arg)).reshape(
+    jfn = jax.jit(fn)
+    with obs.span("ring-step") as sp:
+        blocks = obs.fence(jfn(arg))
+        sp.add(steps=int(plan.n_steps), payload_bytes=int(arg.nbytes),
+               metrics=len(flat))
+    obs.roofline_event(jfn, (arg,), int(mesh.devices.size))
+    blocks = np.asarray(blocks).reshape(
         cfg.n_pv, cfg.n_pr, len(flat), plan.slots_per_rank, n_vp, n_vp
     )
     by_name = {

@@ -16,6 +16,10 @@ def main(argv=None):
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-json", default="", metavar="OUT.json",
+                    help="write the engine's metrics-registry snapshot "
+                         "(request/token counters, prefill and decode-step "
+                         "latency histograms) to OUT.json after the run")
     args = ap.parse_args(argv)
 
     import jax
@@ -43,6 +47,13 @@ def main(argv=None):
     print(f"generated {total} tokens in {dt:.2f}s = {total / dt:.1f} tok/s")
     for row in out[: min(4, len(out))]:
         print("  ", row.tolist())
+    if args.metrics_json:
+        import json
+
+        with open(args.metrics_json, "w") as f:
+            json.dump(eng.registry.snapshot(), f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"metrics={args.metrics_json}")
     return 0
 
 

@@ -81,6 +81,29 @@ def _report_batched(batched, request, args) -> int:
     return 0
 
 
+def _report_trace(tracer, result, args) -> None:
+    """--trace epilogue: write the Chrome trace file, print the per-phase
+    table (every canonical phase, count 0 when it never ran) and the
+    roofline-utilization line from ``meta["obs"]``."""
+    if tracer is None:
+        return
+    from repro.obs import trace as obs_trace
+
+    obs_trace.disable()
+    tracer.write_chrome_trace(args.trace)
+    print(obs_trace.format_phase_table(tracer.phase_stats()))
+    ob = result.meta.get("obs") or {}
+    line = (f"obs comparisons={ob.get('comparisons')} "
+            f"rate={ob.get('comparisons_per_s', 0.0):.3e} comparisons/s")
+    if "bound_seconds" in ob:
+        line += (f" bound_seconds={ob['bound_seconds']:.6f}"
+                 f" bottleneck={ob.get('bottleneck')}")
+    if "utilization" in ob:
+        line += f" utilization={ob['utilization']:.3e}"
+    print(line)
+    print(f"trace={args.trace} events={tracer.event_count()}")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--metric", default="czekanowski",
@@ -165,6 +188,12 @@ def main(argv=None):
                          "campaign — only the new-vs-all rectangle and "
                          "new-vs-new triangle are computed and merged, "
                          "checksum bit-identical to a full recompute")
+    ap.add_argument("--trace", default="", metavar="OUT.json",
+                    help="record per-phase spans (repro.obs) during the "
+                         "campaign, write Chrome/Perfetto trace-event JSON "
+                         "to OUT.json, and print the phase table plus "
+                         "roofline utilization after the run; checksums are "
+                         "unchanged (tracing only adds timing fences)")
     ap.add_argument("--out", default="")
     args = ap.parse_args(argv)
 
@@ -313,6 +342,11 @@ def main(argv=None):
               f"max_host_bytes={cfg.max_host_bytes}")
         return 0
 
+    tracer = None
+    if args.trace:
+        from repro.obs import trace as obs_trace
+
+        tracer = obs_trace.enable()
     try:
         result = SimilarityEngine().run(request)
     except (UnknownMetricError, ValueError) as e:
@@ -320,7 +354,9 @@ def main(argv=None):
         return 2
 
     if request.is_batched:
-        return _report_batched(result, request, args)
+        rc = _report_batched(result, request, args)
+        _report_trace(tracer, result, args)
+        return rc
 
     n_results = result.num_results()
     comparisons = n_results * result.n_f
@@ -348,6 +384,7 @@ def main(argv=None):
               f"ring_payload_bytes={delta['ring_payload_bytes']} "
               f"streamed={delta['streamed']}")
     print(f"checksum={hex(checksum)}")
+    _report_trace(tracer, result, args)
     if args.out:
         result.save(args.out)
     return 0

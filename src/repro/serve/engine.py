@@ -16,6 +16,7 @@ Two request families share this module:
 """
 from __future__ import annotations
 
+import contextvars
 import hashlib
 import queue
 import threading
@@ -30,7 +31,15 @@ import numpy as np
 
 from repro.models import api
 from repro.models.common import ModelConfig
+from repro.obs import trace as obs
+from repro.obs.metrics import MetricsRegistry
 from repro.parallel.sharding import use_mesh
+
+#: Virtual Chrome-trace lane for queue-wait intervals: a wait often
+#: overlaps the worker thread's own spans (it began while the previous
+#: request was still computing), so it gets its own tid to keep per-lane
+#: B/E nesting well-formed.
+_QUEUE_LANE_TID = 0
 
 
 @dataclass
@@ -43,11 +52,12 @@ class ServeConfig:
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig | None = None,
-                 mesh=None):
+                 mesh=None, registry: MetricsRegistry | None = None):
         self.cfg = cfg
         self.params = params
         self.scfg = scfg or ServeConfig()
         self.mesh = mesh
+        self.registry = registry if registry is not None else MetricsRegistry()
         self._decode = jax.jit(
             lambda p, c, t, i: api.decode_step(cfg, p, c, t, i)
         )
@@ -70,23 +80,43 @@ class ServeEngine:
         return logits, cache, P
 
     def generate(self, prompts: np.ndarray) -> np.ndarray:
-        """prompts (B, P) int32 -> (B, max_new_tokens) int32."""
+        """prompts (B, P) int32 -> (B, max_new_tokens) int32.
+
+        Records per-request metrics in ``self.registry``: ``requests`` /
+        ``tokens_generated`` counters and ``prefill_seconds`` /
+        ``decode_step_seconds`` latency histograms (``serve
+        --metrics-json`` dumps the snapshot)."""
         scfg = self.scfg
+        reg = self.registry
         with use_mesh(self.mesh):
+            t0 = time.perf_counter()
             logits, cache, pos = self._prefill(jnp.asarray(prompts))
             B = prompts.shape[0]
             out = np.zeros((B, scfg.max_new_tokens), np.int32)
             done = np.zeros((B,), bool)
             key = jax.random.PRNGKey(scfg.seed)
             tok = self._sample(logits, key)
+            reg.histogram("prefill_seconds").observe(time.perf_counter() - t0)
+            steps = 0
             for t in range(scfg.max_new_tokens):
+                ts = time.perf_counter()
                 out[:, t] = np.where(done, 0, np.asarray(tok[:, 0]))
                 done |= np.asarray(tok[:, 0]) == scfg.eos_id
+                steps += 1
                 if done.all():
+                    reg.histogram("decode_step_seconds").observe(
+                        time.perf_counter() - ts
+                    )
                     break
                 logits, cache = self._decode(self.params, cache, tok, pos + t)
                 key, sub = jax.random.split(key)
                 tok = self._sample(logits, sub)
+                reg.histogram("decode_step_seconds").observe(
+                    time.perf_counter() - ts
+                )
+        with reg.locked():
+            reg.counter("requests").inc()
+            reg.counter("tokens_generated").inc(B * steps)
         return out
 
     def _sample(self, logits, key):
@@ -144,8 +174,21 @@ class SimilarityService:
 
     ``warmup`` compiles a request's programs on an all-zeros payload of
     identical geometry (manifest dims only for store inputs — no shard
-    read) without polluting the cache or counters; the compiled-program
-    cache in ``repro.core`` then serves the real submission.
+    read) without polluting the cache or hit/miss counters; the
+    compiled-program cache in ``repro.core`` then serves the real
+    submission.
+
+    Counters live in a private ``repro.obs`` ``MetricsRegistry`` and
+    update atomically per transition, so ``stats()``/``metrics()``
+    snapshots taken at ANY instant satisfy
+
+        hits + misses + in_flight == submitted
+
+    (``submitted``/``hits`` count at submission; a fresh request sits in
+    ``in_flight`` until its worker finishes, and only then becomes a
+    ``miss`` — success or error alike, errors also counted in
+    ``errors``).  ``metrics()`` adds queue depth and the wait-vs-compute
+    latency split.
     """
 
     def __init__(self, max_cached_results: int = 16, devices=None,
@@ -159,10 +202,17 @@ class SimilarityService:
         self._lock = threading.Lock()
         self._queue = queue.Queue()
         self._closed = False
-        self.hits = 0
-        self.misses = 0
-        self.delta_hits = 0
-        self.warmups = 0
+        self.registry = MetricsRegistry()
+        self._c_submitted = self.registry.counter("submitted")
+        self._c_hits = self.registry.counter("hits")
+        self._c_misses = self.registry.counter("misses")
+        self._c_delta_hits = self.registry.counter("delta_hits")
+        self._c_warmups = self.registry.counter("warmups")
+        self._c_errors = self.registry.counter("errors")
+        self._g_in_flight = self.registry.gauge("in_flight")
+        self._g_queue_depth = self.registry.gauge("queue_depth")
+        self._h_wait = self.registry.histogram("queue_wait_seconds")
+        self._h_compute = self.registry.histogram("compute_seconds")
         if not (isinstance(workers, int) and workers >= 1):
             raise ValueError(f"workers must be a positive int, got {workers!r}")
         self._threads = [
@@ -173,6 +223,24 @@ class SimilarityService:
         ]
         for t in self._threads:
             t.start()
+
+    # Counter attributes kept as read-only views onto the registry, so
+    # existing callers (`svc.hits` etc.) keep working.
+    @property
+    def hits(self) -> int:
+        return self._c_hits.value
+
+    @property
+    def misses(self) -> int:
+        return self._c_misses.value
+
+    @property
+    def delta_hits(self) -> int:
+        return self._c_delta_hits.value
+
+    @property
+    def warmups(self) -> int:
+        return self._c_warmups.value
 
     # -- identity ----------------------------------------------------------
 
@@ -228,19 +296,29 @@ class SimilarityService:
                 raise RuntimeError("SimilarityService is shut down")
             cached = self._results.get(key)
             if cached is not None:
-                self.hits += 1
+                with self.registry.locked():
+                    self._c_submitted.inc()
+                    self._c_hits.inc()
                 self._results.move_to_end(key)
                 fut = Future()
                 fut.set_result(cached)
                 return fut
             fut = self._inflight.get(key)
             if fut is not None:
-                self.hits += 1
+                with self.registry.locked():
+                    self._c_submitted.inc()
+                    self._c_hits.inc()
                 return fut
-            self.misses += 1
             fut = Future()
             self._inflight[key] = fut
-        self._queue.put((key, request, V, fut))
+            with self.registry.locked():
+                self._c_submitted.inc()
+                self._g_in_flight.inc()
+                self._g_queue_depth.inc()
+        # Carry the submitter's open-span stack to the worker (tracing
+        # only) so the campaign's serve-compute span nests under it.
+        ctx = contextvars.copy_context() if obs.enabled() else None
+        self._queue.put((key, request, V, fut, time.perf_counter(), ctx))
         return fut
 
     def submit(self, request, V=None):
@@ -252,12 +330,33 @@ class SimilarityService:
             item = self._queue.get()
             if item is _STOP:
                 break
-            key, request, V, fut = item
+            key, request, V, fut, t_enq, ctx = item
+            t_start = time.perf_counter()
+            wait = t_start - t_enq
+            self._g_queue_depth.dec()
+            self._h_wait.observe(wait)
+            tracer = obs.get_tracer()
+            if tracer is not None:
+                # perf_counter and perf_counter_ns share a clock base, so
+                # the enqueue timestamp converts directly
+                now = tracer._clock()
+                tracer.complete(
+                    "serve-queue-wait", now - int(wait * 1e9), now,
+                    {"wait_seconds": wait}, tid=_QUEUE_LANE_TID,
+                )
             try:
-                result = self._execute(key, request, V)
+                if ctx is not None:
+                    result = ctx.run(self._traced_execute, key, request, V)
+                else:
+                    result = self._traced_execute(key, request, V)
             except BaseException as e:
                 with self._lock:
                     self._inflight.pop(key, None)
+                    with self.registry.locked():
+                        self._g_in_flight.dec()
+                        self._c_misses.inc()
+                        self._c_errors.inc()
+                self._h_compute.observe(time.perf_counter() - t_start)
                 fut.set_exception(e)
                 continue
             with self._lock:
@@ -266,7 +365,15 @@ class SimilarityService:
                 while len(self._results) > self.max_cached_results:
                     self._results.popitem(last=False)
                 self._inflight.pop(key, None)
+                with self.registry.locked():
+                    self._g_in_flight.dec()
+                    self._c_misses.inc()
+            self._h_compute.observe(time.perf_counter() - t_start)
             fut.set_result(result)
+
+    def _traced_execute(self, key, request, V):
+        with obs.span("serve-compute"):
+            return self._execute(key, request, V)
 
     def _execute(self, key, request, V):
         rkey, pkey = key
@@ -283,7 +390,7 @@ class SimilarityService:
                 with self._lock:
                     prior = self._results.get((rkey, ("dataset", parent_ck)))
             if prior is not None:
-                self.delta_hits += 1
+                self._c_delta_hits.inc()
                 return self.engine.run_delta(request, prior, V)
         return self.engine.run(request, V)
 
@@ -327,7 +434,7 @@ class SimilarityService:
             V = np.zeros_like(np.asarray(V))
         t0 = time.perf_counter()
         self.engine.run(replace(request, input=None, streaming="off"), V)
-        self.warmups += 1
+        self._c_warmups.inc()
         return time.perf_counter() - t0
 
     # -- lifecycle ---------------------------------------------------------
@@ -354,9 +461,28 @@ class SimilarityService:
         return False
 
     def stats(self) -> dict:
-        with self._lock:
+        """One consistent counter snapshot (every value read under the
+        same locks, so ``hits + misses + in_flight == submitted`` holds in
+        any snapshot, even mid-flight)."""
+        with self._lock, self.registry.locked():
             return {
-                "hits": self.hits,
-                "misses": self.misses,
+                "hits": self._c_hits.snapshot(),
+                "misses": self._c_misses.snapshot(),
                 "cached_results": len(self._results),
+                "delta_hits": self._c_delta_hits.snapshot(),
+                "in_flight": int(self._g_in_flight.snapshot()),
+                "submitted": self._c_submitted.snapshot(),
+                "warmups": self._c_warmups.snapshot(),
+                "errors": self._c_errors.snapshot(),
             }
+
+    def metrics(self) -> dict:
+        """Full registry snapshot — ``stats()``'s counters plus queue
+        depth and the wait-vs-compute latency histograms — taken under one
+        lock."""
+        with self._lock, self.registry.locked():
+            snap = self.registry.snapshot()
+            snap["in_flight"] = int(snap["in_flight"])
+            snap["queue_depth"] = int(snap["queue_depth"])
+            snap["cached_results"] = len(self._results)
+            return snap

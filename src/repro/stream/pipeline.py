@@ -30,6 +30,7 @@ buffers, bounded by ``max_host_bytes`` — never the dataset size.
 """
 from __future__ import annotations
 
+import time
 from functools import partial
 
 import jax
@@ -37,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.obs import trace as obs
 from repro.parallel.compat import shard_map
 
 from repro.core.metric_spec import (
@@ -93,14 +95,17 @@ def _stream_info(splan: StreamPlan, cfg: CometConfig, n_shards: int) -> dict:
     }
 
 
-def _run_chunks(sh, splan: StreamPlan, jfn, accs, stat_acc):
+def _run_chunks(sh, splan: StreamPlan, jfn, accs, stat_acc, n_devices=1):
     """Drive the prefetch/compute loop: stage each chunk, run the deferred
     program, fold the fp32 partials into the host accumulators.
 
     ``accs`` is a list of numpy accumulator arrays matching the program's
     leading outputs; the last program output is always the stat partial,
-    folded into ``stat_acc``.  Returns measured peak staged bytes (the
-    buffers actually allocated — the number ``max_host_bytes`` bounds).
+    folded into ``stat_acc``.  Returns ``(staged_bytes, overlap)`` —
+    measured peak staged bytes (the buffers actually allocated, the
+    number ``max_host_bytes`` bounds) and the staging-vs-compute overlap
+    accounting (``stage_seconds``, ``stall_seconds``, ``compute_seconds``)
+    that joins ``meta["stream"]``.
     """
     chunks = splan.chunks()
     buffers = [np.zeros(splan.chunk_shape, np.uint8)
@@ -115,18 +120,31 @@ def _run_chunks(sh, splan: StreamPlan, jfn, accs, stat_acc):
     def fill(idx, buf):
         fill_chunk(buf, chunks[idx], shard_of, splan.n_v_data)
 
+    compute_s = 0.0
     with ShardPrefetcher(fill, len(chunks), buffers) as pf:
         for _idx, buf in pf:
-            outs = jfn(jnp.asarray(buf))
-            # np.asarray blocks until the chunk program is done (GIL
-            # released inside XLA — the prefetch thread fills the next
-            # buffer meanwhile); only then is the staging buffer reusable
-            for acc, out in zip(accs, outs[:-1]):
-                np.add(acc, np.asarray(out).reshape(acc.shape), out=acc)
-            np.add(stat_acc, np.asarray(outs[-1]).reshape(stat_acc.shape),
-                   out=stat_acc)
+            t0 = time.perf_counter()
+            with obs.span("ring-step") as sp:
+                outs = jfn(jnp.asarray(buf))
+                # np.asarray blocks until the chunk program is done (GIL
+                # released inside XLA — the prefetch thread fills the next
+                # buffer meanwhile); only then is the staging buffer reusable
+                for acc, out in zip(accs, outs[:-1]):
+                    np.add(acc, np.asarray(out).reshape(acc.shape), out=acc)
+                np.add(stat_acc, np.asarray(outs[-1]).reshape(stat_acc.shape),
+                       out=stat_acc)
+                sp.add(chunk=_idx, chunk_bytes=int(buf.nbytes))
+            compute_s += time.perf_counter() - t0
             pf.release(buf)
-    return sum(b.nbytes for b in buffers)
+        overlap = {
+            "stage_seconds": pf.stage_seconds,
+            "stall_seconds": pf.stall_seconds,
+            "compute_seconds": compute_s,
+        }
+    if obs.enabled():
+        obs.roofline_event(jfn, (jnp.asarray(buffers[0]),), n_devices,
+                           repeats=len(chunks))
+    return sum(b.nbytes for b in buffers), overlap
 
 
 def _merge_twoway_blocks(cfg, plan, executor, acc, stats) -> np.ndarray:
@@ -183,17 +201,22 @@ def stream_twoway(
         (cfg.n_pv, cfg.n_pr, plan.slots_per_rank, n_vp, n_vp), np.float32
     )
     stats = np.zeros((cfg.n_pv, n_vp), np.float32)
-    staged = _run_chunks(sh, splan, jfn, [acc], stats)
+    staged, overlap = _run_chunks(
+        sh, splan, jfn, [acc], stats, n_devices=int(mesh.devices.size)
+    )
 
     # -- cross-shard merge epilogue: assemble once from complete partials --
     executor = TileExecutor(
         cfg=cfg, metric=metric, out_dtype=jnp.dtype(cfg.out_dtype),
         axis=None, deferred=True,
     )
-    blocks = _merge_twoway_blocks(cfg, plan, executor, acc, stats)
+    with obs.span("merge") as sp:
+        blocks = _merge_twoway_blocks(cfg, plan, executor, acc, stats)
+        sp.add(blocks=int(blocks.size))
     out = TwoWayOutput(blocks=blocks, plan=plan, n_v=n_v, n_vp=n_vp)
     info = _stream_info(splan, cfg, sh.n_shards)
     info["staged_bytes"] = staged
+    info.update(overlap)
     return out, info
 
 
@@ -292,19 +315,24 @@ def stream_threeway(
         np.zeros(shape + (n_vp, n_vp), np.float32),
     ]
     stats = np.zeros((cfg.n_pv, n_vp), np.float32)
-    staged = _run_chunks(sh, splan, jfn, accs, stats)
+    staged, overlap = _run_chunks(
+        sh, splan, jfn, accs, stats, n_devices=int(mesh.devices.size)
+    )
 
     # -- cross-shard merge epilogue (mask logic mirrors entries()) ---------
     executor = TileExecutor(cfg=cfg, metric=metric, out_dtype=out_dtype,
                             axis=None, deferred=True)
-    blocks = _merge_threeway_blocks(
-        cfg, plan, stage, executor, metric.needs_pair_terms, accs, stats,
-        L, n_vp,
-    )
+    with obs.span("merge") as sp:
+        blocks = _merge_threeway_blocks(
+            cfg, plan, stage, executor, metric.needs_pair_terms, accs, stats,
+            L, n_vp,
+        )
+        sp.add(blocks=int(blocks.size))
     out = ThreeWayOutput(blocks=blocks, plan=plan, n_v=n_v, n_vp=n_vp,
                          stage=stage)
     info = _stream_info(splan, cfg, sh.n_shards)
     info["staged_bytes"] = staged
+    info.update(overlap)
     return out, info
 
 
@@ -387,28 +415,47 @@ def stream_twoway_delta(
             ob[:, used:, :] = 0
             nb[:, used:, :] = 0
 
+    compute_s = 0.0
     with ShardPrefetcher(fill, len(chunks), buffers) as pf:
         for _idx, bufs in pf:
-            outs = jfn(jnp.asarray(bufs[0]), jnp.asarray(bufs[1]))
-            np.add(rect_acc, np.asarray(outs[0]).reshape(rect_acc.shape),
-                   out=rect_acc)
-            np.add(tri_acc, np.asarray(outs[1])[0], out=tri_acc)
-            np.add(so_acc, np.asarray(outs[2]).reshape(so_acc.shape),
-                   out=so_acc)
-            np.add(sn_acc, np.asarray(outs[3])[0], out=sn_acc)
+            t0 = time.perf_counter()
+            with obs.span("delta-border") as sp:
+                outs = jfn(jnp.asarray(bufs[0]), jnp.asarray(bufs[1]))
+                np.add(rect_acc, np.asarray(outs[0]).reshape(rect_acc.shape),
+                       out=rect_acc)
+                np.add(tri_acc, np.asarray(outs[1])[0], out=tri_acc)
+                np.add(so_acc, np.asarray(outs[2]).reshape(so_acc.shape),
+                       out=so_acc)
+                np.add(sn_acc, np.asarray(outs[3])[0], out=sn_acc)
+                sp.add(chunk=_idx,
+                       chunk_bytes=sum(int(b.nbytes) for b in bufs))
+            compute_s += time.perf_counter() - t0
             pf.release(bufs)
+        overlap = {
+            "stage_seconds": pf.stage_seconds,
+            "stall_seconds": pf.stall_seconds,
+            "compute_seconds": compute_s,
+        }
     staged = sum(b.nbytes for bufs in buffers for b in bufs)
+    if obs.enabled():
+        obs.roofline_event(
+            jfn, (jnp.asarray(buffers[0][0]), jnp.asarray(buffers[0][1])),
+            int(mesh.devices.size), repeats=len(chunks),
+        )
 
     executor = TileExecutor(
         cfg=cfg, metric=metric, out_dtype=jnp.dtype(cfg.out_dtype),
         axis=None, deferred=True,
     )
-    rect = np.asarray(executor.merge_pair(rect_acc, so_acc, sn_acc))
-    tri = np.asarray(
-        executor.merge_pair(tri_acc, sn_acc, sn_acc, diagonal=True)
-    )
+    with obs.span("merge") as sp:
+        rect = np.asarray(executor.merge_pair(rect_acc, so_acc, sn_acc))
+        tri = np.asarray(
+            executor.merge_pair(tri_acc, sn_acc, sn_acc, diagonal=True)
+        )
+        sp.add(entries=int(rect.size + tri.size))
     sinfo = _stream_info(splan, cfg, sh.n_shards)
     sinfo["staged_bytes"] = staged
+    sinfo.update(overlap)
     dinfo = delta_accounting(
         cfg, n_old=n_old, n_new=m, n_op=n_op,
         payload_bytes=splan.chunk_nbytes * splan.n_chunks, streamed=True,
@@ -456,23 +503,28 @@ def stream_twoway_batched(dataset, mesh, cfg: CometConfig, specs) -> tuple:
         (cfg.n_pv, cfg.n_pr, G, plan.slots_per_rank, n_vp, n_vp), np.float32
     )
     stats = np.zeros((cfg.n_pv, G, n_vp), np.float32)
-    staged = _run_chunks(sh, splan, jfn, [acc], stats)
+    staged, overlap = _run_chunks(
+        sh, splan, jfn, [acc], stats, n_devices=int(mesh.devices.size)
+    )
 
     by_name = {}
-    for s in flat:
-        g = gidx[s.name]
-        executor = TileExecutor(
-            cfg=cfg, metric=s, out_dtype=jnp.dtype(cfg.out_dtype),
-            axis=None, deferred=True,
-        )
-        blocks = _merge_twoway_blocks(
-            cfg, plan, executor, acc[:, :, g], stats[:, g]
-        )
-        by_name[s.name] = TwoWayOutput(
-            blocks=blocks, plan=plan, n_v=n_v, n_vp=n_vp
-        )
+    with obs.span("merge") as sp:
+        for s in flat:
+            g = gidx[s.name]
+            executor = TileExecutor(
+                cfg=cfg, metric=s, out_dtype=jnp.dtype(cfg.out_dtype),
+                axis=None, deferred=True,
+            )
+            blocks = _merge_twoway_blocks(
+                cfg, plan, executor, acc[:, :, g], stats[:, g]
+            )
+            by_name[s.name] = TwoWayOutput(
+                blocks=blocks, plan=plan, n_v=n_v, n_vp=n_vp
+            )
+        sp.add(metrics=len(flat))
     info = _stream_info(splan, cfg, sh.n_shards)
     info["staged_bytes"] = staged
+    info.update(overlap)
     binfo = batch_accounting(
         splan.chunk_nbytes * splan.n_chunks, cfg, plan, groups, n_vp,
         planes=True, way=2,
@@ -531,22 +583,27 @@ def stream_threeway_batched(
         np.zeros(shape + (n_vp, n_vp), np.float32),
     ]
     stats = np.zeros((cfg.n_pv, G, n_vp), np.float32)
-    staged = _run_chunks(sh, splan, jfn, accs, stats)
+    staged, overlap = _run_chunks(
+        sh, splan, jfn, accs, stats, n_devices=int(mesh.devices.size)
+    )
 
     by_name = {}
-    for s in flat:
-        g = gidx[s.name]
-        executor = TileExecutor(cfg=cfg, metric=s, out_dtype=out_dtype,
-                                axis=None, deferred=True)
-        blocks = _merge_threeway_blocks(
-            cfg, plan, stage, executor, s.needs_pair_terms,
-            [a[:, :, :, g] for a in accs], stats[:, g], L, n_vp,
-        )
-        by_name[s.name] = ThreeWayOutput(
-            blocks=blocks, plan=plan, n_v=n_v, n_vp=n_vp, stage=stage
-        )
+    with obs.span("merge") as sp:
+        for s in flat:
+            g = gidx[s.name]
+            executor = TileExecutor(cfg=cfg, metric=s, out_dtype=out_dtype,
+                                    axis=None, deferred=True)
+            blocks = _merge_threeway_blocks(
+                cfg, plan, stage, executor, s.needs_pair_terms,
+                [a[:, :, :, g] for a in accs], stats[:, g], L, n_vp,
+            )
+            by_name[s.name] = ThreeWayOutput(
+                blocks=blocks, plan=plan, n_v=n_v, n_vp=n_vp, stage=stage
+            )
+        sp.add(metrics=len(flat))
     info = _stream_info(splan, cfg, sh.n_shards)
     info["staged_bytes"] = staged
+    info.update(overlap)
     binfo = batch_accounting(
         splan.chunk_nbytes * splan.n_chunks, cfg, plan, groups, n_vp,
         planes=True, way=3,

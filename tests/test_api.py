@@ -250,7 +250,10 @@ def test_similarity_service_routes_through_engine(V):
     r1 = svc.submit(req, V)
     r2 = svc.submit(req, V)  # identical request+input -> cache hit
     assert r2 is r1
-    assert svc.stats() == {"hits": 1, "misses": 1, "cached_results": 1}
+    assert svc.stats() == {
+        "hits": 1, "misses": 1, "cached_results": 1, "delta_hits": 0,
+        "in_flight": 0, "submitted": 2, "warmups": 0, "errors": 0,
+    }
     direct = czek2_distributed(V, make_comet_mesh(1, 1, 1), CometConfig())
     assert r1.checksum() == direct.checksum()
     # different input -> distinct result

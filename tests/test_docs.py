@@ -204,3 +204,123 @@ def test_architecture_path_matrix_matches_executor():
     ex = TileExecutor(cfg=CometConfig(impl="levels_xla", levels=1,
                                       encoding="bitplane"))
     assert ex.path == "unfused" and ex.path3 == "unfused"
+
+
+# -- the result meta schema gate ---------------------------------------------
+
+
+def _parse_meta_schema():
+    """Parse the "## Result `meta` schema" bullets into
+    ``{block: (required, optional)}`` key sets."""
+    with open(os.path.join(REPO, "docs", "ARCHITECTURE.md")) as f:
+        arch = f.read()
+    assert "## Result `meta` schema" in arch, \
+        "ARCHITECTURE.md lost the meta schema section"
+    sec = arch.split("## Result `meta` schema", 1)[1].split("\n## ", 1)[0]
+    blocks = {}
+    for m in re.finditer(
+        r"- `(\w+)` \([^)]*\): required\s+([^;.]*)(?:;\s*optional\s+([^.]*))?\.",
+        sec, flags=re.S,
+    ):
+        name, req, opt = m.group(1), m.group(2), m.group(3) or ""
+        blocks[name] = (set(re.findall(r"`(\w+)`", req)),
+                        set(re.findall(r"`(\w+)`", opt)))
+    return blocks
+
+
+def _assert_meta_documented(meta, blocks, where):
+    undocumented = set(meta) - set(blocks)
+    assert not undocumented, f"{where}: undocumented meta blocks {undocumented}"
+    for key, block in meta.items():
+        required, optional = blocks[key]
+        got = set(block)
+        missing = required - got
+        assert not missing, f"{where}: meta[{key!r}] missing required {missing}"
+        extra = got - required - optional
+        assert not extra, f"{where}: meta[{key!r}] emits undocumented {extra}"
+
+
+def test_meta_schema_matches_emitted(tmp_path):
+    """The documented schema IS what real campaigns emit: every block a
+    campaign attaches is documented, required keys are always present,
+    and no campaign emits a key the docs don't list — checked across the
+    in-memory, streamed, delta, batched, and traced forms."""
+    from repro.api import InputSpec, SimilarityEngine, SimilarityRequest
+    from repro.core.synthetic import random_integer_vectors
+    from repro.obs import trace
+    from repro.store import append_dataset, write_dataset
+
+    blocks = _parse_meta_schema()
+    assert set(blocks) == {"obs", "dataset", "stream", "delta", "batch"}
+
+    engine = SimilarityEngine()
+    V = random_integer_vectors(32, 10, max_value=2, seed=1)
+    path = os.path.join(str(tmp_path), "ds")
+    write_dataset(path, V, levels=2, n_shards=2)
+    sreq = SimilarityRequest(
+        way=2, metric="czekanowski", impl="levels", levels=2,
+        streaming="on", max_host_bytes=400,
+        input=InputSpec(source="planes", path=path),
+    )
+
+    plain = engine.run(SimilarityRequest(way=2, metric="czekanowski"), V)
+    assert set(plain.meta) == {"obs"}
+    _assert_meta_documented(plain.meta, blocks, "in-memory")
+
+    streamed = engine.run(sreq)
+    assert {"obs", "dataset", "stream"} <= set(streamed.meta)
+    _assert_meta_documented(streamed.meta, blocks, "streamed")
+
+    append_dataset(path, random_integer_vectors(32, 4, max_value=2, seed=2))
+    delta = engine.run_delta(sreq, streamed)
+    assert "delta" in delta.meta
+    _assert_meta_documented(delta.meta, blocks, "delta")
+
+    trace.enable()
+    try:
+        batched = engine.run(SimilarityRequest(
+            way=2, metric="czekanowski", metrics=("sorenson",),
+            impl="levels", levels=2, encoding="bitplane"), V)
+    finally:
+        trace.disable()
+    assert "batch" in batched.meta
+    # the traced run exercises the OPTIONAL obs keys (phases, bound, ...)
+    assert "phases" in batched.meta["obs"]
+    _assert_meta_documented(batched.meta, blocks, "batched+traced")
+    for mname, sname, res in batched.campaigns:
+        _assert_meta_documented(res.meta, blocks, f"campaign {mname}/{sname}")
+
+
+def test_observability_docs_name_real_code():
+    """docs/OBSERVABILITY.md exists, is linked from README, and the API +
+    CLI flags it documents are real."""
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import trace as obs_trace
+
+    for name in ("enable", "disable", "enabled", "span", "fence",
+                 "roofline_event", "format_phase_table",
+                 "validate_chrome_trace", "CANONICAL_PHASES", "Tracer"):
+        assert hasattr(obs_trace, name), name
+    for name in ("Counter", "Gauge", "Histogram", "MetricsRegistry",
+                 "default_registry"):
+        assert hasattr(obs_metrics, name), name
+    from repro.serve.engine import SimilarityService
+    for attr in ("stats", "metrics"):
+        assert hasattr(SimilarityService, attr), attr
+
+    with open(os.path.join(REPO, "README.md")) as f:
+        readme = f.read()
+    assert "docs/OBSERVABILITY.md" in readme, "README does not link the doc"
+    assert "--trace" in readme
+    with open(os.path.join(REPO, "docs", "OBSERVABILITY.md")) as f:
+        doc = f.read()
+    for name in ("--trace", "--metrics-json", "prefetch-stage", "ring-step",
+                 "validate_chrome_trace", "bound_seconds", "utilization",
+                 "stall_seconds", "MetricsRegistry"):
+        assert name in doc, f"OBSERVABILITY.md lost its {name!r} mention"
+    # the CLI flags the doc quotes exist in the launchers' parsers
+    with open(os.path.join(REPO, "src", "repro", "launch",
+                           "similarity.py")) as f:
+        assert "--trace" in f.read()
+    with open(os.path.join(REPO, "src", "repro", "launch", "serve.py")) as f:
+        assert "--metrics-json" in f.read()

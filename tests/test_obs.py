@@ -1,0 +1,354 @@
+"""repro.obs: the tracing/metrics contract.
+
+Pins the observability design constraints (docs/OBSERVABILITY.md):
+
+* **Disabled is free** — ``span()`` returns ONE shared no-op singleton
+  (no allocation), ``fence`` passes values through untouched, and a
+  traced-then-untraced campaign is checksum **bit-identical** on both
+  the streamed and the delta paths;
+* spans nest through the contextvar stack and cross threads via
+  ``copy_context`` — a ``ShardPrefetcher`` staging span and a
+  ``SimilarityService`` worker span both record the submitting
+  context's campaign span as their ``parent``;
+* histogram percentiles are exact nearest-rank over the bounded window;
+* every exported trace is valid Chrome trace-event JSON — property-
+  tested over random span trees and cross-checked by the rejection
+  cases ``validate_chrome_trace`` must catch;
+* ``format_phase_table`` prints every canonical phase row even at count
+  0 (the zero-encode proof for dataset campaigns is a ROW, not an
+  absence), so CI can grep unconditionally.
+"""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+try:  # property tests run under hypothesis when present (CI installs it);
+    # a seeded deterministic sweep covers the same generator otherwise
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+from repro.api import InputSpec, SimilarityEngine, SimilarityRequest
+from repro.core.synthetic import random_integer_vectors
+from repro.obs import trace
+from repro.obs.metrics import Histogram, MetricsRegistry
+from repro.stream.prefetch import ShardPrefetcher
+from repro.store import append_dataset, write_dataset
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_tracer():
+    """Every test leaves the process untraced (disabled is the default)."""
+    trace.disable()
+    yield
+    trace.disable()
+
+
+# -- disabled mode: zero overhead --------------------------------------------
+
+
+def test_disabled_span_is_shared_singleton():
+    assert not trace.enabled()
+    assert trace.get_tracer() is None
+    s1, s2 = trace.span("a"), trace.span("b", {"k": 1})
+    assert s1 is s2  # one process-wide null object, no allocation
+    with s1 as sp:
+        assert sp.add(bytes=10) is sp  # no-ops, chainable
+
+
+def test_disabled_fence_is_identity():
+    x = object()
+    assert trace.fence(x) is x
+
+
+def test_disabled_roofline_is_noop():
+    trace.roofline_event(None, (), 1)  # would raise if it touched jitted
+
+
+# -- enabled: nesting, attrs, aggregation ------------------------------------
+
+
+def test_span_nesting_records_parent_path():
+    t = trace.enable()
+    with trace.span("campaign"):
+        assert trace.current_path() == ("campaign",)
+        with trace.span("ring-step") as sp:
+            sp.add(steps=3)
+    trace.disable()
+    evs = t.events()
+    kinds = [(ph, name) for ph, name, *_ in evs]
+    assert kinds == [("B", "campaign"), ("B", "ring-step"),
+                     ("E", "ring-step"), ("E", "campaign")]
+    b_inner = evs[1]
+    assert b_inner[4] == {"parent": "campaign"}
+    e_inner = evs[2]
+    assert e_inner[4] == {"steps": 3}
+    agg = t.phase_stats()
+    assert agg["ring-step"]["count"] == 1
+    assert 0.0 <= agg["ring-step"]["seconds"] <= agg["campaign"]["seconds"]
+
+
+def test_complete_virtual_lane_keeps_nesting_wellformed():
+    """An externally measured interval overlapping the thread's own spans
+    goes on a virtual tid lane — the exported trace still validates."""
+    t = trace.enable()
+    with trace.span("serve-compute"):
+        now = t._clock()
+        t.complete("serve-queue-wait", now - 5_000_000, now,
+                   {"wait_seconds": 0.005}, tid=0)
+    trace.disable()
+    assert trace.validate_chrome_trace(t.chrome_trace()) == 4
+    waits = [e for e in t.events() if e[1] == "serve-queue-wait"]
+    assert {e[3] for e in waits} == {0}
+
+
+def test_prefetcher_spans_nest_under_campaign_across_threads():
+    t = trace.enable()
+    buffers = [np.zeros(4, np.uint8) for _ in range(2)]
+    seen_tids = set()
+
+    def fill(idx, buf):
+        buf[:] = idx
+        seen_tids.add(threading.get_ident())
+
+    with trace.span("campaign"):
+        # prefetcher constructed INSIDE the span: copy_context carries it
+        with ShardPrefetcher(fill, 3, buffers) as pf:
+            for idx, buf in pf:
+                assert buf[0] == idx
+                pf.release(buf)
+    trace.disable()
+    assert seen_tids and threading.get_ident() not in seen_tids
+    stages = [e for e in t.events() if e[0] == "B" and e[1] == "prefetch-stage"]
+    assert len(stages) == 3
+    assert all(e[4] == {"parent": "campaign"} for e in stages)
+    assert trace.validate_chrome_trace(t.chrome_trace()) == t.event_count()
+
+
+def test_service_worker_spans_carry_submitter_context():
+    from repro.serve.engine import SimilarityService
+
+    V = random_integer_vectors(24, 10, max_value=2, seed=0)
+    t = trace.enable()
+    with trace.span("client"):
+        with SimilarityService() as svc:
+            svc.submit(SimilarityRequest(way=2, metric="czekanowski"), V)
+    trace.disable()
+    names = {e[1] for e in t.events()}
+    assert {"serve-queue-wait", "serve-compute", "campaign"} <= names
+    b_compute = next(e for e in t.events()
+                     if e[0] == "B" and e[1] == "serve-compute")
+    assert b_compute[4] == {"parent": "client"}
+    assert trace.validate_chrome_trace(t.chrome_trace()) == t.event_count()
+
+
+# -- metrics registry ---------------------------------------------------------
+
+
+def test_histogram_nearest_rank_percentiles():
+    h = Histogram(threading.RLock())
+    for v in range(1, 101):
+        h.observe(float(v))
+    assert h.percentile(50) == 50.0
+    assert h.percentile(90) == 90.0
+    assert h.percentile(99) == 99.0
+    assert h.percentile(100) == 100.0
+    snap = h.snapshot()
+    assert snap["count"] == 100 and snap["mean"] == 50.5
+    assert snap["p50"] == 50.0 and snap["max"] == 100.0
+
+
+def test_histogram_empty_and_bounded_window():
+    h = Histogram(threading.RLock(), max_samples=4)
+    assert h.percentile(50) == 0.0 and h.snapshot()["p99"] == 0.0
+    for v in (1.0, 2.0, 3.0, 4.0, 5.0, 6.0):
+        h.observe(v)
+    # count/sum see everything; the window retains the most recent 4
+    assert h.count == 6 and h.sum == 21.0
+    assert h.percentile(100) == 6.0 and h.percentile(1) == 3.0
+
+
+def test_registry_single_lock_and_type_guard():
+    reg = MetricsRegistry()
+    c = reg.counter("hits")
+    assert reg.counter("hits") is c
+    with pytest.raises(TypeError, match="Counter"):
+        reg.gauge("hits")
+    with reg.locked():
+        c.inc()  # RLock: metric ops re-enter under the held registry lock
+        reg.gauge("depth").inc(2)
+    assert reg.snapshot() == {"hits": 1, "depth": 2.0}
+
+
+# -- Chrome trace format: property test + rejection cases ---------------------
+
+_SPAN_NAMES = ("encode", "ring-step", "merge", "x")
+
+
+def _emit(node):
+    if isinstance(node, str):
+        with trace.span(node):
+            pass
+    else:
+        name, kids = node
+        with trace.span(name):
+            for k in kids:
+                _emit(k)
+
+
+def _random_tree(rng, depth=0):
+    name = _SPAN_NAMES[rng.integers(len(_SPAN_NAMES))]
+    if depth >= 3 or rng.random() < 0.4:
+        return name
+    return (name, [_random_tree(rng, depth + 1)
+                   for _ in range(rng.integers(0, 4))])
+
+
+def _check_forest(forest):
+    t = trace.enable()
+    for node in forest:
+        _emit(node)
+    ts = t._clock()
+    t.complete("roofline", ts, ts, {"bound_seconds": 0.0})
+    trace.disable()
+    payload = t.chrome_trace()
+    assert trace.validate_chrome_trace(payload) == t.event_count()
+    assert all(ev["ts"] >= 0.0 for ev in payload["traceEvents"])
+
+
+if HAVE_HYPOTHESIS:
+    _NAMES = st.sampled_from(_SPAN_NAMES)
+    _TREES = st.recursive(
+        _NAMES, lambda kids: st.tuples(_NAMES, st.lists(kids, max_size=3)),
+        max_leaves=12,
+    )
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.lists(_TREES, max_size=4))
+    def test_random_span_trees_export_valid_chrome_traces(forest):
+        _check_forest(forest)
+else:
+    def test_random_span_trees_export_valid_chrome_traces():
+        for seed in range(40):
+            rng = np.random.default_rng(seed)
+            _check_forest([_random_tree(rng)
+                           for _ in range(rng.integers(0, 5))])
+
+
+def test_validator_rejections():
+    pid, tid = 1, 1
+
+    def ev(ph, name, ts):
+        return {"name": name, "ph": ph, "ts": ts, "pid": pid, "tid": tid}
+
+    with pytest.raises(ValueError, match="traceEvents"):
+        trace.validate_chrome_trace(["not", "a", "dict"])
+    with pytest.raises(ValueError, match="missing field 'tid'"):
+        trace.validate_chrome_trace(
+            {"traceEvents": [{"name": "a", "ph": "B", "ts": 0, "pid": 1}]}
+        )
+    with pytest.raises(ValueError, match="monotonic"):
+        trace.validate_chrome_trace(
+            {"traceEvents": [ev("B", "a", 5.0), ev("E", "a", 1.0)]}
+        )
+    with pytest.raises(ValueError, match="does not match"):
+        trace.validate_chrome_trace(
+            {"traceEvents": [ev("B", "a", 0.0), ev("E", "b", 1.0)]}
+        )
+    with pytest.raises(ValueError, match="unclosed"):
+        trace.validate_chrome_trace({"traceEvents": [ev("B", "a", 0.0)]})
+    with pytest.raises(ValueError, match="not 'B'/'E'"):
+        trace.validate_chrome_trace({"traceEvents": [ev("X", "a", 0.0)]})
+    assert trace.validate_chrome_trace({"traceEvents": []}) == 0
+
+
+# -- phase table --------------------------------------------------------------
+
+
+def test_phase_table_always_prints_canonical_rows():
+    table = trace.format_phase_table({})
+    lines = table.splitlines()
+    assert lines[0].split() == ["phase", "count", "seconds", "share"]
+    for name in trace.CANONICAL_PHASES:
+        assert any(ln.startswith(name + " ") for ln in lines[1:]), name
+    # recorded extras appear; roofline never does
+    table = trace.format_phase_table({
+        "roofline": {"count": 2, "seconds": 0.0},
+        "campaign": {"count": 1, "seconds": 2.0},
+        "ring-step": {"count": 4, "seconds": 1.0},
+    })
+    assert "campaign" in table and "roofline" not in table
+    row = next(ln for ln in table.splitlines() if ln.startswith("ring-step"))
+    assert row.split() == ["ring-step", "4", "1.000000", "33.3%"]
+
+
+# -- bit-identity: tracing must not change results ----------------------------
+
+
+def _streamed_request(path):
+    return SimilarityRequest(
+        way=2, metric="czekanowski", impl="levels", levels=2,
+        streaming="on", max_host_bytes=400,
+        input=InputSpec(source="planes", path=path),
+    )
+
+
+def test_traced_streamed_campaign_is_bit_identical(tmp_path):
+    path = os.path.join(str(tmp_path), "ds")
+    write_dataset(path, random_integer_vectors(64, 20, max_value=2, seed=7),
+                  levels=2, n_shards=2)
+    engine = SimilarityEngine()
+    plain = engine.run(_streamed_request(path))
+
+    t = trace.enable()
+    traced = engine.run(_streamed_request(path))
+    trace.disable()
+
+    assert traced.checksum() == plain.checksum()
+    # untraced results still carry the normalized obs block...
+    obs_plain = plain.meta["obs"]
+    assert obs_plain["comparisons"] > 0 and "phases" not in obs_plain
+    # ...and always-on overlap accounting
+    assert plain.meta["stream"]["stall_seconds"] >= 0.0
+    assert plain.meta["stream"]["compute_seconds"] > 0.0
+    # traced run: per-phase breakdown + roofline-bound utilization
+    obs_traced = traced.meta["obs"]
+    phases = obs_traced["phases"]
+    assert phases["ring-step"]["count"] == plain.meta["stream"]["chunks"]
+    assert phases["prefetch-stage"]["count"] == phases["ring-step"]["count"]
+    assert phases["merge"]["count"] == 1 and "encode" not in phases
+    assert obs_traced["bound_seconds"] > 0.0
+    assert obs_traced["utilization"] > 0.0
+    assert trace.validate_chrome_trace(t.chrome_trace()) == t.event_count()
+
+
+def test_traced_delta_campaign_is_bit_identical(tmp_path):
+    path = os.path.join(str(tmp_path), "ds")
+    V0 = random_integer_vectors(32, 12, max_value=2, seed=8)
+    Vn = random_integer_vectors(32, 5, max_value=2, seed=9)
+    write_dataset(path, V0, levels=2, n_shards=1)
+    base = dict(way=2, metric="czekanowski", impl="levels", levels=2)
+    engine = SimilarityEngine()
+    req = SimilarityRequest(**base, input=InputSpec(source="planes",
+                                                    path=path))
+    prior = engine.run(req)
+    append_dataset(path, Vn)
+
+    plain = engine.run_delta(req, prior)
+
+    t = trace.enable()
+    traced = engine.run_delta(req, prior)
+    trace.disable()
+
+    assert traced.checksum() == plain.checksum()
+    phases = traced.meta["obs"]["phases"]
+    assert phases["delta-border"]["count"] == 1
+    assert phases["merge"]["count"] == 1
+    assert "ring-step" not in phases  # delta campaigns have no ring
+    # border-proportional comparisons, not N^2
+    d = traced.meta["delta"]
+    assert traced.meta["obs"]["comparisons"] == d["computed_entries"] * 32
+    assert trace.validate_chrome_trace(t.chrome_trace()) == t.event_count()

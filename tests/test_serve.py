@@ -56,7 +56,9 @@ def test_duplicate_submits_share_one_compute():
 
 def test_threaded_mixed_requests_all_resolve():
     """N client threads, mixed duplicate/unique requests: every future
-    resolves, each unique fingerprint computes exactly once."""
+    resolves, each unique fingerprint computes exactly once — and every
+    concurrent ``stats()``/``metrics()`` snapshot is internally
+    consistent (hits + misses + in_flight == submitted)."""
     V = _matrix()
     uniques = [
         SimilarityRequest(way=2, metric="czekanowski", chunk=c)
@@ -64,6 +66,15 @@ def test_threaded_mixed_requests_all_resolve():
     ]
     with SimilarityService(workers=3) as svc:
         futures, lock = [], threading.Lock()
+        stop, bad_snaps = threading.Event(), []
+
+        def sampler():
+            # hammer snapshots while submissions and completions race
+            while not stop.is_set():
+                for snap in (svc.stats(), svc.metrics()):
+                    total = snap["hits"] + snap["misses"] + snap["in_flight"]
+                    if total != snap["submitted"]:
+                        bad_snaps.append(snap)
 
         def client(i):
             req = uniques[i % len(uniques)]
@@ -71,6 +82,8 @@ def test_threaded_mixed_requests_all_resolve():
             with lock:
                 futures.append((i % len(uniques), f))
 
+        sampling = threading.Thread(target=sampler)
+        sampling.start()
         threads = [threading.Thread(target=client, args=(i,))
                    for i in range(16)]
         for t in threads:
@@ -80,11 +93,19 @@ def test_threaded_mixed_requests_all_resolve():
         by_req = {}
         for k, f in futures:
             by_req.setdefault(k, set()).add(id(f.result(timeout=60)))
+        stop.set()
+        sampling.join()
+        assert not bad_snaps, bad_snaps[:3]
         # each unique request resolved, to exactly one result object
         assert len(by_req) == len(uniques)
         assert all(len(ids) == 1 for ids in by_req.values())
         assert svc.misses == len(uniques)
         assert svc.hits == 16 - len(uniques)
+        # the latency split saw every computed campaign
+        m = svc.metrics()
+        assert m["queue_wait_seconds"]["count"] == len(uniques)
+        assert m["compute_seconds"]["count"] == len(uniques)
+        assert m["queue_depth"] == 0 and m["in_flight"] == 0
         # chunking is a perf knob: all four computed the same answer
         cks = {f.result().checksum() for _, f in futures}
         assert len(cks) == 1
@@ -92,7 +113,7 @@ def test_threaded_mixed_requests_all_resolve():
 
 def test_sync_submit_compat():
     """The blocking façade: second submit returns the SAME object and the
-    stats dict keeps its exact legacy shape."""
+    stats dict keeps its exact (registry-backed) shape."""
     V = _matrix()
     svc = SimilarityService()
     try:
@@ -100,7 +121,10 @@ def test_sync_submit_compat():
         r1 = svc.submit(req, V)
         r2 = svc.submit(req, V)
         assert r2 is r1
-        assert svc.stats() == {"hits": 1, "misses": 1, "cached_results": 1}
+        assert svc.stats() == {
+            "hits": 1, "misses": 1, "cached_results": 1, "delta_hits": 0,
+            "in_flight": 0, "submitted": 2, "warmups": 0, "errors": 0,
+        }
     finally:
         svc.shutdown()
 
@@ -246,8 +270,14 @@ def test_warmup_compiles_without_caching(tmp_path):
     with SimilarityService() as svc:
         dt = svc.warmup(req)
         assert dt >= 0 and svc.warmups == 1
-        assert svc.stats() == {"hits": 0, "misses": 0, "cached_results": 0}
+        assert svc.stats() == {
+            "hits": 0, "misses": 0, "cached_results": 0, "delta_hits": 0,
+            "in_flight": 0, "submitted": 0, "warmups": 1, "errors": 0,
+        }
         # the real submission still computes the real answer
         r = svc.submit(req)
-        assert svc.stats() == {"hits": 0, "misses": 1, "cached_results": 1}
+        assert svc.stats() == {
+            "hits": 0, "misses": 1, "cached_results": 1, "delta_hits": 0,
+            "in_flight": 0, "submitted": 1, "warmups": 1, "errors": 0,
+        }
         assert r.n_v == 10
